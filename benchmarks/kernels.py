@@ -1,0 +1,78 @@
+"""Kernel benchmarks: wall-time of the jitted jnp references (the CPU
+executable path) plus TPU roofline-derived expected times for the Pallas
+kernels (interpret mode has no meaningful timing, so the TPU column is
+bytes/bandwidth + flops/peak arithmetic on the kernel's actual traffic).
+
+CSV columns: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.hybrid_aggregate import TILE_P
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flush():
+    rows = []
+    for K in (4, 25):
+        P = TILE_P * 16
+        g = jax.random.normal(jax.random.PRNGKey(0), (K, P), jnp.float32)
+        w = jnp.full((K,), 1.0 / K)
+        us = _time(jax.jit(ref.flush_ref), g, w)
+        bytes_moved = (K + 1) * P * 4
+        tpu_us = bytes_moved / HBM_BW * 1e6
+        rows.append((f"hybrid_flush_K{K}_P{P}", us,
+                     f"tpu_mem_bound={tpu_us:.1f}us"))
+    return rows
+
+
+def bench_rmsnorm():
+    rows = []
+    for shape in ((8192, 4096),):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+        s = jnp.ones((shape[-1],))
+        us = _time(jax.jit(lambda x, s: ref.rmsnorm_ref(x, s)), x, s)
+        bytes_moved = 2 * x.size * 4
+        rows.append((f"rmsnorm_{shape[0]}x{shape[1]}", us,
+                     f"tpu_mem_bound={bytes_moved / HBM_BW * 1e6:.1f}us"))
+    return rows
+
+
+def bench_attention():
+    rows = []
+    B, S, H, KV, d = 1, 2048, 8, 2, 128
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, d), jnp.float32)
+    us = _time(jax.jit(lambda q, k, v: ref.attention_ref(q, k, v)), q, k, v)
+    flops = 4 * B * H * S * S * d  # qk + pv
+    rows.append((f"flash_attention_B{B}_S{S}_H{H}", us,
+                 f"tpu_compute_bound={flops / PEAK_FLOPS_BF16 * 1e6:.1f}us"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for rows in (bench_flush(), bench_rmsnorm(), bench_attention()):
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md sections from experiments/dryrun artifacts:
+fills the <!-- ... --> placeholders (dry-run table, roofline table,
+hybrid-R pair, memory notes)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import roofline  # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+EXP = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRY, pattern))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def peak_gib(rec):
+    m = rec["memory"]
+    return (m["argument_bytes"] + m["temp_bytes"] + m["output_bytes"]
+            - m["alias_bytes"]) / 2 ** 30
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | status | params | peak GiB | "
+            "compile s | exec coll GiB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3, "pod": 0, "multipod": 1}
+    recs = [r for r in load("*.json") if r.get("tag", "") == ""]
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                             order.get(r["mesh"], 9)))
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skip: {r['reason']} | | | | |")
+        elif r["status"] == "ok":
+            coll = r["exec_collective_bytes_per_device"]["total"] / 2 ** 30
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{r['num_params'] / 1e9:.1f}B | {peak_gib(r):.1f} | "
+                f"{r['compile_s']} | {coll:.2f} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | | | | |")
+    return "\n".join(rows)
+
+
+def hybrid_table():
+    recs = [r for r in load("*hybrid_R*.json") if r["status"] == "ok"]
+    recs.sort(key=lambda r: (r["mesh"], r["hybrid_rep"]))
+    rows = ["| mesh | R (groups) | group size g | coll GiB/dev | "
+            "all-reduce GiB | peak GiB | Δcoll vs sync |",
+            "|---|---|---|---|---|---|---|"]
+    base = {}
+    for r in recs:
+        if r["hybrid_rep"] == 1:
+            base[r["mesh"]] = r["exec_collective_bytes_per_device"]["total"]
+    for r in recs:
+        c = r["exec_collective_bytes_per_device"]
+        data_total = 32 if r["mesh"] == "multipod" else 16
+        g = data_total // r["hybrid_rep"]
+        b = base.get(r["mesh"])
+        delta = f"{100 * (c['total'] / b - 1):+.1f}%" if b else ""
+        rows.append(
+            f"| {r['mesh']} | {r['hybrid_rep']} | {g} | "
+            f"{c['total'] / 2**30:.1f} | "
+            f"{c.get('all-reduce', 0) / 2**30:.1f} | {peak_gib(r):.1f} | "
+            f"{delta} |")
+    return "\n".join(rows)
+
+
+def mem_notes():
+    notes = []
+    for r in load("*.json"):
+        if r.get("tag"):
+            continue
+        if r["status"] == "ok" and r["mesh"] == "pod" \
+                and peak_gib(r) > 16.0:
+            notes.append(f"* **{r['arch']} × {r['shape']}**: "
+                         f"{peak_gib(r):.1f} GiB/dev")
+    return "\n".join(notes) if notes else "* all pod combos fit"
+
+
+def fill(md: str, marker: str, content: str) -> str:
+    return md.replace(f"<!-- {marker} -->", content)
+
+
+def main():
+    with open(EXP) as f:
+        md = f.read()
+    md = fill(md, "DRYRUN_TABLE", dryrun_table())
+    rows = roofline.load_all("pod")
+    md = fill(md, "ROOFLINE_TABLE", roofline.markdown_table(rows))
+    notes = "\n".join(
+        f"* `{r['arch']} × {r['shape']}` → **{r['dominant']}**-bound "
+        f"(lower bound {r['step_lower_bound_s']:.3g} s/step): {r['hint']}"
+        for r in rows)
+    md = fill(md, "ROOFLINE_NOTES",
+              "### Dominant bottleneck & lever per combo\n\n" + notes)
+    md = fill(md, "PAIR_C", hybrid_table())
+    md = fill(md, "MEM_NOTES", mem_notes())
+    with open(EXP, "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

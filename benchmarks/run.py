@@ -1,0 +1,56 @@
+"""Benchmark entry point: one section per paper table/figure plus the
+kernel microbenches and the roofline summary derived from the cached
+dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest grids (CI-sized)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (hours)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    print("#" * 70)
+    print("# Paper tables (Vora et al. 2024): hybrid vs async vs sync")
+    print("#" * 70)
+    from benchmarks import paper_tables
+    flags = []
+    if args.quick:
+        flags.append("--quick")
+    if args.full:
+        flags.append("--full")
+    paper_tables.main(["--table", "all"] + flags)
+
+    print()
+    print("#" * 70)
+    print("# Kernel microbenchmarks (jnp reference wall-time + TPU roofline)")
+    print("#" * 70)
+    from benchmarks import kernels
+    kernels.main()
+
+    print()
+    print("#" * 70)
+    print("# Roofline summary (from experiments/dryrun artifacts)")
+    print("#" * 70)
+    from benchmarks import roofline
+    rows = roofline.load_all("pod")
+    if rows:
+        print(roofline.markdown_table(rows))
+    else:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+
+    print(f"\ntotal benchmark time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-parameter xLSTM for a few hundred
+steps with the SPMD group-annealed hybrid schedule, against sync and
+async baselines (DESIGN.md §2.2 — the TPU-native Smooth Switch).
+
+Uses 4 forced host devices so the reduction-group annealing g: 1 -> 4 is
+real (4 replicas -> 2 -> 1 with merges between phases).
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/train_hybrid_spmd.py [--steps 200]
+
+(Defaults are sized for the CPU container: a reduced xLSTM of ~8M params;
+pass --full-100m on real hardware for the 100M-parameter variant.)
+"""
+import argparse
+import json
+
+import jax
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-100m", action="store_true")
+    args = ap.parse_args()
+
+    n_dev = jax.device_count()
+    print(f"devices: {n_dev}")
+    if n_dev == 1:
+        print("hint: run with XLA_FLAGS=--xla_force_host_platform_"
+              "device_count=4 to exercise real group annealing")
+
+    results = {}
+    for mode in ("hybrid", "async", "sync"):
+        print(f"\n=== mode={mode} ===")
+        _, history = train(
+            arch="xlstm-350m", steps=args.steps, mode=mode,
+            batch=args.batch, seq=args.seq, lr=1e-3,
+            schedule_kind="step", step_size=max(1, args.steps // n_dev),
+            smoke=not args.full_100m, log_every=20, seed=0)
+        results[mode] = history
+
+    print("\n=== final losses ===")
+    for mode, hist in results.items():
+        print(f"{mode:8s} loss={hist[-1]['loss']:.4f} "
+              f"(divergence at end: {hist[-1]['divergence']:.2e})")
+    with open("/tmp/train_hybrid_spmd.json", "w") as f:
+        json.dump(results, f, indent=2)
+    print("history saved to /tmp/train_hybrid_spmd.json")
+
+
+if __name__ == "__main__":
+    main()

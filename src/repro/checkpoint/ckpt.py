@@ -1,0 +1,80 @@
+"""Pytree checkpointing (npz-based, shard-agnostic).
+
+Leaves are gathered to host, flattened with '/'-joined key paths, and
+stored in a single .npz plus a metadata sidecar.  Restore rebuilds the
+exact pytree (dtypes included) and re-places leaves against target
+shardings when a mesh is provided.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # npz can't store ml_dtypes (bf16/f8): upcast; restore casts
+            # back to the template's dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, params, step: int,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    np.savez(path + ".npz", **flat)
+    meta = {"step": int(step), "extra": extra or {},
+            "keys": sorted(flat.keys())}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, like, shardings=None):
+    """Restore into the structure of `like` (a pytree template).
+
+    Returns (params, step)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    for (path_k, leaf), sh in zip(paths, shard_leaves):
+        key = "/".join(_path_str(p) for p in path_k)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        val = jnp.asarray(arr, dtype=leaf.dtype)
+        if sh is not None:
+            val = jax.device_put(val, sh)
+        leaves.append(val)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".json"):
+            steps.append(int(name[len("step_"):-len(".json")]))
+    return max(steps) if steps else None

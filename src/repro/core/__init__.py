@@ -1,0 +1,6 @@
+from repro.core.buffer import GradientBuffer, aggregate_flush  # noqa: F401
+from repro.core.schedule import (SCHEDULES, ThresholdSchedule,  # noqa: F401
+                                 constant_schedule, cosine_schedule,
+                                 exponential_schedule, linear_schedule,
+                                 step_schedule)
+from repro.core.simulator import PSTrainer, SimResult, WorkerPool  # noqa: F401

@@ -1,0 +1,66 @@
+"""Server-side gradient buffer with staleness-aware aggregation.
+
+The buffer stores worker gradients together with the parameter *version*
+they were computed against.  A flush aggregates the buffered gradients into
+one update:
+
+    g_agg = Σ_i w_i · g_i / Σ_i w_i,   w_i = staleness_decay^(v_now - v_i)
+
+With staleness_decay=1.0 (default) this is the plain mean, which matches
+the paper (their flush gives every buffered gradient equal weight); the
+decay knob is the beyond-paper extension evaluated in EXPERIMENTS.md.
+
+`aggregate_flush` is the compute hot-spot; `repro.kernels.hybrid_aggregate`
+provides the Pallas TPU kernel for it (this module is its jnp oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def aggregate_flush(grads: List[Any], weights: np.ndarray):
+    """Weighted mean of a list of gradient pytrees.  weights: (K,)."""
+    wsum = float(np.sum(weights))
+    ws = [float(w) / wsum for w in weights]
+
+    def comb(*leaves):
+        out = ws[0] * leaves[0]
+        for w, leaf in zip(ws[1:], leaves[1:]):
+            out = out + w * leaf
+        return out
+
+    return jax.tree.map(comb, *grads)
+
+
+@dataclasses.dataclass
+class GradientBuffer:
+    staleness_decay: float = 1.0
+
+    def __post_init__(self):
+        self._grads: List[Any] = []
+        self._versions: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self._grads)
+
+    def add(self, grad, version: int) -> None:
+        self._grads.append(grad)
+        self._versions.append(version)
+
+    def flush(self, current_version: int):
+        """Aggregate + clear.  Returns (g_agg, num_aggregated)."""
+        assert self._grads, "flush of empty buffer"
+        stale = current_version - np.asarray(self._versions, np.float64)
+        weights = self.staleness_decay ** stale
+        agg = aggregate_flush(self._grads, weights)
+        n = len(self._grads)
+        self._grads, self._versions = [], []
+        return agg, n
+
+    def staleness(self, current_version: int) -> List[int]:
+        return [current_version - v for v in self._versions]

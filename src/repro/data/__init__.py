@@ -1,0 +1,2 @@
+from repro.data.pipeline import Prefetcher, shard_batch  # noqa: F401
+from repro.data import synthetic  # noqa: F401

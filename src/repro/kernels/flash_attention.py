@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: blockwise online-softmax attention (forward).
+
+The prefill hot-spot.  Classic FlashAttention adapted to TPU: the MXU
+wants 128-aligned (q_block × kv_block) matmul tiles, fp32 accumulators
+live in VMEM scratch, and the kv axis is the *innermost sequential* grid
+dimension so the (m, l, acc) online-softmax state carries across kv
+blocks without HBM traffic.  GQA folds the query-head → kv-head mapping
+into the BlockSpec index maps (no kv replication in HBM).  Causal and
+sliding-window masks are applied per tile.
+
+Memory: O(q_block · kv_block) scores per step instead of O(S²);
+VMEM per step ≈ (qb·d + kb·d + qb·kb + qb·d) · 4B ≈ 0.5 MiB at 128/128/128.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  q_block: int, kv_block: int, num_kv_blocks: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (qb, d)
+    k = k_ref[0].astype(jnp.float32)                    # (kb, d)
+    v = v_ref[0].astype(jnp.float32)                    # (kb, d)
+
+    s = jnp.dot(q, k.T)                                 # (qb, kb)
+    q_pos = iq * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 0)
+    k_pos = ik * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (q_block, kv_block), 1)
+    mask = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (qb, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (m_new == NEG_INF): keep exp at 0
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    alpha = jnp.where(m_prev == NEG_INF, 0.0, alpha)
+
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jnp.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _final():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           q_block: int = 128, kv_block: int = 128,
+                           scale: Optional[float] = None,
+                           interpret: bool = False):
+    """q: (B, S, H, d); k/v: (B, S, KV, d); GQA via H % KV == 0.
+
+    Returns (B, S, H, d).  Forward only (inference prefill path; training
+    uses the jnp rowblock reference which XLA differentiates).
+    """
+    B, S, H, d = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0
+    G = H // KV
+    assert S % q_block == 0 and S % kv_block == 0
+    nq, nk = S // q_block, S // kv_block
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * KV, S, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * KV, S, d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_block=q_block, kv_block=kv_block, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, kv_block, d),
+                         lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+            pl.BlockSpec((1, kv_block, d),
+                         lambda bh, iq, ik, G=G: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, d),
+                               lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(B, H, S, d), 1, 2)

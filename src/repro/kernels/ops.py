@@ -1,0 +1,111 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) Pallas lowers only in interpret mode, so every op
+takes `interpret=None` → auto (interpret iff not on TPU).  `use_pallas=
+False` falls back to the jnp reference — the default for the dry-run,
+where the TPU kernels are represented by their XLA-fused references.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.hybrid_aggregate import (flush_momentum_pallas,
+                                            flush_pallas, TILE_P)
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ flat utils
+
+def tree_to_flat(grads_trees: List) -> jax.Array:
+    """Stack K gradient pytrees into a (K, P_padded) matrix (P padded to
+    the kernel tile)."""
+    flats = []
+    for tree in grads_trees:
+        leaves = [jnp.ravel(x) for x in jax.tree.leaves(tree)]
+        flats.append(jnp.concatenate(leaves))
+    mat = jnp.stack(flats)
+    P = mat.shape[1]
+    pad = (-P) % TILE_P
+    if pad:
+        mat = jnp.pad(mat, ((0, 0), (0, pad)))
+    return mat
+
+
+def flat_to_tree(flat: jax.Array, like) -> object:
+    leaves = jax.tree.leaves(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(flat[off:off + n].reshape(leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+
+
+# ------------------------------------------------------------------- ops
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def hybrid_flush(grads: jax.Array, weights: jax.Array, *,
+                 use_pallas: bool = True,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Weighted aggregation of K flattened gradient slabs: (K,P),(K)->(P)."""
+    if not use_pallas:
+        return ref.flush_ref(grads, weights)
+    return flush_pallas(grads, weights,
+                        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta", "use_pallas", "interpret"))
+def hybrid_flush_momentum(grads, weights, momentum, beta: float, *,
+                          use_pallas: bool = True,
+                          interpret: Optional[bool] = None):
+    if not use_pallas:
+        return ref.flush_momentum_ref(grads, weights, momentum, beta)
+    return flush_momentum_pallas(grads, weights, momentum, beta,
+                                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "use_pallas", "interpret",
+                                    "block_rows"))
+def rmsnorm(x, scale, eps: float = 1e-5, *, use_pallas: bool = True,
+            block_rows: int = 256, interpret: Optional[bool] = None):
+    """x: (..., D)."""
+    if not use_pallas:
+        return ref.rmsnorm_ref(x, scale, eps)
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    flat = x.reshape(-1, D)
+    N = flat.shape[0]
+    rows = min(block_rows, N)
+    while N % rows:
+        rows //= 2
+    y = rmsnorm_pallas(flat, scale, eps, block_rows=max(rows, 1),
+                       interpret=_auto_interpret(interpret))
+    return y.reshape(*lead, D)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "q_block",
+                                    "kv_block", "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_block: int = 128,
+                    kv_block: int = 128, use_pallas: bool = True,
+                    interpret: Optional[bool] = None):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_block=q_block,
+        kv_block=kv_block, interpret=_auto_interpret(interpret))

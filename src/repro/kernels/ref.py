@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the dry-run/training path on
+CPU and the allclose reference in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flush_ref(grads: jax.Array, weights: jax.Array) -> jax.Array:
+    """grads (K, P), weights (K,) -> (P,) weighted sum."""
+    return jnp.einsum("kp,k->p", grads.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(grads.dtype)
+
+
+def flush_momentum_ref(grads, weights, momentum, beta: float):
+    agg = jnp.einsum("kp,k->p", grads.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    m_new = beta * momentum.astype(jnp.float32) + agg
+    return m_new.astype(grads.dtype), m_new.astype(momentum.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    """q (B,S,H,d), k/v (B,S,KV,d) -> (B,S,H,d).  Naive fp32 softmax."""
+    B, S, H, d = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(B, S, KV, G, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1)[None, None, None, :, None], p, 0.0)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, d).astype(q.dtype)

@@ -1,0 +1,438 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination against the production meshes and record memory/cost/
+collective analyses — the proof that the distribution config is coherent
+without real hardware.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+  python -m repro.launch.dryrun --arch jamba-v0.1-52b --shape train_4k \
+      --hybrid-rep 4            # group-annealed hybrid phase variant
+
+Results are cached as JSON under experiments/dryrun/.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import (ARCH_NAMES, SHAPES, get_config,
+                                    input_specs, shape_applicable)
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import TRAIN_MICROBATCH, make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.partition import (cache_shardings, param_shardings,
+                                      opt_state_shardings)
+from repro.parallel.sharding import axis_rules
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(", re.I)
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def parse_collective_bytes(hlo: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in compiled HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"^[%\w.\-]*\s*=\s*((?:\([^)]*\)|\S+))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", line)
+        if not m:
+            continue
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in SHAPE_RE.findall(shapes_str):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0) + nbytes
+        out["total"] = out.get("total", 0) + nbytes
+        out[f"count_{op}"] = out.get(f"count_{op}", 0) + 1
+    return out
+
+
+def batch_shardings(batch, mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = axes if len(axes) > 1 else axes[0]
+
+    def f(x):
+        return NamedSharding(mesh, P(b, *([None] * (x.ndim - 1))))
+
+    return jax.tree.map(f, batch)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_lowered(arch: str, shape_name: str, mesh, remat: Optional[str]
+                  = None, q_block: int = 512,
+                  microbatch: Optional[int] = None,
+                  accum_dtype: str = "float32"):
+    """Returns (lowered, meta)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if microbatch is None:
+        microbatch = TRAIN_MICROBATCH.get(arch, 1)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+
+    with axis_rules(mesh):
+        params_sds = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        p_sh = param_shardings(params_sds)
+
+        if shape.kind in ("train", "prefill"):
+            batch_sds = specs["batch"]
+            b_sh = batch_shardings(batch_sds, mesh)
+            if shape.kind == "train":
+                opt = adamw(3e-4)
+                opt_sds = jax.eval_shape(lambda: opt.init(params_sds))
+                o_sh = opt_state_shardings(opt_sds, params_sds)
+                train_step = make_train_step(cfg, opt, q_block=q_block,
+                                             microbatch=microbatch,
+                                             accum_dtype=jnp.dtype(
+                                                 accum_dtype))
+                fn = jax.jit(train_step,
+                             in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, replicated(mesh)),
+                             donate_argnums=(0, 1))
+                lowered = fn.lower(params_sds, opt_sds, batch_sds)
+            else:
+                def prefill_step(params, batch):
+                    logits, _ = M.forward(params, batch, cfg,
+                                          q_block=q_block)
+                    # return last-position logits (serving prefill output)
+                    return logits[:, -1]
+
+                fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                             out_shardings=replicated(mesh))
+                lowered = fn.lower(params_sds, batch_sds)
+        else:
+            B = shape.global_batch
+            cache_sds = specs["cache"]
+            c_sh = cache_shardings(cache_sds, B, mesh)
+            axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            dsz = 1
+            for a in axes:
+                dsz *= mesh.shape[a]
+            tok_spec = P(axes if len(axes) > 1 else axes[0], None) \
+                if B % dsz == 0 else P(None, None)
+            t_sh = NamedSharding(mesh, tok_spec)
+
+            def serve_step(params, cache, tokens, cur_index):
+                logits, new_cache = M.decode_step(params, cache, tokens,
+                                                  cur_index, cfg)
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return next_tok, new_cache
+
+            fn = jax.jit(serve_step,
+                         in_shardings=(p_sh, c_sh, t_sh, replicated(mesh)),
+                         out_shardings=(t_sh, c_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_sds, cache_sds, specs["tokens"],
+                               specs["cur_index"])
+
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params_sds))
+    return lowered, {"num_params": n_params, "cfg_name": cfg.name}
+
+
+def build_hybrid_lowered(arch: str, rep: int, mesh_kind: str,
+                         q_block: int = 512,
+                         microbatch: Optional[int] = None):
+    """Lower the group-annealed hybrid train step (train_4k) with R
+    replica groups: params carry a leading replica axis sharded over
+    ``rep``; gradients reduce only within each group (DESIGN.md §2.2).
+    R=1 is the fully-synchronous paper-faithful endpoint."""
+    import dataclasses
+    from repro.core.spmd_hybrid import (make_replica_step,
+                                        replica_param_shardings,
+                                        replicate_params)
+
+    cfg = get_config(arch)
+    if microbatch is None:
+        microbatch = TRAIN_MICROBATCH.get(arch, 1)
+    mesh = mesh_lib.make_hybrid_mesh(rep,
+                                     multi_pod=(mesh_kind == "multipod"))
+    shape = SHAPES["train_4k"]
+    opt = adamw(3e-4)
+
+    with axis_rules(mesh):
+        params_sds = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        params_R = jax.eval_shape(lambda p: replicate_params(p, rep),
+                                  params_sds)
+        p_sh = replica_param_shardings(params_sds, mesh)
+        opt_R = jax.eval_shape(lambda p: jax.vmap(opt.init)(p), params_R)
+        o_sh = jax.tree.map(
+            lambda s: s, {
+                "count": replicated(mesh),
+                "mu": p_sh, "nu": p_sh})
+        # opt state structure: vmap(init) gives {count:(R,), mu, nu}
+        o_sh = {"count": NamedSharding(mesh, P("rep")),
+                "mu": p_sh, "nu": p_sh}
+
+        B = shape.global_batch
+        assert B % rep == 0
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((rep, B // rep, shape.seq_len),
+                                           jnp.int32),
+            "labels": jax.ShapeDtypeStruct((rep, B // rep, shape.seq_len),
+                                           jnp.int32)}
+        if cfg.frontend is not None:
+            raise NotImplementedError("hybrid dry-run uses token archs")
+        b_sh = jax.tree.map(
+            lambda x: NamedSharding(mesh, P("rep", "data",
+                                            *([None] * (x.ndim - 2)))),
+            batch_sds)
+
+        def loss_fn(p, b):
+            return M.loss_fn(p, b, cfg, q_block=q_block)
+
+        def one(params, opt_state, batch):
+            step = make_train_step(cfg, opt, q_block=q_block,
+                                   microbatch=microbatch)
+            return step(params, opt_state, batch)
+
+        def hybrid_step(params_R, opt_R, batch_R):
+            new_p, new_o, loss = jax.vmap(one)(params_R, opt_R, batch_R)
+            return new_p, new_o, jnp.mean(loss)
+
+        fn = jax.jit(hybrid_step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, replicated(mesh)),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_R, opt_R, batch_sds)
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params_sds))
+    return lowered, {"num_params": n_params, "cfg_name": cfg.name}
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            remat: Optional[str] = None, q_block: int = 512,
+            microbatch: Optional[int] = None, accum_dtype: str = "float32",
+            tag: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    result: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                              "mesh": mesh_kind, "tag": tag,
+                              "remat": remat, "q_block": q_block,
+                              "microbatch": microbatch
+                              if microbatch is not None
+                              else TRAIN_MICROBATCH.get(arch, 1)}
+    try:
+        lowered, meta = build_lowered(arch, shape_name, mesh, remat=remat,
+                                      q_block=q_block,
+                                      microbatch=microbatch,
+                                      accum_dtype=accum_dtype)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        coll = parse_collective_bytes(hlo_text)
+        # trip-count-aware executed costs (XLA cost_analysis counts while
+        # bodies once — see repro.launch.hlo_cost)
+        from repro.launch.hlo_cost import analyze_hlo_text
+        exec_cost = analyze_hlo_text(hlo_text)
+        result.update({
+            "status": "ok",
+            "num_params": meta["num_params"],
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops_per_device": cost.get("flops", 0.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+            "exec_flops_per_device": exec_cost.flops,
+            "exec_hbm_bytes_per_device": exec_cost.hbm_bytes,
+            "exec_collective_bytes_per_device": {
+                "total": exec_cost.collective_bytes,
+                **exec_cost.collective_by_op},
+            "collective_bytes_per_device": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure verbatim
+        result.update({"status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-2000:]})
+    return result
+
+
+def run_hybrid_one(arch: str, rep: int, mesh_kind: str,
+                   q_block: int = 512,
+                   microbatch: Optional[int] = None) -> Dict[str, Any]:
+    t0 = time.time()
+    result: Dict[str, Any] = {"arch": arch, "shape": "train_4k",
+                              "mesh": mesh_kind, "tag": f"hybrid_R{rep}",
+                              "hybrid_rep": rep,
+                              "microbatch": microbatch
+                              if microbatch is not None
+                              else TRAIN_MICROBATCH.get(arch, 1)}
+    try:
+        lowered, meta = build_hybrid_lowered(arch, rep, mesh_kind,
+                                             q_block=q_block,
+                                             microbatch=microbatch)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        from repro.launch.hlo_cost import analyze_hlo_text
+        exec_cost = analyze_hlo_text(hlo_text)
+        result.update({
+            "status": "ok",
+            "num_params": meta["num_params"],
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "exec_flops_per_device": exec_cost.flops,
+            "exec_hbm_bytes_per_device": exec_cost.hbm_bytes,
+            "exec_collective_bytes_per_device": {
+                "total": exec_cost.collective_bytes,
+                **exec_cost.collective_by_op},
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            },
+        })
+    except Exception as e:  # noqa: BLE001
+        result.update({"status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-2000:]})
+    return result
+
+
+def result_path(arch, shape_name, mesh_kind, tag=""):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(OUT_DIR,
+                        f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--q-block", type=int, default=512)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--accum-dtype", default="float32")
+    ap.add_argument("--hybrid-rep", type=int, default=None,
+                    help="lower the group-annealed hybrid train step with "
+                         "R replica groups (train_4k only)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    if args.hybrid_rep is not None:
+        assert args.arch, "--hybrid-rep requires --arch"
+        mesh_kind = "pod" if args.mesh == "both" else args.mesh
+        res = run_hybrid_one(args.arch, args.hybrid_rep, mesh_kind,
+                             q_block=args.q_block,
+                             microbatch=args.microbatch)
+        path = result_path(args.arch, "train_4k", mesh_kind,
+                           f"hybrid_R{args.hybrid_rep}")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        if res["status"] == "ok":
+            coll = res["exec_collective_bytes_per_device"]
+            print(f"hybrid R={args.hybrid_rep}: "
+                  f"{res['exec_flops_per_device']:.3e} flops/dev, "
+                  f"coll {coll.get('total', 0) / 2**30:.2f} GiB/dev "
+                  f"(compile {res['compile_s']}s)")
+        else:
+            print("ERROR:", res["error"])
+            return 1
+        return 0
+
+    combos = []
+    meshes = ("pod", "multipod") if args.mesh == "both" else (args.mesh,)
+    archs = ARCH_NAMES if args.all or not args.arch else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)
+    for a in archs:
+        for s in shapes:
+            for mk in meshes:
+                combos.append((a, s, mk))
+
+    failures = 0
+    for a, s, mk in combos:
+        path = result_path(a, s, mk, args.tag)
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                prev = json.load(f)
+            print(f"[cached] {a} × {s} × {mk}: {prev['status']}")
+            if prev["status"] == "error":
+                failures += 1
+            continue
+        print(f"[run] {a} × {s} × {mk} ...", flush=True)
+        res = run_one(a, s, mk, remat=args.remat, q_block=args.q_block,
+                      microbatch=args.microbatch,
+                      accum_dtype=args.accum_dtype, tag=args.tag)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        if res["status"] == "ok":
+            mem = res["memory"]
+            per_dev = (mem["argument_bytes"] + mem["temp_bytes"]
+                       + mem["output_bytes"] - mem["alias_bytes"])
+            print(f"  ok: {res['flops_per_device']:.3e} flops/dev, "
+                  f"{per_dev/2**30:.2f} GiB/dev, "
+                  f"coll {res['collective_bytes_per_device'].get('total', 0)/2**30:.3f} GiB "
+                  f"(lower {res['lower_s']}s compile {res['compile_s']}s)",
+                  flush=True)
+        elif res["status"] == "skipped":
+            print(f"  skipped: {res['reason']}")
+        else:
+            failures += 1
+            print(f"  ERROR: {res['error']}")
+    print(f"done: {len(combos)} combos, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Functions, not module constants — importing this module never touches JAX
+device state.  Target: TPU v5e, 256 chips/pod (16×16), 2 pods multi-pod.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: Optional[int] = None, model: int = 1):
+    """Small mesh over whatever local devices exist (tests / examples)."""
+    n = jax.device_count()
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_hybrid_mesh(rep: int, *, multi_pod: bool = False):
+    """Factor the production mesh's (pod×)data axis into (rep, data/rep).
+
+    Used by the group-annealed hybrid phases: replica groups live on the
+    ``rep`` axis.  rep divides pod*data; the pod axis is consumed first so
+    small groups never cross pods (cheap early flushes — see DESIGN §2.2).
+    """
+    pods = 2 if multi_pod else 1
+    data_total = pods * 16
+    assert data_total % rep == 0, (rep, data_total)
+    devices = np.asarray(jax.devices()[:pods * 256]).reshape(
+        rep, data_total // rep, 16)
+    return Mesh(devices, ("rep", "data", "model"))
+
+
+# --------------------------------------------------- hardware constants
+# TPU v5e per chip (roofline constants per the assignment)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+HBM_PER_CHIP = 16 * 2 ** 30     # bytes

@@ -1,0 +1,86 @@
+"""Serving driver: batched prefill + decode with a ring-buffer-aware KV
+cache.
+
+Example (CPU-runnable):
+  python -m repro.launch.serve --arch h2o-danube-1.8b --smoke \
+      --batch 4 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_NAMES, get_config, smoke_variant
+from repro.models import model as M
+
+
+def greedy_generate(cfg, params, prompts: np.ndarray, gen_len: int,
+                    max_seq: int = 0):
+    """prompts: (B, P) int32.  Returns (B, P+gen_len) tokens.
+
+    Prefill runs the full forward once; decode then extends one token at a
+    time through the cache (attention KV / SSM state / mLSTM matrix
+    memory, per layer kind).
+    """
+    B, P = prompts.shape
+    max_seq = max_seq or (P + gen_len)
+    cache = M.init_cache(cfg, B, max_seq)
+
+    decode = jax.jit(
+        lambda c, t, i: M.decode_step(params, c, t, i, cfg))
+
+    # prefill by replaying the prompt through decode steps (cache-exact;
+    # a fused prefill that bulk-writes the cache is the TPU fast path and
+    # is exercised by the dry-run's prefill shape)
+    toks = prompts
+    last = None
+    for i in range(P):
+        last, cache = decode(cache, toks[:, i:i + 1], jnp.int32(i))
+
+    out = [prompts]
+    cur = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    for j in range(gen_len):
+        out.append(np.asarray(cur))
+        logits, cache = decode(cache, cur, jnp.int32(P + j))
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return np.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="h2o-danube-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = dataclasses.replace(smoke_variant(cfg), name=cfg.name)
+    assert cfg.has_decode, f"{cfg.name} is encoder-only"
+    assert cfg.frontend != "audio"
+
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.time()
+    out = greedy_generate(cfg, params, prompts, args.gen_len)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen_len
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"gen={args.gen_len}")
+    print(f"generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new / dt:.1f} tok/s on this host)")
+    print("sample:", out[0, -args.gen_len:].tolist())
+
+
+if __name__ == "__main__":
+    main()

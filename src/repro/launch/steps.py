@@ -1,0 +1,75 @@
+"""Step builders shared by train.py, dryrun.py and the examples."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import lconstraint
+
+
+def make_train_step(cfg: ModelConfig, opt, q_block: int = 512,
+                    microbatch: int = 1, accum_dtype=jnp.float32):
+    """(params, opt_state, batch) -> (params, opt_state, loss).
+
+    microbatch > 1 runs gradient accumulation: the global batch is split
+    into `microbatch` slices scanned sequentially with an `accum_dtype`
+    gradient accumulator — the standard memory lever for the big train
+    shapes (saved scan-group inputs scale with the *micro* batch).
+    accum_dtype=bfloat16 halves the accumulator footprint (§Perf knob).
+    """
+
+    def loss_fn(p, b):
+        return M.loss_fn(p, b, cfg, q_block=q_block)
+
+    def train_step(params, opt_state, batch):
+        if microbatch == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def resh(x):
+                x = x.reshape(microbatch, x.shape[0] // microbatch,
+                              *x.shape[1:])
+                return lconstraint(x, (None, "batch")
+                                   + (None,) * (x.ndim - 2))
+
+            mb = jax.tree.map(resh, batch)
+
+            def body(carry, b_i):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b_i)
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (g_sum, l_sum), _ = jax.lax.scan(body, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatch, g_sum)
+            loss = l_sum / microbatch
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+# Per-arch gradient-accumulation defaults for train_4k on the 256-chip pod
+# (global batch 256 → per-device batch 16): chosen so saved scan-group
+# inputs + logits fit the 16 GiB HBM budget (EXPERIMENTS.md §Dry-run).
+TRAIN_MICROBATCH = {
+    "xlstm-350m": 2,
+    "qwen1.5-110b": 16,
+    "qwen2.5-32b": 16,
+    "llama4-scout-17b-a16e": 8,
+    "deepseek-v2-lite-16b": 4,
+    "hubert-xlarge": 4,
+    "phi-3-vision-4.2b": 4,
+    "h2o-danube-1.8b": 2,
+    "jamba-v0.1-52b": 8,
+    "phi4-mini-3.8b": 4,
+}

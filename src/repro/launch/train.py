@@ -1,0 +1,191 @@
+"""Training driver.
+
+Modes:
+  * ``sync``   — standard fully-synchronous data parallelism (the paper's
+                 synchronous baseline; also the hybrid schedule's endpoint);
+  * ``async``  — group size 1 throughout (per-device local SGD, the SPMD
+                 analogue of the asynchronous baseline);
+  * ``hybrid`` — the Smooth Switch: reduction-group size annealed by the
+                 threshold schedule, replicas merged at phase switches.
+
+Runs on whatever devices exist (CPU tests use
+XLA_FLAGS=--xla_force_host_platform_device_count=8); the same code drives
+the production mesh.
+
+Example (the end-to-end driver):
+  python -m repro.launch.train --arch xlstm-350m --smoke --steps 200 \
+      --mode hybrid --schedule step --step-size 30
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.registry import ARCH_NAMES, get_config, smoke_variant
+from repro.core.schedule import (SCHEDULES, constant_schedule)
+from repro.core.spmd_hybrid import (build_phases, make_replica_step,
+                                    merge_replicas, replica_divergence,
+                                    replica_param_shardings,
+                                    replicate_params, reshard_replicas)
+from repro.data.synthetic import token_stream
+from repro.launch.steps import make_train_step
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel.partition import param_shardings
+from repro.parallel.sharding import axis_rules
+
+
+def build_hybrid_mesh(rep: int, model: int = 1) -> Mesh:
+    n = jax.device_count()
+    assert n % (rep * model) == 0, (n, rep, model)
+    devices = np.asarray(jax.devices()).reshape(rep, n // (rep * model),
+                                                model)
+    return Mesh(devices, ("rep", "data", "model"))
+
+
+def _shard_batch_R(batch, mesh, R):
+    def f(x):
+        x = np.asarray(x)
+        x = x.reshape(R, x.shape[0] // R, *x.shape[1:])
+        return jax.device_put(x, NamedSharding(
+            mesh, P("rep", "data", *([None] * (x.ndim - 2)))))
+    return jax.tree.map(f, batch)
+
+
+def train(arch: str, steps: int, mode: str, batch: int, seq: int,
+          lr: float, schedule_kind: str, step_size: int, smoke: bool,
+          merge_alpha: float = 1.0, log_every: int = 10,
+          ckpt_dir: Optional[str] = None, seed: int = 0,
+          out_json: Optional[str] = None):
+    cfg = get_config(arch)
+    if smoke:
+        cfg = dataclasses.replace(smoke_variant(cfg), name=cfg.name)
+    assert cfg.frontend is None, "train driver uses token streams"
+
+    n_dev = jax.device_count()
+    data_axis = n_dev
+    opt = adamw(lr)
+    stream = token_stream(seed, cfg.vocab_size, batch, seq)
+
+    # --- schedule -> phases
+    if mode == "sync":
+        phases = [(0, data_axis)]
+    elif mode == "async":
+        phases = [(0, 1)]
+    else:
+        sched = (SCHEDULES[schedule_kind](data_axis, step_size)
+                 if schedule_kind == "step"
+                 else SCHEDULES[schedule_kind](data_axis, steps))
+        phases = [(p.t_start, p.group_size)
+                  for p in build_phases(sched, steps, data_axis)]
+
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+
+    def loss_fn(p, b):
+        return M.loss_fn(p, b, cfg)
+
+    def opt_update(grads, state, p):
+        return opt.update(grads, state, p)
+
+    history = []
+    t0 = time.time()
+    tokens_done = 0
+    params_R = None
+    step = 0
+
+    for idx, (t_start, g) in enumerate(phases):
+        t_end = phases[idx + 1][0] if idx + 1 < len(phases) else steps
+        R = max(1, data_axis // g)
+        if params_R is None:
+            host_R = replicate_params(jax.device_get(params), R)
+        else:
+            # Phase switch (the paper's buffer flush): merge replicas and
+            # change the group factor.  Done host-side — the device arrays
+            # are fetched, merged/resharded in numpy, and re-placed under
+            # the new mesh.  This keeps exactly one SPMD executable alive
+            # per phase (XLA-CPU's in-process communicator deadlocks if
+            # modules with collectives interleave; on TPU this is one
+            # host-sync per phase, a handful per run).
+            host = jax.device_get(params_R)
+            host = merge_replicas(host, alpha=merge_alpha)
+            host_R = reshard_replicas(host, R)
+        mesh = build_hybrid_mesh(R)
+        with axis_rules(mesh):
+            p_sh = replica_param_shardings(params, mesh)
+            params_R = jax.device_put(host_R, p_sh)
+            opt_R = jax.jit(jax.vmap(opt.init))(params_R)
+            jax.block_until_ready((params_R, opt_R))
+            replica_step = make_replica_step(loss_fn, opt_update)
+            step_fn = jax.jit(replica_step, donate_argnums=(0, 1))
+
+            while step < t_end:
+                b = next(stream)
+                b_R = _shard_batch_R(b, mesh, R)
+                params_R, opt_R, metrics = step_fn(params_R, opt_R, b_R)
+                tokens_done += batch * seq
+                if step % log_every == 0 or step == t_end - 1:
+                    div = float(metrics["divergence"]) if R > 1 else 0.0
+                    rec = {"step": step, "group_size": g, "replicas": R,
+                           "loss": float(metrics["loss"]),
+                           "divergence": div,
+                           "wall_s": round(time.time() - t0, 2),
+                           "tokens": tokens_done}
+                    history.append(rec)
+                    print(f"step {step:5d}  g={g:3d} R={R:3d} "
+                          f"loss={rec['loss']:.4f} div={div:.3e}", flush=True)
+                step += 1
+
+            jax.block_until_ready((params_R, opt_R))
+            if ckpt_dir:
+                merged = merge_replicas(jax.device_get(params_R))
+                one = jax.tree.map(lambda x: np.asarray(x[0]), merged)
+                save_checkpoint(os.path.join(ckpt_dir, f"step_{step}"),
+                                one, step, extra={"arch": arch,
+                                                  "mode": mode})
+
+    # final merge for the returned model
+    params_final = jax.tree.map(lambda x: np.asarray(x[0]),
+                                merge_replicas(jax.device_get(params_R)))
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"arch": arch, "mode": mode, "history": history}, f,
+                      indent=2)
+    return params_final, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="xlstm-350m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--mode", choices=("sync", "async", "hybrid"),
+                    default="hybrid")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", choices=tuple(SCHEDULES), default="step")
+    ap.add_argument("--step-size", type=int, default=30)
+    ap.add_argument("--merge-alpha", type=float, default=1.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out-json", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    train(args.arch, args.steps, args.mode, args.batch, args.seq, args.lr,
+          args.schedule, args.step_size, args.smoke,
+          merge_alpha=args.merge_alpha, ckpt_dir=args.ckpt_dir,
+          seed=args.seed, out_json=args.out_json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,238 @@
+"""Softmax attention: GQA/MHA, optional QKV bias, RoPE, sliding-window and
+chunked-local (llama4 iRoPE) variants, full-sequence and single-token decode
+paths.
+
+Full-sequence attention is computed *row-blockwise* (lax.scan over query
+blocks, fp32 softmax) so 32k-token prefill never materialises a full
+(S, S) score matrix.  SWA / chunked layers slice only the reachable KV slab
+per query block, so their FLOPs are genuinely sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import lconstraint
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- params
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d, H, hd)) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (d, KV, hd)) * scale).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, KV, hd)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (H, hd, d)) * (H * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.attn_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = lconstraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = lconstraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = lconstraint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+# ---------------------------------------------------------- mask helpers
+
+def _mask_block(q_pos, k_pos, cfg: ModelConfig, global_layer: bool):
+    """(qb,) x (kb,) -> bool (qb, kb), True = attend."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if cfg.causal:
+        m = kp <= qp
+    else:
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if not global_layer:
+        if cfg.sliding_window is not None:
+            m &= kp > (qp - cfg.sliding_window)
+        if cfg.attn_chunk is not None:
+            m &= (kp // cfg.attn_chunk) == (qp // cfg.attn_chunk)
+    return m
+
+
+def _sdpa_block(q, k, v, mask):
+    """q (B,qb,H,hd), k/v (B,kb,KV,hd), mask (qb,kb) -> (B,qb,H,hd).
+
+    GQA via kv-head *repeat* rather than regrouping q's head dim: the head
+    dim is model-sharded and a (KV, group) reshape would force GSPMD to
+    all-gather q around every attention block (measured 6×96 GiB/step on
+    qwen2.5-32b train_4k — EXPERIMENTS.md §Perf it.1).  Repeating the
+    replicated kv heads is communication-free and numerically identical.
+    """
+    B, qb, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows produce uniform weights over NEG_INF; zero them
+    any_valid = jnp.any(mask, axis=-1)[None, None, :, None]
+    w = jnp.where(any_valid, w, 0.0)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------- full-seq
+
+def rowblock_attention(q, k, v, positions, cfg: ModelConfig,
+                       global_layer: bool = False, q_block: int = 512):
+    """Row-blockwise SDPA.  q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd_v).
+
+    lax.scan over query blocks; each block slices only the statically
+    reachable KV slab (window / chunk), fp32 softmax inside the block.
+    """
+    B, S = q.shape[:2]
+    if S <= q_block:
+        m = _mask_block(positions[0], positions[0], cfg, global_layer)
+        return _sdpa_block(q, k, v, m)
+
+    assert S % q_block == 0, (S, q_block)
+    n_blocks = S // q_block
+    # Static KV slab size per query block.
+    if not global_layer and cfg.attn_chunk is not None and cfg.attn_chunk < S:
+        slab = max(cfg.attn_chunk, q_block)
+    elif not global_layer and cfg.sliding_window is not None \
+            and cfg.sliding_window + q_block < S:
+        slab = cfg.sliding_window + q_block
+    else:
+        slab = S
+
+    qs = q.reshape(B, n_blocks, q_block, *q.shape[2:])
+    base_pos = positions[0]
+
+    def body(_, i):
+        qi = qs[:, i]
+        q_pos = jax.lax.dynamic_slice_in_dim(base_pos, i * q_block, q_block)
+        if slab == S:
+            start = 0
+        elif cfg.attn_chunk is not None and not global_layer:
+            start = (i * q_block // cfg.attn_chunk) * cfg.attn_chunk
+            start = jnp.minimum(start, S - slab)
+        else:
+            start = jnp.maximum(i * q_block + q_block - slab, 0)
+        ki = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
+        k_pos = jax.lax.dynamic_slice_in_dim(base_pos, start, slab)
+        m = _mask_block(q_pos, k_pos, cfg, global_layer)
+        return None, _sdpa_block(qi, ki, vi, m)
+
+    if cfg.remat != "none":
+        # don't store per-block score matrices for backward — recompute
+        body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_blocks))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, q.shape[2], v.shape[3])
+
+
+def attention_forward(params, x, cfg: ModelConfig, positions,
+                      global_layer: bool = False, q_block: int = 512):
+    """Full-sequence attention.  x: (B, S, D) -> (B, S, D)."""
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    out = rowblock_attention(q, k, v, positions, cfg, global_layer, q_block)
+    out = lconstraint(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return lconstraint(y, ("batch", "seq", None))
+
+
+# ---------------------------------------------------------------- decode
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
+                    global_layer: bool = False):
+    """KV cache for one attention layer.
+
+    SWA / chunked local layers use a ring buffer of the window size, so a
+    500k-context danube decode holds only `window` keys per layer.
+    """
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if not global_layer and cfg.sliding_window is not None:
+        L = min(max_seq, cfg.sliding_window)
+    elif not global_layer and cfg.attn_chunk is not None:
+        L = min(max_seq, cfg.attn_chunk)
+    else:
+        L = max_seq
+    return {
+        "k": jnp.zeros((batch, L, KV, hd), dtype),
+        "v": jnp.zeros((batch, L, KV, hd), dtype),
+    }
+
+
+def attention_decode(params, x, cache, cur_index, cfg: ModelConfig,
+                     global_layer: bool = False):
+    """One-token decode.  x: (B, 1, D); cur_index: scalar int32 (tokens so
+    far).  Returns (y, new_cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cur_index, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    L = cache["k"].shape[1]
+    slot = jnp.mod(cur_index, L)          # ring for SWA/chunked; linear else
+    # one-hot select instead of dynamic-update-slice: a DUS at a traced
+    # index into the sequence-sharded cache makes GSPMD gather the whole
+    # cache (measured 16 GiB/token on jamba long_500k); the where-update
+    # partitions cleanly (EXPERIMENTS.md §Perf pair B).
+    hit = (jnp.arange(L) == slot)[None, :, None, None]
+    ck = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+    cv = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+
+    # positions held in each cache slot (ring-aware)
+    slots = jnp.arange(L)
+    wraps = (cur_index - slots + L) // L            # how many writes ahead
+    slot_pos = cur_index - jnp.mod(cur_index - slots, L)
+    valid = (slot_pos >= 0) & (slot_pos <= cur_index)
+    if not global_layer and cfg.sliding_window is not None:
+        valid &= slot_pos > cur_index - cfg.sliding_window
+    if not global_layer and cfg.attn_chunk is not None:
+        valid &= (slot_pos // cfg.attn_chunk) == (cur_index // cfg.attn_chunk)
+
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    H = cfg.num_heads
+    g = H // KV
+    # Decode-side GQA groups *q* (one token, replicated — the reshape is
+    # free) and leaves the big sequence-sharded cache untouched: repeating
+    # the cache's head dim makes GSPMD re-lay-out the 500k-deep cache
+    # (EXPERIMENTS.md §Perf pair B).  The train path does the opposite
+    # (repeat kv) because there q is the model-sharded big tensor.
+    qg = q.reshape(B, 1, KV, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        ck.astype(jnp.float32)) * (hd ** -0.5)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": ck, "v": cv}

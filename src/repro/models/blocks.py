@@ -1,0 +1,115 @@
+"""Per-layer block assembly: (mixer, ffn) pairs with pre-norm residuals."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import (ATTN, ATTN_GLOBAL, MAMBA, MLA, MLP, MLSTM,
+                                 MOE, NONE, SLSTM, ModelConfig)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.models.norms import apply_norm, init_norm
+
+MIXER_INIT = {
+    ATTN: attn_mod.init_attention,
+    ATTN_GLOBAL: attn_mod.init_attention,
+    MLA: mla_mod.init_mla,
+    MAMBA: mamba_mod.init_mamba,
+    MLSTM: xlstm_mod.init_mlstm,
+    SLSTM: xlstm_mod.init_slstm,
+}
+
+
+def init_layer(key, mixer: str, ffn: str, cfg: ModelConfig, dtype):
+    km, kf = jax.random.split(key)
+    p: Dict[str, Any] = {
+        "mixer_norm": init_norm(cfg.norm, cfg.d_model),
+        "mixer": MIXER_INIT[mixer](km, cfg, dtype),
+    }
+    if ffn != NONE:
+        p["ffn_norm"] = init_norm(cfg.norm, cfg.d_model)
+        if ffn == MLP:
+            p["ffn"] = init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+        else:
+            p["ffn"] = init_moe(kf, cfg, dtype)
+    return p
+
+
+def layer_forward(p, x, mixer: str, ffn: str, cfg: ModelConfig, positions,
+                  q_block: int = 512):
+    """Full-sequence layer.  Returns (x, aux)."""
+    h = apply_norm(cfg.norm, p["mixer_norm"], x, cfg.norm_eps)
+    if mixer in (ATTN, ATTN_GLOBAL):
+        h = attn_mod.attention_forward(p["mixer"], h, cfg, positions,
+                                       global_layer=(mixer == ATTN_GLOBAL),
+                                       q_block=q_block)
+    elif mixer == MLA:
+        h = mla_mod.mla_forward(p["mixer"], h, cfg, positions, q_block=q_block)
+    elif mixer == MAMBA:
+        h = mamba_mod.mamba_forward(p["mixer"], h, cfg)
+    elif mixer == MLSTM:
+        h = xlstm_mod.mlstm_forward(p["mixer"], h, cfg)
+    elif mixer == SLSTM:
+        h = xlstm_mod.slstm_forward(p["mixer"], h, cfg)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != NONE:
+        h = apply_norm(cfg.norm, p["ffn_norm"], x, cfg.norm_eps)
+        if ffn == MLP:
+            h = mlp_forward(p["ffn"], h, cfg.mlp_act)
+        else:
+            h, aux = moe_forward(p["ffn"], h, cfg)
+        x = x + h
+    return x, aux
+
+
+def init_layer_cache(mixer: str, cfg: ModelConfig, batch: int, max_seq: int,
+                     dtype):
+    if mixer == ATTN:
+        return attn_mod.init_attn_cache(cfg, batch, max_seq, dtype,
+                                        global_layer=False)
+    if mixer == ATTN_GLOBAL:
+        return attn_mod.init_attn_cache(cfg, batch, max_seq, dtype,
+                                        global_layer=True)
+    if mixer == MLA:
+        return mla_mod.init_mla_cache(cfg, batch, max_seq, dtype)
+    if mixer == MAMBA:
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    if mixer == MLSTM:
+        return xlstm_mod.init_mlstm_cache(cfg, batch, dtype)
+    if mixer == SLSTM:
+        return xlstm_mod.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def layer_decode(p, x, cache, cur_index, mixer: str, ffn: str,
+                 cfg: ModelConfig):
+    """One-token layer step.  Returns (x, new_cache)."""
+    h = apply_norm(cfg.norm, p["mixer_norm"], x, cfg.norm_eps)
+    if mixer in (ATTN, ATTN_GLOBAL):
+        h, cache = attn_mod.attention_decode(
+            p["mixer"], h, cache, cur_index, cfg,
+            global_layer=(mixer == ATTN_GLOBAL))
+    elif mixer == MLA:
+        h, cache = mla_mod.mla_decode(p["mixer"], h, cache, cur_index, cfg)
+    elif mixer == MAMBA:
+        h, cache = mamba_mod.mamba_decode(p["mixer"], h, cache, cfg)
+    elif mixer == MLSTM:
+        h, cache = xlstm_mod.mlstm_decode(p["mixer"], h, cache, cfg)
+    elif mixer == SLSTM:
+        h, cache = xlstm_mod.slstm_decode(p["mixer"], h, cache, cfg)
+    x = x + h
+    if ffn != NONE:
+        h = apply_norm(cfg.norm, p["ffn_norm"], x, cfg.norm_eps)
+        if ffn == MLP:
+            h = mlp_forward(p["ffn"], h, cfg.mlp_act)
+        else:
+            h, _ = moe_forward(p["ffn"], h, cfg)
+        x = x + h
+    return x, cache

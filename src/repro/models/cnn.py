@@ -1,0 +1,80 @@
+"""The paper's experiment models: small CNNs for MNIST/CIFAR-10-like data
+and an MLP for the random 20-dim/10-class dataset (paper §5–6).
+
+Pure-JAX functional models (params = pytrees) used by the parameter-server
+simulator and by the paper-table benchmarks.  Negative log-likelihood loss,
+matching the paper.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def init_cnn(key, image_shape: Tuple[int, int, int], num_classes: int = 10):
+    """image_shape = (H, W, C)."""
+    H, W, C = image_shape
+    ks = jax.random.split(key, 4)
+    c1, c2 = 16, 32
+    flat = (H // 4) * (W // 4) * c2
+    return {
+        "conv1_w": jax.random.normal(ks[0], (3, 3, C, c1)) * (9 * C) ** -0.5,
+        "conv1_b": jnp.zeros((c1,)),
+        "conv2_w": jax.random.normal(ks[1], (3, 3, c1, c2)) * (9 * c1) ** -0.5,
+        "conv2_b": jnp.zeros((c2,)),
+        "fc1_w": jax.random.normal(ks[2], (flat, 128)) * flat ** -0.5,
+        "fc1_b": jnp.zeros((128,)),
+        "fc2_w": jax.random.normal(ks[3], (128, num_classes)) * 128 ** -0.5,
+        "fc2_b": jnp.zeros((num_classes,)),
+    }
+
+
+def cnn_forward(params, x):
+    """x: (B, H, W, C) -> logits (B, num_classes)."""
+    h = jax.nn.relu(_conv(x, params["conv1_w"], params["conv1_b"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(_conv(h, params["conv2_w"], params["conv2_b"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1_w"] + params["fc1_b"])
+    return h @ params["fc2_w"] + params["fc2_b"]
+
+
+def init_mlp_clf(key, in_dim: int = 20, hidden: int = 64,
+                 num_classes: int = 10):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(ks[0], (in_dim, hidden)) * in_dim ** -0.5,
+        "b1": jnp.zeros((hidden,)),
+        "w2": jax.random.normal(ks[1], (hidden, hidden)) * hidden ** -0.5,
+        "b2": jnp.zeros((hidden,)),
+        "w3": jax.random.normal(ks[2], (hidden, num_classes)) * hidden ** -0.5,
+        "b3": jnp.zeros((num_classes,)),
+    }
+
+
+def mlp_clf_forward(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def nll_loss(logits, labels):
+    """Negative log-likelihood (the paper's loss)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,125 @@
+"""Mamba-1 selective SSM block, chunkwise-parallel for TPU.
+
+The CUDA reference fuses the recurrence into a single kernel with
+recomputation; the TPU-native adaptation here processes the sequence in
+chunks (`cfg.ssm_chunk`): an outer `lax.scan` carries the SSM state across
+chunks while an inner `associative_scan` parallelises within a chunk —
+bounding the materialised (B, chunk, d_inner, d_state) tensor so 4k–500k
+sequences fit VMEM/HBM budgets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import lconstraint
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    ds, dc, dtr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * dc ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x": (jax.random.normal(ks[2], (di, dtr + 2 * ds)) * di ** -0.5).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (dtr, di)) * dtr ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b, d_conv: int, init_state=None):
+    """Depthwise causal conv.  x: (B, S, di); returns (y, last_state)."""
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(d_conv))
+    return y + b, xp[:, -(d_conv - 1):]
+
+
+def _ssm_inputs(params, xc, cfg: ModelConfig):
+    """xc (B,S,di) post-conv -> (a, bx, C, xc) scan inputs (fp32)."""
+    ds, dtr = cfg.mamba_d_state, cfg.resolved_dt_rank
+    proj = jnp.einsum("bsd,de->bse", xc, params["w_x"]).astype(jnp.float32)
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt, params["w_dt"].astype(jnp.float32))
+                         + params["dt_bias"])                       # (B,S,di)
+    A = -jnp.exp(params["A_log"])                                    # (di,ds)
+    a = jnp.exp(dt[..., None] * A)                                   # (B,S,di,ds)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]  # (B,S,di,ds)
+    return a, bx, Cm
+
+
+def _chunk_scan(h0, a, bx):
+    """Within-chunk associative scan.  h0 (B,di,ds); a,bx (B,c,di,ds)."""
+    def op(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+    A_cum, B_cum = jax.lax.associative_scan(op, (a, bx), axis=1)
+    h = A_cum * h0[:, None] + B_cum                                  # (B,c,di,ds)
+    return h, h[:, -1]
+
+
+def mamba_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    di, chunk = cfg.mamba_d_inner, min(cfg.ssm_chunk, S)
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = lconstraint(xi, ("batch", "seq", "inner"))
+    xc, _ = _causal_conv(xi, params["conv_w"], params["conv_b"], cfg.mamba_d_conv)
+    xc = jax.nn.silu(xc)
+
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    # The (B, c, di, d_state) scan inputs are computed *inside* the chunk
+    # body so only one chunk's worth is ever materialised (the classic
+    # mamba memory blow-up avoided TPU-side; see module docstring).
+    xc_c = xc.reshape(B, n, chunk, di).swapaxes(0, 1)            # (n,B,c,di)
+
+    def body(h, xci):
+        ai, bxi, Ci = _ssm_inputs(params, xci, cfg)
+        hs, h_new = _chunk_scan(h, ai, bxi)
+        y = jnp.einsum("bcds,bcs->bcd", hs, Ci)                      # (B,c,di)
+        return h_new, y
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    _, ys = jax.lax.scan(body, h0, xc_c)
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = lconstraint(y, ("batch", "seq", "inner"))
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return lconstraint(out, ("batch", "seq", None))
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.mamba_d_inner
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def mamba_decode(params, x, cache, cfg: ModelConfig):
+    """One-token recurrence.  x: (B, 1, D)."""
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, params["conv_w"], params["conv_b"],
+                                  cfg.mamba_d_conv, cache["conv"])
+    xc = jax.nn.silu(xc)
+    a, bx, Cm = _ssm_inputs(params, xc, cfg)
+    h = a[:, 0] * cache["h"] + bx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"conv": conv_state, "h": h}

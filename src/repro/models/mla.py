@@ -1,0 +1,121 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+KV is compressed into a low-rank latent c_kv (kv_lora_rank) plus a single
+shared RoPE key (rope_head_dim); per-head keys/values are re-expanded from
+the latent.  The decode cache stores only (c_kv, k_rope) — the memory win
+that defines MLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import rowblock_attention, NEG_INF
+from repro.models.config import ModelConfig
+from repro.models.rope import apply_rope
+from repro.parallel.sharding import lconstraint
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    hd, r, rh = cfg.resolved_head_dim, cfg.kv_lora_rank, cfg.rope_head_dim
+    vh = cfg.resolved_v_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        # query: nope part + rope part per head
+        "wq": (jax.random.normal(ks[0], (d, H, hd + rh)) * s).astype(dtype),
+        # kv down-projection to latent
+        "w_dkv": (jax.random.normal(ks[1], (d, r)) * s).astype(dtype),
+        # shared rope key
+        "w_kr": (jax.random.normal(ks[2], (d, rh)) * s).astype(dtype),
+        # up-projections latent -> per-head k_nope / v
+        "w_uk": (jax.random.normal(ks[3], (r, H, hd)) * r ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(ks[4], (r, H, vh)) * r ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (H, vh, d)) * (H * vh) ** -0.5).astype(dtype),
+    }
+
+
+def _latent(params, x, positions, cfg: ModelConfig):
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,1,rh)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def _queries(params, x, positions, cfg: ModelConfig):
+    hd, rh = cfg.resolved_head_dim, cfg.rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,H,hd+rh)
+
+
+def _expand_kv(params, c_kv, k_rope, H):
+    """latent (B,S,r), k_rope (B,S,rh) -> k (B,S,H,hd+rh), v (B,S,H,vh)."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (*k_nope.shape[:2], H, k_rope.shape[-1]))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return k, v
+
+
+def mla_forward(params, x, cfg: ModelConfig, positions, q_block: int = 512,
+                global_layer: bool = False):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = _queries(params, x, positions, cfg)
+    c_kv, k_rope = _latent(params, x, positions, cfg)
+    k, v = _expand_kv(params, c_kv, k_rope, H)
+    q = lconstraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = lconstraint(k, ("batch", "seq", "heads", "head_dim"))
+    v = lconstraint(v, ("batch", "seq", "heads", "head_dim"))
+    out = rowblock_attention(q, k, v, positions, cfg, global_layer=True,
+                             q_block=q_block)
+    out = lconstraint(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return lconstraint(y, ("batch", "seq", None))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, x, cache, cur_index, cfg: ModelConfig):
+    """One-token MLA decode from the latent cache."""
+    B = x.shape[0]
+    H, hd, rh = cfg.num_heads, cfg.resolved_head_dim, cfg.rope_head_dim
+    positions = jnp.full((B, 1), cur_index, jnp.int32)
+    q = _queries(params, x, positions, cfg)          # (B,1,H,hd+rh)
+    c_new, kr_new = _latent(params, x, positions, cfg)
+    # one-hot select: a DUS at a traced index into the sequence-sharded
+    # cache makes GSPMD gather it (see attention_decode)
+    L = cache["c_kv"].shape[1]
+    hit = (jnp.arange(L) == cur_index)[None, :, None]
+    c = jnp.where(hit, c_new.astype(cache["c_kv"].dtype), cache["c_kv"])
+    kr = jnp.where(hit, kr_new.astype(cache["k_rope"].dtype),
+                   cache["k_rope"])
+
+    # absorbed attention: score = q_nope·(c W_uk) + q_rope·k_rope
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    # project q_nope into latent space: (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope.astype(jnp.float32),
+                       params["w_uk"].astype(jnp.float32))
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c.astype(jnp.float32))
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    scores = (s_lat + s_rope) * ((hd + rh) ** -0.5)
+    L = c.shape[1]
+    valid = jnp.arange(L) <= cur_index
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    # out in latent space then up-project with W_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", w, c.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhk->bshk", o_lat,
+                     params["w_uv"].astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c, "k_rope": kr}

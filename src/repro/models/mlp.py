@@ -1,0 +1,33 @@
+"""Dense MLP blocks: SwiGLU (llama-style) and GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import lconstraint
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d_model ** -0.5, d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+def mlp_forward(params, x, act: str):
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    up = lconstraint(up, ("batch", "seq", "mlp"))
+    if act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        gate = lconstraint(gate, ("batch", "seq", "mlp"))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    return lconstraint(y, ("batch", "seq", None))

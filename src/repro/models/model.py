@@ -1,0 +1,185 @@
+"""The language/encoder model: embedding → scanned block groups → head.
+
+Layers are grouped into `cfg.num_groups` identical repeating groups; group
+parameters are stacked along a leading axis and the groups are traversed
+with `lax.scan`, so the lowered HLO is depth-independent (an 80-layer
+qwen1.5-110b compiles as fast as a 2-layer smoke model).  The scan body is
+optionally rematerialised (`cfg.remat == "block"`).
+
+Modality frontends (audio conv codec / vision tower) are stubs per the
+assignment: `input_specs` feeds precomputed frame/patch embeddings and the
+model owns only the learned projection into d_model.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (init_layer, init_layer_cache, layer_decode,
+                                 layer_forward)
+from repro.models.config import ModelConfig
+from repro.models.norms import apply_norm, init_norm
+from repro.parallel.sharding import lconstraint
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------ init
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    cfg.validate()
+    dtype = _dtype(cfg)
+    k_emb, k_groups, k_head, k_fe = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+
+    if cfg.frontend != "audio":
+        params["embed"] = (jax.random.normal(
+            k_emb, (cfg.vocab_size, cfg.d_model)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    if cfg.frontend is not None:
+        k1, k2 = jax.random.split(k_fe)
+        fd = cfg.frontend_dim
+        params["frontend_proj"] = {
+            "w1": (jax.random.normal(k1, (fd, cfg.d_model)) * fd ** -0.5
+                   ).astype(dtype),
+            "w2": (jax.random.normal(k2, (cfg.d_model, cfg.d_model))
+                   * cfg.d_model ** -0.5).astype(dtype),
+        }
+
+    group_keys = jax.random.split(k_groups, cfg.num_groups)
+
+    def init_group(k):
+        lk = jax.random.split(k, len(cfg.block_pattern))
+        return tuple(
+            init_layer(lk[j], mixer, ffn, cfg, dtype)
+            for j, (mixer, ffn) in enumerate(cfg.block_pattern))
+
+    params["groups"] = jax.vmap(init_group)(group_keys)
+    params["final_norm"] = init_norm(cfg.norm, cfg.d_model)
+    if cfg.frontend == "audio" or not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    return params
+
+
+# ------------------------------------------------------------- embedding
+
+def embed_inputs(params, batch: Dict[str, Any], cfg: ModelConfig):
+    """Returns (x (B,S,D), positions (B,S))."""
+    dtype = _dtype(cfg)
+    if cfg.frontend == "audio":
+        feats = batch["features"].astype(dtype)           # (B, S, fd)
+        w = params["frontend_proj"]
+        x = jnp.einsum("bsf,fd->bsd", feats, w["w1"])
+        x = jnp.einsum("bsd,de->bse", jax.nn.gelu(x), w["w2"])
+    elif cfg.frontend == "vision":
+        img = batch["image_embeds"].astype(dtype)         # (B, N, fd)
+        w = params["frontend_proj"]
+        xi = jnp.einsum("bsf,fd->bsd", img, w["w1"])
+        xi = jnp.einsum("bsd,de->bse", jax.nn.gelu(xi), w["w2"])
+        xt = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = jnp.concatenate([xi, xt], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = lconstraint(x, ("batch", "seq", None))
+    return x, positions
+
+
+# --------------------------------------------------------------- forward
+
+def forward(params, batch: Dict[str, Any], cfg: ModelConfig,
+            q_block: int = 512):
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    x, positions = embed_inputs(params, batch, cfg)
+
+    def group_body(x, group_params):
+        aux = jnp.zeros((), jnp.float32)
+        for j, (mixer, ffn) in enumerate(cfg.block_pattern):
+            x, a = layer_forward(group_params[j], x, mixer, ffn, cfg,
+                                 positions, q_block=q_block)
+            aux = aux + a
+        return x, aux
+
+    body = group_body
+    if cfg.remat == "block":
+        body = jax.checkpoint(group_body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(x, gp):
+        return body(x, gp)
+
+    x, auxs = jax.lax.scan(scan_body, x, params["groups"])
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = lconstraint(logits, ("batch", "seq", "vocab"))
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig,
+            q_block: int = 512):
+    """Cross-entropy LM / masked-prediction loss.  Returns (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg, q_block=q_block)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # loss only over the text region (image tokens are prefix)
+        logits = logits[:, cfg.num_image_tokens:]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if "loss_mask" in batch:
+        mask = batch["loss_mask"].astype(jnp.float32)
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------- decode
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Stacked per-group KV/state cache pytree."""
+    dtype = _dtype(cfg)
+
+    def one_group(_):
+        return tuple(
+            init_layer_cache(mixer, cfg, batch, max_seq, dtype)
+            for (mixer, ffn) in cfg.block_pattern)
+
+    caches = [one_group(g) for g in range(cfg.num_groups)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *caches) \
+        if cfg.num_groups > 1 else jax.tree.map(lambda x: x[None], caches[0])
+
+
+def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
+    """One-token decode.  tokens: (B, 1) int32; cur_index: scalar int32
+    (number of tokens already in the cache).  Returns (logits, new_cache)."""
+    dtype = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    x = lconstraint(x, ("batch", "seq", None))
+
+    def scan_body(x, xs):
+        gp, gcache = xs
+        new_caches = []
+        for j, (mixer, ffn) in enumerate(cfg.block_pattern):
+            x, nc = layer_decode(gp[j], x, gcache[j], cur_index, mixer, ffn,
+                                 cfg)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["groups"], cache))
+    x = apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = lconstraint(logits, ("batch", "seq", "vocab"))
+    return logits, new_cache

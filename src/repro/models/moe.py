@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN (GShard/t5x-style grouped masked dispatch).
+
+Tokens are partitioned into fixed-size *groups* (`cfg.moe_group_size`,
+default 512); each group dispatches into per-expert capacity buffers with
+one-hot einsums.  Grouping bounds both the dispatch tensor
+(groups × Sg × E × C) and the dispatch FLOPs at O(tokens · E · C · d) with
+C = Sg·k·cf/E — without grouping, capacity scales with the full token
+count and masked dispatch degenerates to O(T²·d) (measured: 20× the FFN
+FLOPs on deepseek prefill_32k).  Groups are batch-like and shard over the
+(pod, data) axes; the expert axis shards over `model` (expert parallelism
+— the dispatch/combine einsums lower to all-to-alls on the mesh).
+
+Shared experts (DeepSeek / llama4) run densely on every token.  Returns
+the Switch/GShard load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.parallel.sharding import lconstraint
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, E = cfg.d_model, cfg.num_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    kr, ke, ks = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "router": (jax.random.normal(kr, (d, E)) * s_in).astype(jnp.float32),
+        "experts": {
+            "w_gate": (jax.random.normal(k1, (E, d, ff)) * s_in).astype(dtype),
+            "w_up": (jax.random.normal(k2, (E, d, ff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (E, ff, d)) * s_out).astype(dtype),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks, d, ff * cfg.num_shared_experts, "swiglu",
+                               dtype)
+    return p
+
+
+def _group_size(cfg: ModelConfig, T: int) -> int:
+    sg = getattr(cfg, "moe_group_size", 512) or 512
+    if T % sg:
+        sg = T            # tiny batches (decode): one group
+    return min(sg, T)
+
+
+def _capacity(sg: int, cfg: ModelConfig) -> int:
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = int(sg * k * cfg.moe_capacity_factor / E)
+    cap = max(cap, k, 4)
+    return ((cap + 3) // 4) * 4
+
+
+def moe_forward(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    B, S, D = x.shape
+    E, topk = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    sg = _group_size(cfg, T)
+    G = T // sg
+    xg = x.reshape(G, sg, D)
+    xg = lconstraint(xg, ("batch", None, None))
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G,sg,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)            # (G,sg,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- load-balance aux (Switch): E * sum_e f_e * p_e  (global means)
+    me = jnp.mean(probs, axis=(0, 1))
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)     # (G,sg,k,E)
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- capacity-limited positions within each group's expert queue
+    C = _capacity(sg, cfg)
+    flat = onehot.reshape(G, sg * topk, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G,sg*k,E)
+    pos_in_e = jnp.sum(pos * flat, axis=-1).reshape(G, sg, topk)
+    keep = pos_in_e < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos_in_e, C), C + 1,
+                            dtype=jnp.float32)[..., :C]          # (G,sg,k,C)
+    masked_oh = onehot * keep[..., None]
+    dispatch = jnp.einsum("gske,gskc->gsec", masked_oh, pos_oh)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot, pos_oh, gate_vals)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(jnp.float32))
+    xe = xe.astype(x.dtype)
+    xe = lconstraint(xe, ("batch", "experts", None, None))
+
+    ep = params["experts"]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, ep["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, ep["w_up"])
+    h = lconstraint(h, ("batch", "experts", None, None))
+    ye = jnp.einsum("gecf,efd->gecd", h, ep["w_down"])
+    ye = lconstraint(ye, ("batch", "experts", None, None))
+
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye.astype(jnp.float32))
+    y = y.astype(x.dtype).reshape(B, S, D)
+
+    if "shared" in params:
+        y = y + mlp_forward(params["shared"], x, "swiglu")
+    return lconstraint(y, ("batch", "seq", None)), aux

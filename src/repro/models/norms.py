@@ -1,0 +1,39 @@
+"""Normalization layers (functional, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_norm(kind: str, dim: int, dtype=jnp.float32):
+    return init_rmsnorm(dim, dtype) if kind == "rmsnorm" else init_layernorm(dim, dtype)
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-5):
+    return rmsnorm(params, x, eps) if kind == "rmsnorm" else layernorm(params, x, eps)

@@ -1,0 +1,263 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM uses a stabilized *chunkwise-parallel* formulation (linear-attention
+style): an outer lax.scan carries (C, n, m) across chunks; within a chunk
+the update is dense matmuls — MXU-friendly, with fp32 stabilizer state.
+sLSTM has recurrent gate connections and is inherently sequential: a
+lax.scan over time with block-diagonal (per-head) recurrent weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import lconstraint
+
+MLSTM_CHUNK = 64
+
+
+# ================================================================= mLSTM
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = int(cfg.xlstm_proj_factor * d)
+    H = cfg.num_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+    s, si = d ** -0.5, di ** -0.5
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, di)) * s).astype(dtype),
+        "w_z": (jax.random.normal(ks[1], (d, di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.xlstm_conv, di))
+                   * cfg.xlstm_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "lq": (jax.random.normal(ks[3], (di, H, dh)) * si).astype(dtype),
+        "lk": (jax.random.normal(ks[4], (di, H, dh)) * si).astype(dtype),
+        "lv": (jax.random.normal(ks[5], (di, H, dh)) * si).astype(dtype),
+        # scalar input/forget gates per head
+        "w_if": (jax.random.normal(ks[6], (di, H, 2)) * si).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H, 1)), jnp.full((H, 1), 3.0)],
+                                axis=-1).astype(jnp.float32),
+        "gn_scale": jnp.ones((H, dh), jnp.float32),
+        "w_down": (jax.random.normal(ks[7], (di, d)) * si).astype(dtype),
+    }
+
+
+def _mlstm_qkv_gates(params, x, cfg, conv_state=None):
+    u = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    dc = cfg.xlstm_conv
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], dc - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([conv_state, u], axis=1)
+    xc = sum(up[:, i:i + u.shape[1]] * params["conv_w"][i] for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"])
+    new_conv = up[:, -(dc - 1):]
+    q = jnp.einsum("bse,ehk->bshk", xc, params["lq"])
+    k = jnp.einsum("bse,ehk->bshk", xc, params["lk"])
+    v = jnp.einsum("bse,ehk->bshk", u, params["lv"])
+    gates = jnp.einsum("bse,ehg->bshg", xc.astype(jnp.float32), params["w_if"]) \
+        + params["b_if"]
+    li = gates[..., 0]                       # log input gate (B,S,H)
+    lf = jax.nn.log_sigmoid(gates[..., 1])   # log forget gate
+    return q, k, v, li, lf, z, new_conv
+
+
+def _headnorm(h, scale, eps=1e-5):
+    """Per-head RMS norm over dh.  h: (..., H, dh) fp32."""
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(var + eps) * scale
+
+
+def _mlstm_chunk(carry, inp, dh):
+    """One chunk.  carry: (C (B,H,dh,dh), n (B,H,dh), m (B,H)) fp32.
+    inp: q,k,v (B,c,H,dh), li,lf (B,c,H)."""
+    C0, n0, m0 = carry
+    q, k, v, li, lf = inp
+    q = q.astype(jnp.float32) * dh ** -0.5
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    b = jnp.cumsum(lf, axis=1)                                   # (B,c,H)
+    # intra-chunk log weights: D[t,s] = b_t - b_s + li_s  (s<=t)
+    ld = b[:, :, None, :] - b[:, None, :, :] + li[:, None, :, :]  # (B,t,s,H)
+    c = q.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    ld = jnp.where(tri[None, :, :, None], ld, -jnp.inf)
+    m_intra = jnp.max(ld, axis=2)                                # (B,t,H)
+    m_inter = b + m0[:, None, :]
+    m_t = jnp.maximum(m_inter, m_intra)
+    m_t = jnp.maximum(m_t, -30.0)
+
+    Dw = jnp.exp(ld - m_t[:, :, None, :])                        # (B,t,s,H)
+    qk = jnp.einsum("bthd,bshd->btsh", q, k)
+    w = Dw * qk
+    h_intra = jnp.einsum("btsh,bshd->bthd", w, v)
+    inter_scale = jnp.exp(m_inter - m_t)                          # (B,t,H)
+    h_inter = jnp.einsum("bthd,bhde->bthe", q, C0) * inter_scale[..., None]
+    n_inter = jnp.einsum("bthd,bhd->bth", q, n0) * inter_scale
+    n_intra = jnp.sum(w, axis=2)                                  # Σ_s Dw·qk
+    h = h_intra + h_inter
+    n = n_intra + n_inter
+    denom = jnp.maximum(jnp.abs(n), jnp.exp(-m_t))[..., None]
+    out = h / denom                                               # (B,c,H,dh)
+
+    # ---- end-of-chunk state
+    bc = b[:, -1, :]                                              # (B,H)
+    m_state = jnp.maximum(bc + m0, jnp.max(bc[:, None] - b + li, axis=1))
+    m_state = jnp.maximum(m_state, -30.0)
+    sw = jnp.exp(bc[:, None] - b + li - m_state[:, None])         # (B,c,H)
+    C_new = jnp.exp(bc + m0 - m_state)[:, :, None, None] * C0 \
+        + jnp.einsum("bch,bchd,bche->bhde", sw, k, v)
+    n_new = jnp.exp(bc + m0 - m_state)[:, :, None] * n0 \
+        + jnp.einsum("bch,bchd->bhd", sw, k)
+    return (C_new, n_new, m_state), out
+
+
+def mlstm_forward(params, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    di = int(cfg.xlstm_proj_factor * D)
+    dh = di // H
+    q, k, v, li, lf, z, _ = _mlstm_qkv_gates(params, x, cfg)
+    c = min(MLSTM_CHUNK, S)
+    assert S % c == 0
+    n = S // c
+    resh = lambda t: t.reshape(B, n, c, *t.shape[2:]).swapaxes(0, 1)
+    carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+             jnp.zeros((B, H, dh), jnp.float32),
+             jnp.zeros((B, H), jnp.float32))
+    chunk_fn = lambda cr, inp: _mlstm_chunk(cr, inp, dh)
+    if cfg.remat != "none":
+        chunk_fn = jax.checkpoint(chunk_fn)
+    (_, _, _), outs = jax.lax.scan(
+        chunk_fn, carry,
+        (resh(q), resh(k), resh(v), resh(li), resh(lf)))
+    h = outs.swapaxes(0, 1).reshape(B, S, H, dh)
+    h = _headnorm(h, params["gn_scale"]).reshape(B, S, di).astype(x.dtype)
+    y = h * jax.nn.silu(z)
+    y = lconstraint(y, ("batch", "seq", "inner"))
+    return jnp.einsum("bse,ed->bsd", y, params["w_down"])
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = di // H
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm_conv - 1, di), dtype),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -30.0, jnp.float32),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg: ModelConfig):
+    """x: (B, 1, D) -> (y, cache). Recurrent mLSTM step."""
+    H = cfg.num_heads
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dh = di // H
+    q, k, v, li, lf, z, conv = _mlstm_qkv_gates(params, x, cfg, cache["conv"])
+    q = q[:, 0].astype(jnp.float32) * dh ** -0.5
+    k = k[:, 0].astype(jnp.float32)
+    v = v[:, 0].astype(jnp.float32)
+    li, lf = li[:, 0], lf[:, 0]                                    # (B,H)
+    m_new = jnp.maximum(lf + cache["m"], li)
+    m_new = jnp.maximum(m_new, -30.0)
+    fdec = jnp.exp(lf + cache["m"] - m_new)[:, :, None]
+    iexp = jnp.exp(li - m_new)[:, :, None]
+    # C[d, e] = k_d v_e — same layout as the chunkwise state update
+    C = fdec[..., None] * cache["C"] + iexp[..., None] * k[:, :, :, None] \
+        * v[:, :, None, :]
+    nst = fdec * cache["n"] + iexp * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", nst, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = _headnorm(num / den, params["gn_scale"])
+    h = h.reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_down"])
+    return out, {"conv": conv, "C": C, "n": nst, "m": m_new}
+
+
+# ================================================================= sLSTM
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    # gates: z, i, f, o
+    return {
+        "w_x": (jax.random.normal(ks[0], (d, 4, d)) * s).astype(jnp.float32),
+        "r_h": (jax.random.normal(ks[1], (H, dh, 4, dh)) * dh ** -0.5
+                ).astype(jnp.float32),
+        "b": jnp.zeros((4, d), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "w_up": (jax.random.normal(ks[2], (d, int(4 * d / 3))) * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (int(4 * d / 3), d))
+                   * (4 * d / 3) ** -0.5).astype(dtype),
+    }
+
+
+def _slstm_step(params, xg, state, H, dh):
+    """xg: (B, 4, d) pre-computed W_x x + b; state: (c,n,m,h) each (B,d)."""
+    c0, n0, m0, h0 = state
+    hh = h0.reshape(-1, H, dh)
+    rec = jnp.einsum("bhd,hdge->bhge", hh, params["r_h"])
+    g = xg + rec.reshape(xg.shape[0], 4, H * dh)
+    z = jnp.tanh(g[:, 0])
+    li = g[:, 1]
+    lf = jax.nn.log_sigmoid(g[:, 2])
+    o = jax.nn.sigmoid(g[:, 3])
+    m1 = jnp.maximum(lf + m0, li)
+    m1 = jnp.maximum(m1, -30.0)
+    fdec = jnp.exp(lf + m0 - m1)
+    iexp = jnp.exp(li - m1)
+    c1 = fdec * c0 + iexp * z
+    n1 = fdec * n0 + iexp
+    h1 = o * c1 / jnp.maximum(n1, 1e-6)
+    return (c1, n1, m1, h1)
+
+
+def slstm_forward(params, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    xg = jnp.einsum("bsd,dge->bsge", x.astype(jnp.float32), params["w_x"]) \
+        + params["b"]
+
+    def body(state, xg_t):
+        new = _slstm_step(params, xg_t, state, H, dh)
+        return new, new[3]
+
+    zeros = jnp.zeros((B, D), jnp.float32)
+    init = (zeros, zeros, jnp.full((B, D), -30.0), zeros)
+    _, hs = jax.lax.scan(body, init, xg.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                                         # (B,S,D)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    h = (h * jax.lax.rsqrt(var + 1e-5) * params["gn_scale"]).astype(x.dtype)
+    up = jnp.einsum("bsd,de->bse", h, params["w_up"])
+    return jnp.einsum("bse,ed->bsd", jax.nn.gelu(up), params["w_down"])
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -30.0, jnp.float32),
+            "h": z}
+
+
+def slstm_decode(params, x, cache, cfg: ModelConfig):
+    B, _, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    xg = jnp.einsum("bsd,dge->bsge", x.astype(jnp.float32), params["w_x"])[:, 0] \
+        + params["b"]
+    c1, n1, m1, h1 = _slstm_step(
+        params, xg, (cache["c"], cache["n"], cache["m"], cache["h"]), H, dh)
+    var = jnp.mean(jnp.square(h1), axis=-1, keepdims=True)
+    h = (h1 * jax.lax.rsqrt(var + 1e-5) * params["gn_scale"]).astype(x.dtype)
+    up = jnp.einsum("bd,de->be", h, params["w_up"])
+    y = jnp.einsum("be,ed->bd", jax.nn.gelu(up), params["w_down"])[:, None]
+    return y, {"c": c1, "n": n1, "m": m1, "h": h1}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (adamw, momentum, sgd,  # noqa: F401
+                                    Optimizer)

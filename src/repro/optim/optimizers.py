@@ -1,0 +1,110 @@
+"""Native pytree optimizers (optax-style (init, update) pairs).
+
+update(grads, state, params) -> (updates, new_state); apply with
+params + updates.  All state is fp32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def _cast_like(src, ref):
+    return jax.tree.map(lambda s, r: s.astype(r.dtype), src, ref)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        updates = jax.tree.map(lambda g: (-lr * g.astype(jnp.float32)), grads)
+        return _cast_like(updates, params), {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False
+             ) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: -lr * (beta * m + g.astype(jnp.float32)),
+                mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+        return _cast_like(upd, params), {"count": state["count"] + 1,
+                                         "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          lr_schedule: Optional[Callable] = None) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(z, params),
+                "nu": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        step_lr = lr_schedule(c) * lr if lr_schedule else lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                          * g.astype(jnp.float32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        cf = c.astype(jnp.float32)
+        bc1 = 1 - b1 ** cf
+        bc2 = 1 - b2 ** cf
+
+        def u(m, v, p):
+            upd = -step_lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                              + weight_decay * p.astype(jnp.float32))
+            return upd
+        upd = jax.tree.map(u, mu, nu, params)
+        return _cast_like(upd, params), {"count": c, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+    def update(grads, state, params):
+        leaves = jax.tree.leaves(jax.tree.map(
+            lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), grads))
+        gnorm = jnp.sqrt(sum(leaves))
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def cosine_warmup(warmup: int, total: int, floor: float = 0.1):
+    """lr multiplier schedule."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return f

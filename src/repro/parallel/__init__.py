@@ -1,0 +1,1 @@
+from repro.parallel.sharding import axis_rules, lconstraint, logical_sharding  # noqa: F401

@@ -1,0 +1,266 @@
+"""Parameter partitioning: key-path → logical axis names.
+
+FSDP axis = "embed" (maps to mesh `data`), tensor axes = "heads"/"mlp"/
+"vocab"/"experts"/"inner"/"embed_tensor" (map to mesh `model`).  Every
+leaf under `params["groups"]` carries a leading group-stack dim (the scan
+axis), which is never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.parallel.sharding import logical_sharding, logical_spec
+
+
+def _resolve(path: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    name = path[-1]
+    joined = "/".join(path)
+    grouped = path[0] == "groups"
+
+    def g(*names):
+        """Prepend the unsharded group-stack axis when inside groups."""
+        out = (None,) + names if grouped else names
+        assert len(out) == ndim, (joined, ndim, out)
+        return out
+
+    # --- embedding / head / frontend
+    if name == "embed":
+        return ("vocab", "embed")
+    if name == "lm_head":
+        return ("embed", "vocab")
+    if joined.startswith("frontend_proj"):
+        return (None, "embed_tensor") if name == "w1" else ("embed_tensor", None)
+
+    # --- norms
+    if name in ("scale", "bias"):
+        return (None,) * ndim
+    if name == "gn_scale":
+        return g("heads", None) if ndim - int(grouped) == 2 else g(None)
+
+    # --- attention family
+    if name == "wq":
+        return g("embed", "heads", None)
+    if name in ("wk", "wv"):
+        return g("embed", "kv_heads", None)
+    if name in ("lq", "lk", "lv"):                 # mLSTM qkv (di, H, dh)
+        return g("embed", None, None)
+    if name == "wo":
+        return g("heads", None, "embed")
+    if name in ("bq", "bk", "bv"):
+        return g("heads" if name == "bq" else "kv_heads", None)
+    if name == "w_dkv" or name == "w_kr":
+        return g("embed", None)
+    if name in ("w_uk", "w_uv"):
+        return g(None, "heads", None)
+
+    # --- MoE
+    if "experts" in path:
+        if name in ("w_gate", "w_up"):
+            return g("experts", "embed", None)
+        if name == "w_down":
+            return g("experts", None, "embed")
+    if name == "router":
+        return g("embed", None)
+
+    # --- MLP (incl. moe shared expert, xlstm block projections)
+    if name in ("w_up", "w_gate", "w_z"):
+        return g("embed", "mlp")
+    if name == "w_down":
+        return g("mlp", "embed")
+
+    # --- mamba
+    if name == "w_in":
+        return g("embed", "inner")
+    if name == "conv_w":
+        return g(None, "inner")
+    if name == "conv_b":
+        return g("inner")
+    if name == "w_x":
+        if ndim - int(grouped) == 3:          # slstm (d, 4, d)
+            return g("embed", None, "embed_tensor")
+        return g("inner", None)               # mamba (di, dt+2s)
+    if name == "w_dt":
+        return g(None, "inner")
+    if name in ("dt_bias", "D"):
+        return g("inner")
+    if name == "A_log":
+        return g("inner", None)
+    if name == "w_out":
+        return g("inner", "embed")
+
+    # --- xlstm extras
+    if name == "w_if":
+        return g("embed", None, None)
+    if name == "b_if":
+        return g(None, None)
+    if name == "r_h":
+        return g("heads", None, None, None)
+    if name == "b":
+        return g(None, "embed_tensor")
+
+    return (None,) * ndim
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def param_logical_tree(params) -> Any:
+    """Parallel pytree of logical-axis tuples."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names = []
+    for path, leaf in flat:
+        # drop numeric tuple indices; keep the 'groups' marker for matching
+        key = tuple(n for n in _path_names(path) if not n.isdigit())
+        names.append(_resolve(key, leaf.ndim))
+    return jax.tree_util.tree_unflatten(treedef, names)
+
+
+def sanitize_sharding(sharding, shape):
+    """Drop mesh axes from dims they don't divide evenly (jit in_shardings
+    requires exact divisibility; e.g. 8 kv-heads can't shard over a 16-way
+    model axis, 4 xLSTM heads can't shard at all)."""
+    if sharding is None:
+        return None
+    mesh = sharding.mesh
+    spec = sharding.spec
+    new = []
+    for dim, axes in enumerate(tuple(spec) + (None,) * (len(shape)
+                                                        - len(spec))):
+        if axes is None:
+            new.append(None)
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        kept = []
+        size = shape[dim]
+        for a in axes_t:
+            n = mesh.shape[a]
+            if size % n == 0:
+                kept.append(a)
+                size //= n
+        if not kept:
+            new.append(None)
+        elif len(kept) == 1:
+            new.append(kept[0])
+        else:
+            new.append(tuple(kept))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(*new))
+
+
+def param_shardings(params):
+    """NamedShardings for every param leaf (requires installed axis_rules)."""
+    logical = param_logical_tree(params)
+    from repro.parallel.sharding import active_mesh
+    if active_mesh() is None:
+        return jax.tree.map(lambda _: None, params)
+    shardings = jax.tree_util.tree_map(
+        lambda names: logical_sharding(names), logical,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v))
+    return jax.tree.map(lambda s, p: sanitize_sharding(s, p.shape),
+                        shardings, params)
+
+
+def cache_shardings(cache, batch_size: int, mesh):
+    """Decode-cache shardings.
+
+    Two regimes: (a) batch >= data axis — shard batch over (pod×)data and
+    kv-heads/channels over model; (b) tiny batch (long_500k B=1) — shard
+    the sequence dim of KV caches over `data` and fat channel dims over
+    (data, model).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsz = 1
+    for a in batch_axes:
+        dsz *= mesh.shape[a]
+    msz = mesh.shape["model"]
+    batch_mode = batch_size % dsz == 0
+
+    def div(n, axis_names):
+        """axis tuple if n divides evenly, else None."""
+        total = 1
+        for a in axis_names:
+            total *= mesh.shape[a]
+        if n % total == 0:
+            return axis_names if len(axis_names) > 1 else axis_names[0]
+        return None
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        nd = leaf.ndim
+        # dims: 0 = group stack, 1 = batch
+        if batch_mode:
+            b = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+            if name in ("k", "v"):                    # (G,B,L,KV,hd)
+                # kv-heads rarely divide the 16-way model axis (GQA kv=8),
+                # so shard the *sequence* dim of the cache over `model`:
+                # decode attention contracts over L, which GSPMD partitions
+                # with a partial-softmax reduce instead of gathering 100s
+                # of GiB of cache.
+                kvh = div(leaf.shape[3], ("model",))
+                if kvh is not None:
+                    return P(None, b, None, kvh, None)
+                return P(None, b, div(leaf.shape[2], ("model",)), None, None)
+            if name in ("c_kv", "k_rope"):            # (G,B,L,r)
+                return P(None, b, div(leaf.shape[2], ("model",)), None)
+            rest = [None] * (nd - 2)
+            # shard the fattest trailing dim over model when divisible
+            if nd > 2:
+                rest[-1] = div(leaf.shape[-1], ("model",))
+            return P(None, b, *rest)
+        # tiny-batch regime: shard sequence / channels instead
+        if name in ("k", "v"):
+            kvh = div(leaf.shape[3], ("model",))
+            seq_axes = ("data",) if kvh is not None else ("data", "model")
+            return P(None, None, div(leaf.shape[2], seq_axes), kvh, None)
+        if name in ("c_kv", "k_rope"):
+            return P(None, None, div(leaf.shape[2], ("data", "model")), None)
+        if name == "conv":                             # (G,B,dc-1,di)
+            return P(None, None, None, div(leaf.shape[3], ("data", "model")))
+        if name == "h" and nd == 4:                    # mamba h (G,B,di,ds)
+            return P(None, None, div(leaf.shape[2], ("data", "model")), None)
+        if name == "C":                                # mlstm (G,B,H,dh,dh)
+            return P(None, None, None, div(leaf.shape[3], ("data", "model")),
+                     None)
+        if name == "n" and nd == 4:                    # mlstm n (G,B,H,dh)
+            return P(None, None, None, div(leaf.shape[3], ("data", "model")))
+        if nd == 3:                                    # slstm states (G,B,d)
+            return P(None, None, div(leaf.shape[2], ("data", "model")))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [NamedSharding(mesh, spec_for(
+        tuple(n for n in _path_names(p) if not n.isdigit()) or ("x",), leaf))
+        for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(opt_state, params):
+    """Optimizer state shards exactly like its mirrored params (mu/nu);
+    scalars replicate."""
+    pshard = param_shardings(params)
+
+    def walk(state):
+        out = {}
+        for k, v in state.items():
+            if k in ("mu", "nu"):
+                out[k] = pshard
+            else:
+                out[k] = jax.tree.map(lambda _: logical_sharding(()), v)
+        return out
+
+    return walk(opt_state)

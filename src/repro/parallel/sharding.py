@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Layers annotate activations with *logical* axis names; a rule-set installed
+for the active mesh maps logical names to mesh axes.  Without an installed
+rule-set every annotation is a no-op, so the same model code runs on a
+single CPU device (tests) and on the 512-chip production mesh (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default logical->mesh rules for the production mesh.
+#  - "batch" shards over the pod axis too (data parallel across pods).
+#  - "embed" is the FSDP axis (weights' d_model dim over `data`).
+#  - "heads"/"mlp"/"vocab"/"experts" are the tensor axes (over `model`).
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq": None,
+    "seq_shard": "data",        # long-context cache sharding over sequence
+    "embed": "data",            # fsdp axis for weights
+    "embed_tensor": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "inner": "model",           # ssm / xlstm inner channels
+    "state": None,
+    "buffer": None,             # hybrid gradient-buffer slot axis
+}
+
+
+class _RuleState(threading.local):
+    def __init__(self):
+        self.rules: Optional[Dict[str, MeshAxes]] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_STATE = _RuleState()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+    """Install logical sharding rules (and the mesh) for the enclosed scope."""
+    prev = (_STATE.rules, _STATE.mesh)
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    if mesh is not None and "pod" not in mesh.axis_names:
+        rules = {k: _drop_axis(v, "pod") for k, v in rules.items()}
+    _STATE.rules, _STATE.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _STATE.rules, _STATE.mesh = prev
+
+
+def _drop_axis(axes: MeshAxes, name: str) -> MeshAxes:
+    if axes is None or axes == name:
+        return None if axes == name else axes
+    if isinstance(axes, tuple):
+        kept = tuple(a for a in axes if a != name)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return axes
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def logical_spec(names: Sequence[Optional[str]]) -> P:
+    rules = _STATE.rules if _STATE.rules is not None else {}
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def logical_sharding(names: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    if _STATE.mesh is None:
+        return None
+    return NamedSharding(_STATE.mesh, logical_spec(names))
+
+
+def lconstraint(x, names: Sequence[Optional[str]]):
+    """Annotate `x` with logical axes; no-op when no rules are installed.
+
+    Axes that don't divide the dim evenly are dropped (GSPMD would accept
+    the constraint with padding, e.g. 8 kv-heads over a 16-way model axis,
+    and then every consumer pays gather/permute traffic on the padded
+    shards — measured +1.6 TB/step on qwen2.5-32b train_4k)."""
+    if _STATE.mesh is None or _STATE.rules is None:
+        return x
+    if x.ndim != len(names):
+        raise ValueError(f"rank {x.ndim} != logical names {names}")
+    spec = logical_spec(names)
+    clean = []
+    for dim, axes in enumerate(spec):
+        if axes is None:
+            clean.append(None)
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        kept = []
+        size = x.shape[dim]
+        for a in axes_t:
+            n = _STATE.mesh.shape[a]
+            if size % n == 0:
+                kept.append(a)
+                size //= n
+        clean.append(tuple(kept) if len(kept) > 1
+                     else (kept[0] if kept else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_STATE.mesh, P(*clean)))
+
+
+def tree_shardings(logical_tree):
+    """Map a pytree of logical-name tuples to NamedShardings (or None)."""
+    return jax.tree.map(
+        lambda names: logical_sharding(names),
+        logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v),
+    )

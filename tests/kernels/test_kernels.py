@@ -1,0 +1,186 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes (+ hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.hybrid_aggregate import TILE_P
+
+I = dict(interpret=True)
+
+
+# ------------------------------------------------------- hybrid_aggregate
+
+@pytest.mark.parametrize("K", [1, 2, 7, 25])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flush_shapes_dtypes(K, dtype):
+    P = TILE_P * (1 if K > 2 else 2)
+    g = jax.random.normal(jax.random.PRNGKey(K), (K, P)).astype(dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(K + 1), (K,), jnp.float32)
+    w = w / jnp.sum(w)
+    out = ops.hybrid_flush(g, w, **I)
+    want = ref.flush_ref(g, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.9])
+def test_flush_momentum(beta):
+    K, P = 4, TILE_P
+    g = jax.random.normal(jax.random.PRNGKey(0), (K, P))
+    w = jnp.full((K,), 1.0 / K)
+    m = jax.random.normal(jax.random.PRNGKey(1), (P,))
+    u, m2 = ops.hybrid_flush_momentum(g, w, m, beta, **I)
+    ur, mr = ref.flush_momentum_ref(g, w, m, beta)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(ur), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(1, 8), seed=st.integers(0, 2 ** 16),
+       uniform=st.booleans())
+def test_flush_property_conservation(K, seed, uniform):
+    """Property: with uniform weights the flush equals the mean; the flush
+    is linear in the weights (paper's aggregation semantics)."""
+    P = TILE_P
+    g = jax.random.normal(jax.random.PRNGKey(seed), (K, P))
+    if uniform:
+        w = jnp.full((K,), 1.0 / K)
+        out = ops.hybrid_flush(g, w, **I)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(jnp.mean(g, 0)),
+                                   rtol=1e-5, atol=1e-5)
+    else:
+        w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (K,)) + 0.1
+        o1 = ops.hybrid_flush(g, w, **I)
+        o2 = ops.hybrid_flush(g, 2.0 * w, **I)
+        np.testing.assert_allclose(np.asarray(o2), 2 * np.asarray(o1),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flush_matches_buffer_oracle():
+    """The kernel implements repro.core.buffer.aggregate_flush."""
+    from repro.core.buffer import aggregate_flush
+    trees = [{"a": jax.random.normal(jax.random.PRNGKey(i), (300,)),
+              "b": jax.random.normal(jax.random.PRNGKey(i + 9), (11, 7))}
+             for i in range(3)]
+    w = np.array([0.2, 0.5, 0.3])
+    want = aggregate_flush(trees, w)
+    mat = ops.tree_to_flat(trees)
+    out_flat = ops.hybrid_flush(mat, jnp.asarray(w / w.sum()), **I)
+    got = ops.flat_to_tree(out_flat, trees[0])
+    for k in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("shape", [(256, 128), (4, 64, 512), (2, 2, 32, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    y = ops.rmsnorm(x, s, **I)
+    want = ref.rmsnorm_ref(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_matches_model_norm():
+    from repro.models.norms import rmsnorm as model_rmsnorm
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    s = jnp.ones((128,))
+    y = ops.rmsnorm(x, s, **I)
+    want = model_rmsnorm({"scale": s}, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+# --------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("B,S,H,KV,d", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 512, 4, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_shapes(B, S, H, KV, d, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d))
+    k = jax.random.normal(ks[1], (B, S, KV, d))
+    v = jax.random.normal(ks[2], (B, S, KV, d))
+    o = ops.flash_attention(q, k, v, causal=causal, **I)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64)).astype(dtype)
+    o = ops.flash_attention(q, k, v, **I)
+    want = ref.attention_ref(q, k, v)
+    tol = 2e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    o = ops.flash_attention(q, k, v, causal=True, window=window, **I)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       qb=st.sampled_from([64, 128]), kb=st.sampled_from([64, 128]))
+def test_flash_block_size_invariance(seed, qb, kb):
+    """Property: the result must not depend on the tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    o = ops.flash_attention(q, k, v, q_block=qb, kv_block=kb, **I)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_matches_model_rowblock():
+    """Kernel vs the model's rowblock path (the dry-run representation)."""
+    from repro.models.attention import rowblock_attention
+    from repro.models.config import ATTN, MLP, ModelConfig
+    cfg = ModelConfig(name="x", arch_type="dense", d_model=64,
+                      vocab_size=10, block_pattern=((ATTN, MLP),),
+                      num_groups=1, num_heads=4, num_kv_heads=2,
+                      head_dim=16, d_ff=64, dtype="float32", remat="none")
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 16))
+    k = jax.random.normal(ks[1], (2, 256, 2, 16))
+    v = jax.random.normal(ks[2], (2, 256, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(256), (2, 256))
+    want = rowblock_attention(q, k, v, pos, cfg, q_block=128)
+    o = ops.flash_attention(q, k, v, causal=True, q_block=128, kv_block=128,
+                            **I)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,70 @@
+"""Property tests for the SPMD hybrid phase machinery (pure host logic)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import step_schedule, linear_schedule
+from repro.core.spmd_hybrid import (HybridPhase, build_phases,
+                                    min_group_size)
+
+
+@settings(max_examples=30, deadline=None)
+@given(step=st.integers(1, 500), horizon=st.integers(1, 3000),
+       axis=st.sampled_from([2, 4, 8, 16, 32]))
+def test_build_phases_invariants(step, horizon, axis):
+    sched = step_schedule(axis, step)
+    phases = build_phases(sched, horizon, axis)
+    assert phases[0].t_start == 0
+    sizes = [p.group_size for p in phases]
+    starts = [p.t_start for p in phases]
+    assert sizes == sorted(sizes)                 # monotone anneal
+    assert starts == sorted(starts)
+    for p in phases:
+        assert axis % p.group_size == 0           # g divides the axis
+        assert p.num_replicas * p.group_size == axis
+        assert 1 <= p.group_size <= axis
+
+
+@settings(max_examples=20, deadline=None)
+@given(axis=st.sampled_from([4, 8, 16]), horizon=st.integers(10, 500))
+def test_build_phases_reaches_sync(axis, horizon):
+    """A linear schedule over its own horizon must end fully synchronous."""
+    sched = linear_schedule(axis, horizon)
+    phases = build_phases(sched, horizon + 1, axis)
+    assert phases[-1].group_size == axis
+    assert phases[-1].num_replicas == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(g_min=st.sampled_from([1, 2, 4, 8]))
+def test_build_phases_respects_g_min(g_min):
+    sched = step_schedule(16, 10)
+    phases = build_phases(sched, 200, 16, g_min=g_min)
+    assert all(p.group_size >= g_min for p in phases)
+
+
+def test_min_group_size_law():
+    """Replica memory law: per-chip state = (params+opt)/(g·model)."""
+    gib = 2 ** 30
+    # 100B params bf16 + fp32 mu/nu = 10 bytes/param = 1.0 TB state
+    param_b = 100e9 * 2
+    opt_b = 100e9 * 8
+    g = min_group_size(int(param_b), int(opt_b), model_axis=16,
+                       hbm_per_chip=16 * gib, act_budget_frac=0.5)
+    # needs 1e12/(g·16) <= 8 GiB -> g >= 7.3 -> 8
+    assert g == 8
+    # a 350M model fits at g=1
+    g_small = min_group_size(int(0.35e9 * 2), int(0.35e9 * 8),
+                             model_axis=16, hbm_per_chip=16 * gib)
+    assert g_small == 1
+
+
+def test_reshard_replicas_merge_down_averages():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.spmd_hybrid import reshard_replicas
+    p = {"w": jnp.arange(8.0).reshape(4, 2)}     # 4 replicas of shape (2,)
+    out = reshard_replicas(p, 2)
+    np.testing.assert_allclose(
+        np.asarray(out["w"]),
+        np.asarray([[1.0, 2.0], [5.0, 6.0]]))    # mean of consecutive pairs
