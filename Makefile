@@ -1,0 +1,27 @@
+# Developer / CI entry points.  Everything runs on CPU; multi-device
+# scenarios use XLA's forced host devices.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test quickstart smoke-sim smoke-train examples
+
+test:
+	$(PY) -m pytest -x -q
+
+quickstart:
+	$(PY) examples/quickstart.py
+
+# seconds-scale simulator run through the unified CLI (CI smoke)
+smoke-sim:
+	$(PY) -m repro simulate --smoke --out /tmp/repro_sim_smoke.json
+
+# SPMD hybrid annealing g: 1 -> 2 on two forced host devices
+smoke-train:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	$(PY) -m repro run --backend spmd --arch xlstm-350m --smoke \
+	    --steps 8 --mode hybrid --schedule step:4 --batch 4 --seq 32 \
+	    --out /tmp/repro_spmd_smoke.json
+
+examples:
+	$(PY) examples/quickstart.py
+	$(PY) examples/threshold_functions.py

@@ -20,8 +20,8 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.schedule import step_schedule
-from repro.core.simulator import PSTrainer, WorkerPool
+from repro.api import ExperimentSpec, SimulatorTrainer
+from repro.core.simulator import WorkerPool
 from repro.data.synthetic import (cifar10_like, mnist_like,
                                   random_classification)
 from repro.models.cnn import (accuracy, cnn_forward, init_cnn, init_mlp_clf,
@@ -64,13 +64,13 @@ def run_comparison(setup, *, workers, horizon, batch, step_size,
         loss, params, data, acc = setup(seed0 + r)
         pool = WorkerPool(num_workers=workers, base_compute=BASE_COMPUTE,
                           **(pool_kwargs or {}))
-        tr = PSTrainer(loss, params, data, lr=LR, batch_size=batch,
-                       pool=pool, seed=seed0 + r)
-        tr.accuracy_fn = acc
+        tr = SimulatorTrainer(loss, params, data, accuracy_fn=acc)
+        base = ExperimentSpec(backend="sim", mode="hybrid",
+                              schedule=f"step:{step_size}", lr=LR,
+                              batch=batch, horizon=horizon, pool=pool,
+                              seed=seed0 + r)
         for mode in modes:
-            sched = step_schedule(workers, step_size) \
-                if mode == "hybrid" else None
-            res = tr.run(mode, horizon=horizon, schedule=sched)
+            res = tr.run(base.with_(mode=mode))
             agg[mode].append(res.averaged())
     out = {}
     for mode, rows in agg.items():

@@ -3,6 +3,8 @@ kernel microbenches and the roofline summary derived from the cached
 dry-run artifacts.
 
   PYTHONPATH=src python -m benchmarks.run [--quick|--full]
+  # or, via the unified CLI:
+  PYTHONPATH=src python -m repro bench [--quick|--full]
 """
 from __future__ import annotations
 

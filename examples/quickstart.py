@@ -1,44 +1,38 @@
-"""Quickstart: the paper's Smooth Switch algorithm in 60 lines.
+"""Quickstart: the paper's Smooth Switch algorithm through the unified
+``repro.api`` layer — one ExperimentSpec, three aggregation modes.
 
 Runs the event-driven parameter-server simulator on the paper's random
 20-dim classification dataset and compares async / sync / hybrid on the
 same initialization — the paper's core experiment, CPU-runnable in ~1 min.
 
   PYTHONPATH=src python examples/quickstart.py
-"""
-import jax
 
-from repro.core import PSTrainer, WorkerPool, step_schedule
-from repro.data.synthetic import random_classification
-from repro.models.cnn import (accuracy, init_mlp_clf, mlp_clf_forward,
-                              nll_loss)
+(equivalently: python -m repro simulate --arch mlp --mode hybrid \
+    --schedule step:300 --workers 25 --base-compute 0.02 --delay-std 0.25 \
+    --horizon 8 --no-smoke)
+"""
+from repro.api import ExperimentSpec, SimulatorTrainer
+from repro.core.simulator import WorkerPool
 
 
 def main():
     # the paper's setting: 25 workers, half of them randomly delayed,
     # lr=0.01, batch 32, threshold step size 3/lr = 300
-    data = random_classification(seed=0)
-    params0 = init_mlp_clf(jax.random.PRNGKey(0))
-    pool = WorkerPool(num_workers=25, base_compute=0.02, delay_std=0.25)
-
-    trainer = PSTrainer(
-        loss_fn=lambda p, x, y: nll_loss(mlp_clf_forward(p, x), y),
-        init_params=params0, data=data, lr=0.01, batch_size=32,
-        pool=pool, seed=0)
-    trainer.accuracy_fn = jax.jit(
-        lambda p, x, y: accuracy(mlp_clf_forward(p, x), y))
+    base = ExperimentSpec(
+        arch="mlp", backend="sim", mode="hybrid", schedule="step:300",
+        lr=0.01, batch=32, horizon=8.0, seed=0, smoke=False,
+        pool=WorkerPool(num_workers=25, base_compute=0.02, delay_std=0.25))
+    # one trainer across modes: same dataset, same initialization, same
+    # compiled functions (the paper's shared-initialization protocol)
+    trainer = SimulatorTrainer()
 
     print(f"{'mode':8s} {'grads':>6s} {'updates':>7s} "
           f"{'avg test acc':>12s} {'final acc':>9s} {'avg loss':>9s}")
-    for mode, schedule in [
-        ("async", None),
-        ("sync", None),
-        ("hybrid", step_schedule(num_workers=25, step_size=300)),
-    ]:
-        res = trainer.run(mode, horizon=8.0, schedule=schedule)
-        avg = res.averaged()
+    for mode in ("async", "sync", "hybrid"):
+        res = trainer.run(base.with_(mode=mode))
+        avg, fin = res.averaged(), res.final()
         print(f"{mode:8s} {res.num_gradients:6d} {res.num_updates:7d} "
-              f"{100 * avg['test_acc']:11.1f}% {100 * res.test_acc[-1]:8.1f}% "
+              f"{100 * avg['test_acc']:11.1f}% {100 * fin['test_acc']:8.1f}% "
               f"{avg['test_loss']:9.3f}")
 
     print("\nExpected: hybrid sustains async-level gradient throughput with"

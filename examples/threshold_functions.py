@@ -2,58 +2,46 @@
 into the Smooth Switch and compare — step (the paper's), linear, cosine,
 exponential — plus the staleness-decay extension on the buffer.
 
+Every schedule is named by a ``repro.api`` spec string, so the exact
+experiment is reproducible from the printed spec alone.
+
   PYTHONPATH=src python examples/threshold_functions.py
 """
-import jax
-
-from repro.core import PSTrainer, WorkerPool
-from repro.core.schedule import (cosine_schedule, exponential_schedule,
-                                 linear_schedule, step_schedule)
-from repro.data.synthetic import random_classification
-from repro.models.cnn import (accuracy, init_mlp_clf, mlp_clf_forward,
-                              nll_loss)
+from repro.api import ExperimentSpec, SimulatorTrainer
+from repro.core.simulator import WorkerPool
 
 HORIZON = 8.0
 W = 25
 
 
 def main():
-    data = random_classification(seed=0)
-    params0 = init_mlp_clf(jax.random.PRNGKey(0))
-    pool = WorkerPool(num_workers=W, base_compute=0.02, delay_std=0.25)
-
-    def make_trainer(decay=1.0):
-        t = PSTrainer(
-            lambda p, x, y: nll_loss(mlp_clf_forward(p, x), y),
-            params0, data, lr=0.01, batch_size=32, pool=pool, seed=0,
-            staleness_decay=decay)
-        t.accuracy_fn = jax.jit(
-            lambda p, x, y: accuracy(mlp_clf_forward(p, x), y))
-        return t
+    base = ExperimentSpec(
+        arch="mlp", backend="sim", mode="hybrid", schedule="step:300",
+        lr=0.01, batch=32, horizon=HORIZON, seed=0, smoke=False,
+        pool=WorkerPool(num_workers=W, base_compute=0.02, delay_std=0.25))
+    # one trainer instance: dataset + compiled functions are built once
+    trainer = SimulatorTrainer()
 
     # rough horizon in updates for the smooth families
-    upd_horizon = 2500
     schedules = {
-        "step 300 (paper)": step_schedule(W, 300),
-        "step 500 (paper)": step_schedule(W, 500),
-        "linear": linear_schedule(W, upd_horizon),
-        "cosine": cosine_schedule(W, upd_horizon),
-        "exponential": exponential_schedule(W, upd_horizon),
+        "step 300 (paper)": "step:300",
+        "step 500 (paper)": "step:500",
+        "linear": "linear:2500",
+        "cosine": "cosine:horizon=2500",
+        "exponential": "exp:horizon=2500,rate=5",
     }
     print(f"{'schedule':20s} {'avg acc':>8s} {'final acc':>9s} "
           f"{'avg loss':>9s} {'updates':>8s}")
-    base = make_trainer()
     for name, sched in schedules.items():
-        r = base.run("hybrid", horizon=HORIZON, schedule=sched)
-        a = r.averaged()
+        r = trainer.run(base.with_(schedule=sched))
+        a, f = r.averaged(), r.final()
         print(f"{name:20s} {100 * a['test_acc']:7.1f}% "
-              f"{100 * r.test_acc[-1]:8.1f}% {a['test_loss']:9.3f} "
+              f"{100 * f['test_acc']:8.1f}% {a['test_loss']:9.3f} "
               f"{r.num_updates:8d}")
 
     print("\nbeyond-paper: staleness-weighted flush (decay^staleness)")
     for decay in (1.0, 0.8, 0.5):
-        t = make_trainer(decay)
-        r = t.run("hybrid", horizon=HORIZON, schedule=step_schedule(W, 300))
+        r = trainer.run(base.with_(staleness_decay=decay))
         a = r.averaged()
         print(f"  decay={decay:3.1f}: avg acc {100 * a['test_acc']:5.1f}%  "
               f"avg loss {a['test_loss']:.3f}")

@@ -1,6 +1,7 @@
 """End-to-end driver: train a ~100M-parameter xLSTM for a few hundred
 steps with the SPMD group-annealed hybrid schedule, against sync and
-async baselines (DESIGN.md §2.2 — the TPU-native Smooth Switch).
+async baselines (DESIGN.md §2.2 — the TPU-native Smooth Switch), all
+through the unified ``repro.api`` layer.
 
 Uses 4 forced host devices so the reduction-group annealing g: 1 -> 4 is
 real (4 replicas -> 2 -> 1 with merges between phases).
@@ -16,7 +17,7 @@ import json
 
 import jax
 
-from repro.launch.train import train
+from repro.api import ExperimentSpec, SpmdTrainer
 
 
 def main():
@@ -33,23 +34,25 @@ def main():
         print("hint: run with XLA_FLAGS=--xla_force_host_platform_"
               "device_count=4 to exercise real group annealing")
 
+    base = ExperimentSpec(
+        arch="xlstm-350m", backend="spmd", mode="hybrid",
+        schedule=f"step:{max(1, args.steps // n_dev)}",
+        steps=args.steps, batch=args.batch, seq=args.seq, lr=1e-3,
+        smoke=not args.full_100m, log_every=20, seed=0)
+
     results = {}
     for mode in ("hybrid", "async", "sync"):
         print(f"\n=== mode={mode} ===")
-        _, history = train(
-            arch="xlstm-350m", steps=args.steps, mode=mode,
-            batch=args.batch, seq=args.seq, lr=1e-3,
-            schedule_kind="step", step_size=max(1, args.steps // n_dev),
-            smoke=not args.full_100m, log_every=20, seed=0)
-        results[mode] = history
+        results[mode] = SpmdTrainer().run(base.with_(mode=mode))
 
     print("\n=== final losses ===")
-    for mode, hist in results.items():
-        print(f"{mode:8s} loss={hist[-1]['loss']:.4f} "
-              f"(divergence at end: {hist[-1]['divergence']:.2e})")
+    for mode, res in results.items():
+        fin = res.final()
+        print(f"{mode:8s} loss={fin['loss']:.4f} "
+              f"(divergence at end: {fin['divergence']:.2e})")
     with open("/tmp/train_hybrid_spmd.json", "w") as f:
-        json.dump(results, f, indent=2)
-    print("history saved to /tmp/train_hybrid_spmd.json")
+        json.dump({m: r.to_dict() for m, r in results.items()}, f, indent=2)
+    print("RunResults saved to /tmp/train_hybrid_spmd.json")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,13 @@
+"""``python -m repro`` — dispatching CLI (see repro.api.cli)."""
+import sys
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if argv and argv[0] == "dryrun":
+        # Importing repro.api pulls in jax, after which the device
+        # topology is frozen — force the dry-run's 512 host devices
+        # first (repro.launch._xla_env is jax-free).
+        from repro.launch._xla_env import force_host_device_count
+        force_host_device_count()
+    from repro.api.cli import main
+    sys.exit(main(argv))

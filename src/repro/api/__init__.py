@@ -1,0 +1,46 @@
+"""Unified experiment layer: one spec, one Trainer protocol, one CLI.
+
+The paper's contribution is a single knob — the threshold schedule K(t)
+— so the repo exposes a single experiment surface for it:
+
+    from repro.api import ExperimentSpec, run
+
+    spec = ExperimentSpec(arch="mlp", backend="sim", mode="hybrid",
+                          schedule="step:300", horizon=8.0)
+    result = run(spec)                  # -> RunResult
+    print(result.averaged())            # paper-style interval averages
+    result.save("result.json")          # reproducible artifact
+
+Change ``backend="spmd"`` and the same spec drives the group-annealed
+SPMD driver on real devices.  ``python -m repro`` exposes the same
+pieces as subcommands (run / simulate / serve / dryrun / bench).
+
+Pieces:
+  * :class:`ExperimentSpec` — frozen, JSON-round-tripping description
+    of one experiment (:mod:`repro.api.spec`);
+  * ``parse_schedule`` / ``register_schedule`` — the K(t) spec
+    mini-language, e.g. ``"step:300"``, ``"cosine:horizon=2000"``,
+    ``"exp:horizon=2000,rate=5"`` (:mod:`repro.api.schedules`);
+  * :class:`Trainer` protocol with :class:`SimulatorTrainer` and
+    :class:`SpmdTrainer` adapters (:mod:`repro.api.trainers`);
+  * :class:`RunResult` — the common metric-grid result with
+    ``averaged()`` paper tables and JSON export
+    (:mod:`repro.api.result`).
+"""
+from repro.api.result import RunResult  # noqa: F401
+from repro.api.schedules import (SCHEDULE_FAMILIES,  # noqa: F401
+                                 ScheduleFamily, parse_schedule,
+                                 register_schedule, schedule_help)
+from repro.api.spec import (BACKENDS, FLUSH_MODES, MODES,  # noqa: F401
+                            ExperimentSpec)
+from repro.api.trainers import (SIM_WORKLOADS, TRAINERS,  # noqa: F401
+                                SimulatorTrainer, SpmdTrainer, Trainer,
+                                get_trainer, register_sim_workload, run)
+
+__all__ = [
+    "BACKENDS", "MODES", "FLUSH_MODES", "ExperimentSpec", "RunResult",
+    "SCHEDULE_FAMILIES", "ScheduleFamily", "parse_schedule",
+    "register_schedule", "schedule_help", "Trainer", "SimulatorTrainer",
+    "SpmdTrainer", "TRAINERS", "SIM_WORKLOADS", "get_trainer",
+    "register_sim_workload", "run",
+]

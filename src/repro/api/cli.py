@@ -1,0 +1,219 @@
+"""``python -m repro`` — one CLI for every surface.
+
+Subcommands:
+  run       execute an ExperimentSpec (flags and/or --spec JSON file) on
+            either backend and emit a RunResult JSON
+  simulate  alias for ``run --backend sim`` (paper-faithful simulator);
+            ``--smoke`` picks a seconds-scale CI configuration
+  serve     batched prefill+decode demo (repro.launch.serve)
+  dryrun    multi-pod lower/compile analysis (repro.launch.dryrun, with
+            the 512 forced host devices set up before jax imports)
+  bench     paper tables + kernel microbenches (benchmarks.run)
+  schedules list the registered threshold-schedule families
+
+Examples:
+  python -m repro simulate --smoke
+  python -m repro run --backend spmd --arch xlstm-350m --smoke \
+      --steps 40 --mode hybrid --schedule step:10 --out /tmp/result.json
+  python -m repro run --spec experiment.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.api.schedules import schedule_help
+from repro.api.spec import BACKENDS, FLUSH_MODES, MODES, ExperimentSpec
+
+# CLI flag -> (spec field, type).  Every flag defaults to None so that
+# only explicitly-passed flags override the --spec file / dataclass
+# defaults.
+_SPEC_FLAGS = [
+    ("--arch", "arch", str, "workload (sim: mlp|cnn-mnist|cnn-cifar; "
+                            "spmd: registry arch)"),
+    ("--mode", "mode", str, f"one of {MODES}"),
+    ("--schedule", "schedule", str,
+     'threshold schedule spec, e.g. "step:300"'),
+    ("--seed", "seed", int, "RNG seed"),
+    ("--lr", "lr", float, "learning rate"),
+    ("--batch", "batch", int, "per-gradient batch size"),
+    ("--horizon", "horizon", float, "sim: virtual seconds"),
+    ("--sample-every", "sample_every", float, "sim: metric grid spacing"),
+    ("--flush-mode", "flush_mode", str, f"sim: one of {FLUSH_MODES}"),
+    ("--staleness-decay", "staleness_decay", float,
+     "sim: staleness weight decay"),
+    ("--steps", "steps", int, "spmd: optimizer steps"),
+    ("--seq", "seq", int, "spmd: sequence length"),
+    ("--merge-alpha", "merge_alpha", float, "spmd: partial-merge factor"),
+    ("--mesh-model", "mesh_model", int, "spmd: model-parallel axis size"),
+    ("--log-every", "log_every", int, "spmd: metric logging interval"),
+]
+_POOL_FLAGS = [
+    ("--workers", "num_workers", int, "sim: worker count"),
+    ("--base-compute", "base_compute", float,
+     "sim: seconds per gradient (virtual)"),
+    ("--delay-fraction", "delay_fraction", float,
+     "sim: fraction of delayed workers"),
+    ("--delay-std", "delay_std", float, "sim: delay std (virtual s)"),
+]
+
+
+def _add_spec_flags(ap: argparse.ArgumentParser, backend_flag: bool):
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="ExperimentSpec JSON file (flags override it)")
+    if backend_flag:
+        ap.add_argument("--backend", choices=BACKENDS, default=None)
+    for flag, dest, typ, hlp in _SPEC_FLAGS:
+        ap.add_argument(flag, dest=dest, type=typ, default=None, help=hlp)
+    for flag, dest, typ, hlp in _POOL_FLAGS:
+        ap.add_argument(flag, dest=dest, type=typ, default=None, help=hlp)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=None, help="reduced config / dataset sizes")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="write the full RunResult JSON here")
+    ap.add_argument("--save-spec", default=None, metavar="FILE",
+                    help="write the resolved ExperimentSpec JSON here")
+    ap.add_argument("--ckpt-dir", default=None, help="spmd: checkpoints")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-step logs; print only the result")
+
+
+def _build_spec(args, backend: Optional[str]) -> ExperimentSpec:
+    spec = ExperimentSpec.load(args.spec) if args.spec else ExperimentSpec()
+    changes = {}
+    if backend:
+        changes["backend"] = backend
+    for _, field, _, _ in _SPEC_FLAGS:
+        v = getattr(args, field)
+        if v is not None:
+            changes[field] = v
+    if args.smoke is not None:
+        changes["smoke"] = args.smoke
+    pool_changes = {f: getattr(args, f) for _, f, _, _ in _POOL_FLAGS
+                    if getattr(args, f) is not None}
+    if pool_changes:
+        import dataclasses
+        changes["pool"] = dataclasses.replace(spec.pool, **pool_changes)
+    return spec.with_(**changes) if changes else spec
+
+
+def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
+    spec = _build_spec(args, forced_backend or args_backend(args))
+    if args.save_spec:
+        spec.save(args.save_spec)
+    from repro.api import trainers
+    if spec.backend == "spmd":
+        trainer = trainers.SpmdTrainer(ckpt_dir=args.ckpt_dir,
+                                       verbose=not args.quiet)
+    else:
+        trainer = trainers.SimulatorTrainer()
+    result = trainer.run(spec)
+    if args.out:
+        result.save(args.out)
+        d = result.to_dict()
+        summary = {k: d[k]
+                   for k in ("backend", "mode", "schedule", "num_updates",
+                             "num_gradients", "wall_s", "averaged",
+                             "final")}
+        print(json.dumps(summary, indent=2))
+        print(f"full RunResult written to {args.out}", file=sys.stderr)
+    else:
+        print(result.to_json())
+    return 0
+
+
+def args_backend(args) -> Optional[str]:
+    return getattr(args, "backend", None)
+
+
+def _cmd_simulate(args) -> int:
+    if args.smoke and not args.spec:
+        # seconds-scale CI configuration unless explicitly overridden
+        # (never applied over a --spec file: only real flags override it)
+        if args.horizon is None:
+            args.horizon = 3.0
+        if args.num_workers is None:
+            args.num_workers = 5
+        if args.schedule is None and args.mode in (None, "hybrid"):
+            args.schedule = "step:50"
+    return _cmd_run(args, forced_backend="sim")
+
+
+def _forward(module_main, argv: List[str]) -> int:
+    rc = module_main(argv)
+    return int(rc) if rc else 0
+
+
+def _cmd_passthrough(name: str, rest: List[str]) -> int:
+    if name == "serve":
+        from repro.launch.serve import main as serve_main
+        return _forward(serve_main, rest)
+    if name == "dryrun":
+        # topology must be forced before jax (and hence dryrun) imports
+        from repro.launch._xla_env import force_host_device_count
+        force_host_device_count()
+        from repro.launch.dryrun import main as dryrun_main
+        return _forward(dryrun_main, rest)
+    if name == "bench":
+        try:
+            from benchmarks.run import main as bench_main
+        except ImportError as e:
+            print(f"benchmarks package not importable ({e}); run from the "
+                  f"repository root", file=sys.stderr)
+            return 1
+        return _forward(bench_main, rest)
+    raise AssertionError(name)
+
+
+# these forward their whole tail to the wrapped driver's own argparse
+# (dispatched before the main parse: argparse.REMAINDER cannot capture
+# leading options)
+_PASSTHROUGH = {
+    "serve": "serving demo (repro.launch.serve args)",
+    "dryrun": "compile-only analysis (repro.launch.dryrun args)",
+    "bench": "benchmark suite (benchmarks.run args)",
+}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] in _PASSTHROUGH:
+        return _cmd_passthrough(argv[0], argv[1:])
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_run = sub.add_parser("run", help="execute an ExperimentSpec")
+    _add_spec_flags(p_run, backend_flag=True)
+    p_sim = sub.add_parser("simulate",
+                           help="run the paper-faithful simulator backend")
+    _add_spec_flags(p_sim, backend_flag=False)
+    for name, hlp in _PASSTHROUGH.items():
+        sub.add_parser(name, help=hlp, add_help=False)
+    sub.add_parser("schedules", help="list threshold-schedule families")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd in ("run", "simulate"):
+        try:
+            return _cmd_run(args) if args.cmd == "run" \
+                else _cmd_simulate(args)
+        except (ValueError, FileNotFoundError) as e:
+            # spec/schedule validation and missing --spec files are user
+            # errors, not crashes
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    if args.cmd == "schedules":
+        print("registered threshold-schedule families "
+              "(repro.api.parse_schedule):")
+        print(schedule_help())
+        return 0
+    return _cmd_passthrough(args.cmd, [])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+"""The one experiment description every backend consumes.
+
+:class:`ExperimentSpec` is a frozen dataclass naming *what* to run —
+architecture/workload, backend (``sim`` = the paper-faithful event-driven
+parameter-server simulator, ``spmd`` = the group-annealed data-parallel
+driver), aggregation mode, threshold schedule (as a
+:mod:`repro.api.schedules` spec string), worker pool or step budget,
+seed, and flush/merge options.  It round-trips through JSON
+(``to_json``/``from_json``), so a run is reproducible from a single
+artifact:
+
+    spec = ExperimentSpec(arch="mlp", backend="sim", mode="hybrid",
+                          schedule="step:300", horizon=8.0)
+    result = repro.api.run(spec)        # -> RunResult
+    print(result.averaged())            # paper-style interval averages
+
+Backend-specific fields are simply ignored by the other backend (the
+simulator reads ``pool``/``horizon``; the SPMD driver reads
+``steps``/``seq``/``mesh_model``), so one spec can be re-targeted by
+changing ``backend`` alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from repro.api.schedules import parse_schedule
+from repro.core.simulator import WorkerPool
+
+BACKENDS = ("sim", "spmd")
+MODES = ("sync", "async", "hybrid")
+FLUSH_MODES = ("sum", "mean")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Declarative description of one training experiment."""
+    # what + where
+    arch: str = "mlp"              # sim: workload name; spmd: registry arch
+    backend: str = "sim"
+    mode: str = "hybrid"
+    schedule: Optional[str] = "step:300"   # spec string; None for sync/async
+    seed: int = 0
+    # optimization
+    lr: float = 0.01
+    batch: int = 32
+    # simulator backend (virtual time)
+    horizon: float = 20.0          # virtual seconds
+    sample_every: float = 0.5      # metric-grid spacing (virtual seconds)
+    pool: WorkerPool = WorkerPool()
+    flush_mode: str = "sum"        # buffer flush: "sum" | "mean"
+    staleness_decay: float = 1.0   # <1 = staleness-weighted flush
+    # SPMD backend (steps)
+    steps: int = 100
+    seq: int = 128
+    merge_alpha: float = 1.0       # partial (Lookahead-style) merges
+    mesh_model: int = 1            # model-parallel axis size
+    smoke: bool = True             # reduced config / dataset sizes
+    log_every: int = 10
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if self.flush_mode not in FLUSH_MODES:
+            raise ValueError(f"flush_mode must be one of {FLUSH_MODES}, "
+                             f"got {self.flush_mode!r}")
+        if isinstance(self.pool, dict):   # from_json convenience
+            object.__setattr__(self, "pool", WorkerPool(**self.pool))
+        if self.mode == "hybrid":
+            if not self.schedule:
+                raise ValueError("hybrid mode requires a schedule spec "
+                                 '(e.g. "step:300")')
+            # validate the spec string eagerly; worker count is irrelevant
+            # for syntax, any plausible value will do
+            parse_schedule(self.schedule, max(2, self.pool.num_workers))
+        for field in ("steps", "horizon", "sample_every", "batch", "seq",
+                      "mesh_model", "log_every"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be > 0, "
+                                 f"got {getattr(self, field)!r}")
+
+    # --------------------------------------------------------- derivation
+    def with_(self, **changes) -> "ExperimentSpec":
+        """Functional update (``dataclasses.replace`` with validation)."""
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------ serialization
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)   # recurses into the WorkerPool
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown ExperimentSpec fields: "
+                             f"{sorted(unknown)}")
+        return cls(**d)   # __post_init__ coerces a dict pool
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -1,0 +1,205 @@
+"""Trainer protocol + the two backend adapters.
+
+A :class:`Trainer` turns an :class:`~repro.api.spec.ExperimentSpec` into
+a :class:`~repro.api.result.RunResult`:
+
+  * :class:`SimulatorTrainer` — the paper-faithful event-driven
+    parameter-server simulator (``backend="sim"``).  ``spec.arch`` names
+    a registered simulator workload (``mlp``, ``cnn-mnist``,
+    ``cnn-cifar`` by default; extend via :func:`register_sim_workload`),
+    or pass a prepared ``(loss_fn, init_params, data, accuracy_fn)``
+    directly to the constructor for bespoke setups.
+  * :class:`SpmdTrainer` — the group-annealed SPMD driver
+    (``backend="spmd"``); ``spec.arch`` names an architecture from
+    :mod:`repro.configs.registry`.  The trained parameters of the last
+    run are kept on ``self.last_params``.
+
+Both return the same ``RunResult`` shape, so downstream analysis
+(`averaged()`, JSON artifacts, paper tables) is backend-agnostic.
+:func:`run` is the one-call entry point that dispatches on
+``spec.backend``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple
+
+from repro.api.result import RunResult
+from repro.api.schedules import parse_schedule
+from repro.api.spec import ExperimentSpec
+
+
+class Trainer(Protocol):
+    """Anything that executes an ExperimentSpec."""
+
+    def run(self, spec: ExperimentSpec) -> RunResult:   # pragma: no cover
+        ...
+
+
+# ------------------------------------------------------- sim workloads
+
+# name -> builder(spec) -> (loss_fn, init_params, data, accuracy_fn)
+SIM_WORKLOADS: Dict[str, Callable[[ExperimentSpec], Tuple]] = {}
+
+
+def register_sim_workload(name: str, builder: Callable,
+                          overwrite: bool = False) -> None:
+    """Register a simulator workload under ``name`` (= ``spec.arch``)."""
+    if name in SIM_WORKLOADS and not overwrite:
+        raise ValueError(f"sim workload {name!r} already registered")
+    SIM_WORKLOADS[name] = builder
+
+
+def _mlp_workload(spec: ExperimentSpec):
+    import jax
+    from repro.data.synthetic import random_classification
+    from repro.models.cnn import (accuracy, init_mlp_clf, mlp_clf_forward,
+                                  nll_loss)
+    n = 2_000 if spec.smoke else 10_000
+    data = random_classification(seed=spec.seed, n=n)
+    params = init_mlp_clf(jax.random.PRNGKey(spec.seed))
+    loss = lambda p, x, y: nll_loss(mlp_clf_forward(p, x), y)  # noqa: E731
+    acc = jax.jit(lambda p, x, y: accuracy(mlp_clf_forward(p, x), y))
+    return loss, params, data, acc
+
+
+def _cnn_workload(dataset_name: str, image_shape):
+    def build(spec: ExperimentSpec):
+        import jax
+        from repro.data import synthetic
+        from repro.models.cnn import (accuracy, cnn_forward, init_cnn,
+                                      nll_loss)
+        dataset = getattr(synthetic, dataset_name)
+        if spec.smoke:
+            data = dataset(seed=spec.seed, n_train=2_000, n_test=500)
+        else:
+            data = dataset(seed=spec.seed)
+        params = init_cnn(jax.random.PRNGKey(spec.seed), image_shape)
+        loss = lambda p, x, y: nll_loss(cnn_forward(p, x), y)  # noqa: E731
+        acc = jax.jit(lambda p, x, y: accuracy(cnn_forward(p, x), y))
+        return loss, params, data, acc
+    return build
+
+
+register_sim_workload("mlp", _mlp_workload)
+register_sim_workload("cnn-mnist", _cnn_workload("mnist_like", (28, 28, 1)))
+register_sim_workload("cnn-cifar", _cnn_workload("cifar10_like",
+                                                 (32, 32, 3)))
+
+
+# ------------------------------------------------------------- adapters
+
+class SimulatorTrainer:
+    """Adapter: ExperimentSpec -> event-driven PS simulator -> RunResult.
+
+    With no constructor arguments the workload is built from
+    ``spec.arch`` via the :data:`SIM_WORKLOADS` registry; pass a prepared
+    workload to pin the model/data/initialization across several runs
+    (the paper's shared-initialization protocol)."""
+
+    def __init__(self, loss_fn: Optional[Callable] = None,
+                 init_params: Any = None, data: Any = None,
+                 accuracy_fn: Optional[Callable] = None):
+        self._workload = None
+        if loss_fn is not None:
+            self._workload = (loss_fn, init_params, data, accuracy_fn)
+        # one workload build / PSTrainer (and its jitted fns) per distinct
+        # key, so running several modes/schedules off one trainer instance
+        # reuses the dataset and compiled functions (the paper's
+        # shared-initialization protocol, and what the examples do)
+        self._workload_cache: Tuple[Optional[tuple], Optional[tuple]] \
+            = (None, None)
+        self._engine_cache: Tuple[Optional[tuple], Any] = (None, None)
+
+    def _build(self, spec: ExperimentSpec):
+        if self._workload is not None:
+            return self._workload
+        key = (spec.arch, spec.seed, spec.smoke)
+        cached_key, cached = self._workload_cache
+        if cached_key == key:
+            return cached
+        builder = SIM_WORKLOADS.get(spec.arch)
+        if builder is None:
+            known = ", ".join(sorted(SIM_WORKLOADS))
+            raise ValueError(f"unknown sim workload {spec.arch!r} "
+                             f"(known: {known}; register new ones via "
+                             f"repro.api.register_sim_workload)")
+        workload = builder(spec)
+        self._workload_cache = (key, workload)
+        return workload
+
+    def _engine(self, spec: ExperimentSpec):
+        from repro.core.simulator import PSTrainer
+
+        workload = self._build(spec)
+        key = (id(workload), spec.lr, spec.batch, spec.pool, spec.seed,
+               spec.staleness_decay, spec.flush_mode)
+        cached_key, cached = self._engine_cache
+        if cached_key == key:
+            return cached
+        loss_fn, init_params, data, accuracy_fn = workload
+        trainer = PSTrainer(
+            loss_fn, init_params, data, lr=spec.lr, batch_size=spec.batch,
+            pool=spec.pool, seed=spec.seed,
+            staleness_decay=spec.staleness_decay,
+            flush_mode=spec.flush_mode, accuracy_fn=accuracy_fn)
+        self._engine_cache = (key, trainer)
+        return trainer
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        trainer = self._engine(spec)
+        schedule = None
+        if spec.mode == "hybrid":
+            schedule = parse_schedule(spec.schedule, spec.pool.num_workers)
+        t0 = time.time()
+        sim = trainer.simulate(spec.mode, horizon=spec.horizon,
+                               schedule=schedule,
+                               sample_every=spec.sample_every)
+        return RunResult.from_sim(sim, spec=spec, wall_s=time.time() - t0)
+
+
+class SpmdTrainer:
+    """Adapter: ExperimentSpec -> group-annealed SPMD driver -> RunResult.
+
+    ``num_gradients`` counts one gradient per replica per step (the SPMD
+    analogue of the simulator's per-worker gradients)."""
+
+    def __init__(self, ckpt_dir: Optional[str] = None,
+                 verbose: bool = True):
+        self.ckpt_dir = ckpt_dir
+        self.verbose = verbose
+        self.last_params = None
+
+    def run(self, spec: ExperimentSpec) -> RunResult:
+        from repro.launch.train import run_training
+
+        t0 = time.time()
+        params, history = run_training(spec, ckpt_dir=self.ckpt_dir,
+                                       verbose=self.verbose)
+        self.last_params = params
+        # one gradient per replica per step, estimated from the logged
+        # per-step replica counts (history is log_every-thinned)
+        grads = sum(h.get("replicas", 1) for h in history)
+        grads = int(round(grads * spec.steps / max(1, len(history))))
+        return RunResult.from_history(
+            history, spec=spec, wall_s=time.time() - t0,
+            num_updates=spec.steps, num_gradients=grads)
+
+
+TRAINERS: Dict[str, Callable[[], Trainer]] = {
+    "sim": SimulatorTrainer,
+    "spmd": SpmdTrainer,
+}
+
+
+def get_trainer(backend: str) -> Trainer:
+    try:
+        return TRAINERS[backend]()
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r} "
+                         f"(known: {', '.join(sorted(TRAINERS))})") from None
+
+
+def run(spec: ExperimentSpec) -> RunResult:
+    """One spec in, one RunResult out — dispatches on ``spec.backend``."""
+    return get_trainer(spec.backend).run(spec)

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable
 
 
@@ -80,12 +81,28 @@ def constant_schedule(num_workers: int, k: int) -> ThresholdSchedule:
     return ThresholdSchedule(f"const({k})", num_workers, lambda t: k)
 
 
-SCHEDULES = {
+class _DeprecatedSchedules(dict):
+    """Legacy factory dict.  The factories here take *inconsistent*
+    positional arguments (``step`` takes a step size, the rest take a
+    horizon), which forced per-kind branches in every caller; the unified
+    spec mini-language in :mod:`repro.api.schedules` replaces it
+    (``parse_schedule("step:300", num_workers)``)."""
+
+    def __getitem__(self, key):
+        warnings.warn(
+            "repro.core.schedule.SCHEDULES is deprecated; use "
+            "repro.api.parse_schedule(spec, num_workers) with a spec "
+            'string like "step:300" or "cosine:horizon=2000"',
+            DeprecationWarning, stacklevel=2)
+        return super().__getitem__(key)
+
+
+SCHEDULES = _DeprecatedSchedules({
     "step": step_schedule,
     "linear": linear_schedule,
     "cosine": cosine_schedule,
     "exp": exponential_schedule,
-}
+})
 
 
 def group_size_phases(schedule: ThresholdSchedule, horizon: int,

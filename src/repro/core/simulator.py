@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -90,7 +91,8 @@ class PSTrainer:
     def __init__(self, loss_fn: Callable, init_params, data,
                  lr: float = 0.01, batch_size: int = 32,
                  pool: WorkerPool = WorkerPool(), seed: int = 0,
-                 staleness_decay: float = 1.0, flush_mode: str = "sum"):
+                 staleness_decay: float = 1.0, flush_mode: str = "sum",
+                 accuracy_fn: Optional[Callable] = None):
         """data = (x_train, y_train, x_test, y_test); loss_fn(params, x, y)
         -> scalar nll.
 
@@ -98,6 +100,9 @@ class PSTrainer:
         paper's Algorithm 1 reading: 'synchronize all the gradients in the
         buffer'; K=1 ≡ async exactly); "mean" averages the buffer (sync-
         style confident update, K× smaller step mass).
+
+        accuracy_fn(params, x, y) -> scalar; when None the test-accuracy
+        series is all zeros (e.g. regression workloads).
         """
         assert flush_mode in ("sum", "mean")
         self.flush_mode = flush_mode
@@ -112,8 +117,7 @@ class PSTrainer:
 
         self._grad = jax.jit(jax.grad(loss_fn))
         self._loss = jax.jit(loss_fn)
-        # injected by callers that want accuracy (e.g. classification)
-        self.accuracy_fn: Optional[Callable] = None
+        self.accuracy_fn = accuracy_fn
 
     # ------------------------------------------------------------------
     def _sample_batch(self, rng: np.random.Generator, shard_idx):
@@ -136,6 +140,19 @@ class PSTrainer:
     def run(self, mode: str, horizon: float = 20.0,
             schedule: Optional[ThresholdSchedule] = None,
             sample_every: float = 0.5) -> SimResult:
+        """Deprecated alias for :meth:`simulate` (the pre-``repro.api``
+        entry point).  Prefer ``repro.api.SimulatorTrainer`` /
+        ``repro.api.run``, which return a unified ``RunResult``."""
+        warnings.warn(
+            "PSTrainer.run() is deprecated; use PSTrainer.simulate() or "
+            "the unified repro.api layer (ExperimentSpec -> run())",
+            DeprecationWarning, stacklevel=2)
+        return self.simulate(mode, horizon=horizon, schedule=schedule,
+                             sample_every=sample_every)
+
+    def simulate(self, mode: str, horizon: float = 20.0,
+                 schedule: Optional[ThresholdSchedule] = None,
+                 sample_every: float = 0.5) -> SimResult:
         assert mode in ("sync", "async", "hybrid")
         rng = np.random.default_rng(self.seed)
         speeds, delayed = self.pool.build(rng)

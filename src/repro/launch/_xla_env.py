@@ -1,0 +1,41 @@
+"""Process-level XLA environment knobs that must be set *before* jax is
+imported (device topology is fixed at first import).  jax-free on
+purpose: both ``repro.launch.dryrun`` (under ``__main__``) and the
+``python -m repro dryrun`` CLI call this before touching jax."""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+DRYRUN_DEVICE_COUNT = 512   # the multi-pod dry-run's forced host devices
+
+
+def force_host_device_count(n: int = DRYRUN_DEVICE_COUNT) -> bool:
+    """Force ``n`` XLA host devices for this process.
+
+    No-ops (with a warning) when jax is already imported — too late to
+    change the topology.  An existing XLA_FLAGS is preserved: the force
+    flag is appended to it, unless the user already forced a device
+    count themselves (their explicit override wins).  Returns True when
+    the requested count is in effect.
+    """
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" in sys.modules:
+        in_effect = flag in os.environ.get("XLA_FLAGS", "")
+        if not in_effect:
+            warnings.warn(
+                f"jax is already imported; cannot force {n} host devices "
+                f"(set XLA_FLAGS={flag} before starting python)",
+                RuntimeWarning, stacklevel=2)
+        return in_effect
+    current = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in current:
+        os.environ["XLA_FLAGS"] = f"{current} {flag}".strip()
+    in_effect = flag in os.environ["XLA_FLAGS"]
+    if not in_effect:
+        warnings.warn(
+            f"XLA_FLAGS already forces a different host device count "
+            f"({current!r}); leaving it in place instead of forcing {n}",
+            RuntimeWarning, stacklevel=2)
+    return in_effect

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture × input shape ×
 mesh) combination against the production meshes and record memory/cost/
 collective analyses — the proof that the distribution config is coherent
@@ -13,7 +10,19 @@ Usage:
       --hybrid-rep 4            # group-annealed hybrid phase variant
 
 Results are cached as JSON under experiments/dryrun/.
+
+The 512 forced host devices are configured only when this module is the
+entry point (``__main__`` below, before jax is imported, since topology
+is fixed at first jax import) or via ``python -m repro dryrun``.  Plain
+``import repro.launch.dryrun`` — e.g. for the HLO-parsing helpers — no
+longer clobbers the process's device configuration.
 """
+import os
+
+if __name__ == "__main__":      # must precede the jax import below
+    from repro.launch._xla_env import force_host_device_count
+    force_host_device_count()
+
 import argparse
 import json
 import re
@@ -49,6 +58,16 @@ DTYPE_BYTES = {
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
     "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
 }
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a flat dict on some jax
+    versions and a one-entry-per-program list on others (0.4.3x);
+    normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
 
 
 def parse_collective_bytes(hlo: str) -> Dict[str, float]:
@@ -264,7 +283,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo_text = compiled.as_text()
         coll = parse_collective_bytes(hlo_text)
         # trip-count-aware executed costs (XLA cost_analysis counts while

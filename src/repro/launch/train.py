@@ -1,4 +1,4 @@
-"""Training driver.
+"""SPMD training driver (the ``spmd`` backend of ``repro.api``).
 
 Modes:
   * ``sync``   — standard fully-synchronous data parallelism (the paper's
@@ -8,13 +8,19 @@ Modes:
   * ``hybrid`` — the Smooth Switch: reduction-group size annealed by the
                  threshold schedule, replicas merged at phase switches.
 
+The engine is :func:`run_training`, which consumes a declarative
+:class:`repro.api.ExperimentSpec` (the same spec the simulator backend
+consumes) and returns ``(params, history)``.  The legacy keyword surface
+:func:`train` remains as a deprecation shim.
+
 Runs on whatever devices exist (CPU tests use
 XLA_FLAGS=--xla_force_host_platform_device_count=8); the same code drives
 the production mesh.
 
-Example (the end-to-end driver):
+Example (the end-to-end driver; equivalently ``python -m repro run
+--backend spmd ...``):
   python -m repro.launch.train --arch xlstm-350m --smoke --steps 200 \
-      --mode hybrid --schedule step --step-size 30
+      --mode hybrid --schedule step:30
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -32,7 +39,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import save_checkpoint
 from repro.configs.registry import ARCH_NAMES, get_config, smoke_variant
-from repro.core.schedule import (SCHEDULES, constant_schedule)
 from repro.core.spmd_hybrid import (build_phases, make_replica_step,
                                     merge_replicas, replica_divergence,
                                     replica_param_shardings,
@@ -62,34 +68,40 @@ def _shard_batch_R(batch, mesh, R):
     return jax.tree.map(f, batch)
 
 
-def train(arch: str, steps: int, mode: str, batch: int, seq: int,
-          lr: float, schedule_kind: str, step_size: int, smoke: bool,
-          merge_alpha: float = 1.0, log_every: int = 10,
-          ckpt_dir: Optional[str] = None, seed: int = 0,
-          out_json: Optional[str] = None):
-    cfg = get_config(arch)
-    if smoke:
+def run_training(spec, ckpt_dir: Optional[str] = None,
+                 out_json: Optional[str] = None, verbose: bool = True):
+    """Run the SPMD driver from an :class:`repro.api.ExperimentSpec`.
+
+    Returns ``(params_final, history)`` where ``history`` is the logged
+    list of per-step metric dicts (``repro.api.SpmdTrainer`` adapts it
+    into the unified ``RunResult``).
+    """
+    from repro.api.schedules import parse_schedule
+
+    cfg = get_config(spec.arch)
+    if spec.smoke:
         cfg = dataclasses.replace(smoke_variant(cfg), name=cfg.name)
     assert cfg.frontend is None, "train driver uses token streams"
 
     n_dev = jax.device_count()
-    data_axis = n_dev
-    opt = adamw(lr)
-    stream = token_stream(seed, cfg.vocab_size, batch, seq)
+    if n_dev % spec.mesh_model != 0:
+        raise ValueError(f"mesh_model={spec.mesh_model} must divide the "
+                         f"device count ({n_dev})")
+    data_axis = n_dev // spec.mesh_model
+    opt = adamw(spec.lr)
+    stream = token_stream(spec.seed, cfg.vocab_size, spec.batch, spec.seq)
 
-    # --- schedule -> phases
-    if mode == "sync":
+    # --- schedule -> group-size phases
+    if spec.mode == "sync":
         phases = [(0, data_axis)]
-    elif mode == "async":
+    elif spec.mode == "async":
         phases = [(0, 1)]
     else:
-        sched = (SCHEDULES[schedule_kind](data_axis, step_size)
-                 if schedule_kind == "step"
-                 else SCHEDULES[schedule_kind](data_axis, steps))
+        sched = parse_schedule(spec.schedule, data_axis)
         phases = [(p.t_start, p.group_size)
-                  for p in build_phases(sched, steps, data_axis)]
+                  for p in build_phases(sched, spec.steps, data_axis)]
 
-    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    params = M.init_params(jax.random.PRNGKey(spec.seed), cfg)
 
     def loss_fn(p, b):
         return M.loss_fn(p, b, cfg)
@@ -102,6 +114,7 @@ def train(arch: str, steps: int, mode: str, batch: int, seq: int,
     tokens_done = 0
     params_R = None
     step = 0
+    steps = spec.steps
 
     for idx, (t_start, g) in enumerate(phases):
         t_end = phases[idx + 1][0] if idx + 1 < len(phases) else steps
@@ -117,9 +130,9 @@ def train(arch: str, steps: int, mode: str, batch: int, seq: int,
             # modules with collectives interleave; on TPU this is one
             # host-sync per phase, a handful per run).
             host = jax.device_get(params_R)
-            host = merge_replicas(host, alpha=merge_alpha)
+            host = merge_replicas(host, alpha=spec.merge_alpha)
             host_R = reshard_replicas(host, R)
-        mesh = build_hybrid_mesh(R)
+        mesh = build_hybrid_mesh(R, spec.mesh_model)
         with axis_rules(mesh):
             p_sh = replica_param_shardings(params, mesh)
             params_R = jax.device_put(host_R, p_sh)
@@ -132,8 +145,8 @@ def train(arch: str, steps: int, mode: str, batch: int, seq: int,
                 b = next(stream)
                 b_R = _shard_batch_R(b, mesh, R)
                 params_R, opt_R, metrics = step_fn(params_R, opt_R, b_R)
-                tokens_done += batch * seq
-                if step % log_every == 0 or step == t_end - 1:
+                tokens_done += spec.batch * spec.seq
+                if step % spec.log_every == 0 or step == t_end - 1:
                     div = float(metrics["divergence"]) if R > 1 else 0.0
                     rec = {"step": step, "group_size": g, "replicas": R,
                            "loss": float(metrics["loss"]),
@@ -141,8 +154,10 @@ def train(arch: str, steps: int, mode: str, batch: int, seq: int,
                            "wall_s": round(time.time() - t0, 2),
                            "tokens": tokens_done}
                     history.append(rec)
-                    print(f"step {step:5d}  g={g:3d} R={R:3d} "
-                          f"loss={rec['loss']:.4f} div={div:.3e}", flush=True)
+                    if verbose:
+                        print(f"step {step:5d}  g={g:3d} R={R:3d} "
+                              f"loss={rec['loss']:.4f} div={div:.3e}",
+                              flush=True)
                 step += 1
 
             jax.block_until_ready((params_R, opt_R))
@@ -150,20 +165,55 @@ def train(arch: str, steps: int, mode: str, batch: int, seq: int,
                 merged = merge_replicas(jax.device_get(params_R))
                 one = jax.tree.map(lambda x: np.asarray(x[0]), merged)
                 save_checkpoint(os.path.join(ckpt_dir, f"step_{step}"),
-                                one, step, extra={"arch": arch,
-                                                  "mode": mode})
+                                one, step, extra={"arch": spec.arch,
+                                                  "mode": spec.mode})
 
     # final merge for the returned model
     params_final = jax.tree.map(lambda x: np.asarray(x[0]),
                                 merge_replicas(jax.device_get(params_R)))
     if out_json:
         with open(out_json, "w") as f:
-            json.dump({"arch": arch, "mode": mode, "history": history}, f,
+            json.dump({"arch": spec.arch, "mode": spec.mode,
+                       "spec": spec.to_dict(), "history": history}, f,
                       indent=2)
     return params_final, history
 
 
+def _legacy_schedule_spec(schedule_kind: str, step_size: int,
+                          steps: int) -> str:
+    """Map the old (schedule_kind, step_size) kwargs onto a spec string —
+    the branch the old driver hard-coded (``step`` took a step size while
+    every other family took the step horizon)."""
+    if schedule_kind == "step":
+        return f"step:{step_size}"
+    return f"{schedule_kind}:horizon={steps}"
+
+
+def train(arch: str, steps: int, mode: str, batch: int, seq: int,
+          lr: float, schedule_kind: str, step_size: int, smoke: bool,
+          merge_alpha: float = 1.0, log_every: int = 10,
+          ckpt_dir: Optional[str] = None, seed: int = 0,
+          out_json: Optional[str] = None):
+    """Deprecated keyword surface; use ``repro.api`` (ExperimentSpec ->
+    run()) or :func:`run_training` directly."""
+    from repro.api.spec import ExperimentSpec
+
+    warnings.warn(
+        "repro.launch.train.train(...) is deprecated; build a "
+        "repro.api.ExperimentSpec and call repro.api.run() or "
+        "run_training()", DeprecationWarning, stacklevel=2)
+    spec = ExperimentSpec(
+        arch=arch, backend="spmd", mode=mode,
+        schedule=_legacy_schedule_spec(schedule_kind, step_size, steps)
+        if mode == "hybrid" else None,
+        seed=seed, lr=lr, batch=batch, steps=steps, seq=seq,
+        merge_alpha=merge_alpha, smoke=smoke, log_every=log_every)
+    return run_training(spec, ckpt_dir=ckpt_dir, out_json=out_json)
+
+
 def main(argv=None):
+    from repro.api.spec import ExperimentSpec
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="xlstm-350m")
     ap.add_argument("--steps", type=int, default=100)
@@ -172,8 +222,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--schedule", choices=tuple(SCHEDULES), default="step")
-    ap.add_argument("--step-size", type=int, default=30)
+    ap.add_argument("--schedule", default="step",
+                    help='schedule spec, e.g. "step:30" or '
+                         '"cosine:horizon=200" (a bare family name combines '
+                         "with --step-size/--steps, legacy style)")
+    ap.add_argument("--step-size", type=int, default=30,
+                    help="legacy: step size when --schedule is a bare "
+                         "family name")
     ap.add_argument("--merge-alpha", type=float, default=1.0)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
@@ -181,10 +236,20 @@ def main(argv=None):
     ap.add_argument("--out-json", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    train(args.arch, args.steps, args.mode, args.batch, args.seq, args.lr,
-          args.schedule, args.step_size, args.smoke,
-          merge_alpha=args.merge_alpha, ckpt_dir=args.ckpt_dir,
-          seed=args.seed, out_json=args.out_json)
+
+    schedule = args.schedule
+    if schedule and ":" not in schedule:
+        schedule = _legacy_schedule_spec(schedule, args.step_size,
+                                         args.steps)
+    try:
+        spec = ExperimentSpec(
+            arch=args.arch, backend="spmd", mode=args.mode,
+            schedule=schedule if args.mode == "hybrid" else None,
+            seed=args.seed, lr=args.lr, batch=args.batch, steps=args.steps,
+            seq=args.seq, merge_alpha=args.merge_alpha, smoke=args.smoke)
+    except ValueError as e:
+        ap.error(str(e))     # clean CLI error, as the old choices= gave
+    run_training(spec, ckpt_dir=args.ckpt_dir, out_json=args.out_json)
 
 
 if __name__ == "__main__":

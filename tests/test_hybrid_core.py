@@ -22,9 +22,9 @@ from repro.models.cnn import init_mlp_clf, mlp_clf_forward, nll_loss
     ["step", "linear", "cosine", "exp"]), horizon=st.integers(10, 2000),
     t=st.integers(0, 5000))
 def test_schedule_monotone_and_bounded(workers, kind, horizon, t):
-    from repro.core.schedule import SCHEDULES
+    from repro.api import parse_schedule
     arg = 50 if kind == "step" else horizon
-    s = SCHEDULES[kind](workers, arg)
+    s = parse_schedule(f"{kind}:{arg}", workers)
     k_t, k_next = s(t), s(t + 1)
     assert 1 <= k_t <= workers
     assert k_next >= k_t          # monotone non-decreasing
@@ -106,7 +106,7 @@ def _run(sim_setup, mode, schedule=None, seed=0):
     loss, params, data, pool = sim_setup
     tr = PSTrainer(loss, params, data, lr=0.01, batch_size=16, pool=pool,
                    seed=seed)
-    return tr.run(mode, horizon=3.0, schedule=schedule)
+    return tr.simulate(mode, horizon=3.0, schedule=schedule)
 
 
 def test_hybrid_k1_equals_async(sim_setup):

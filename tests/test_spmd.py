@@ -41,9 +41,10 @@ def test_dryrun_lite_small_mesh():
         from repro.parallel.sharding import axis_rules
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        # NOTE: repro.launch.dryrun must NOT be imported here — it pins
-        # XLA to 512 host devices at import (by design, for the real
-        # dry-run); this test wants the 4 forced by its own env.
+        from repro.launch.dryrun import cost_analysis_dict
+        # (importing repro.launch.dryrun is safe now: the 512-device
+        # override only applies under its __main__ path, so this test
+        # keeps the 4 devices forced by its own env)
         def batch_shardings(batch, mesh):
             return jax.tree.map(lambda x: NamedSharding(
                 mesh, P("data", *([None] * (x.ndim - 1)))), batch)
@@ -69,7 +70,7 @@ def test_dryrun_lite_small_mesh():
                               ).lower(params, opt_sds, batch)
             compiled = lowered.compile()
             assert compiled.memory_analysis() is not None
-            ca = compiled.cost_analysis()
+            ca = cost_analysis_dict(compiled)
             assert ca.get("flops", 0) > 0
         print("DRYRUN_LITE_OK")
         """, devices=4)
