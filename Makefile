@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test quickstart smoke-sim smoke-train examples
+.PHONY: test quickstart smoke-sim smoke-train smoke-cluster examples
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,6 +21,14 @@ smoke-train:
 	$(PY) -m repro run --backend spmd --arch xlstm-350m --smoke \
 	    --steps 8 --mode hybrid --schedule step:4 --batch 4 --seq 32 \
 	    --out /tmp/repro_spmd_smoke.json
+
+# wall-clock cluster backend with one injected straggler; the hard
+# `timeout` turns a deadlocked barrier into a fast failure, not a hang
+smoke-cluster:
+	timeout 120 $(PY) -m repro run --backend cluster --arch mlp --smoke \
+	    --cluster-workers 4 --wall-budget 10 --wall-sample-every 1 \
+	    --mode hybrid --schedule step:40 --straggler 0:0.1 --quiet \
+	    --out /tmp/repro_cluster_smoke.json
 
 examples:
 	$(PY) examples/quickstart.py

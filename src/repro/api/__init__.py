@@ -12,8 +12,10 @@ The paper's contribution is a single knob — the threshold schedule K(t)
     result.save("result.json")          # reproducible artifact
 
 Change ``backend="spmd"`` and the same spec drives the group-annealed
-SPMD driver on real devices.  ``python -m repro`` exposes the same
-pieces as subcommands (run / simulate / serve / dryrun / bench).
+SPMD driver on real devices; ``backend="cluster"`` runs a wall-clock
+parameter server with real concurrent workers and fault injection
+(:mod:`repro.cluster`).  ``python -m repro`` exposes the same pieces as
+subcommands (run / simulate / serve / dryrun / bench).
 
 Pieces:
   * :class:`ExperimentSpec` — frozen, JSON-round-tripping description
@@ -36,11 +38,15 @@ from repro.api.spec import (BACKENDS, FLUSH_MODES, MODES,  # noqa: F401
 from repro.api.trainers import (SIM_WORKLOADS, TRAINERS,  # noqa: F401
                                 SimulatorTrainer, SpmdTrainer, Trainer,
                                 get_trainer, register_sim_workload, run)
+from repro.cluster.faults import FaultPlan  # noqa: F401
 
 __all__ = [
     "BACKENDS", "MODES", "FLUSH_MODES", "ExperimentSpec", "RunResult",
-    "SCHEDULE_FAMILIES", "ScheduleFamily", "parse_schedule",
+    "FaultPlan", "SCHEDULE_FAMILIES", "ScheduleFamily", "parse_schedule",
     "register_schedule", "schedule_help", "Trainer", "SimulatorTrainer",
-    "SpmdTrainer", "TRAINERS", "SIM_WORKLOADS", "get_trainer",
-    "register_sim_workload", "run",
+    "SpmdTrainer", "TRAINERS", "SIM_WORKLOADS",
+    "get_trainer", "register_sim_workload", "run",
 ]
+# ClusterTrainer deliberately stays out of the eager exports: the
+# cluster runtime loads lazily (via TRAINERS["cluster"] / get_trainer,
+# or `from repro.cluster.trainer import ClusterTrainer`).

@@ -2,7 +2,7 @@
 
 Subcommands:
   run       execute an ExperimentSpec (flags and/or --spec JSON file) on
-            either backend and emit a RunResult JSON
+            any backend (sim | spmd | cluster) and emit a RunResult JSON
   simulate  alias for ``run --backend sim`` (paper-faithful simulator);
             ``--smoke`` picks a seconds-scale CI configuration
   serve     batched prefill+decode demo (repro.launch.serve)
@@ -15,12 +15,15 @@ Examples:
   python -m repro simulate --smoke
   python -m repro run --backend spmd --arch xlstm-350m --smoke \
       --steps 40 --mode hybrid --schedule step:10 --out /tmp/result.json
+  python -m repro run --backend cluster --arch mlp --cluster-workers 4 \
+      --wall-budget 10 --straggler 0:0.1 --kill 1:4 --respawn-after 1
   python -m repro run --spec experiment.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import List, Optional
 
@@ -49,6 +52,27 @@ _SPEC_FLAGS = [
     ("--merge-alpha", "merge_alpha", float, "spmd: partial-merge factor"),
     ("--mesh-model", "mesh_model", int, "spmd: model-parallel axis size"),
     ("--log-every", "log_every", int, "spmd: metric logging interval"),
+    ("--cluster-workers", "cluster_workers", int,
+     "cluster: worker thread count"),
+    ("--wall-budget", "wall_budget_s", float,
+     "cluster: wall-clock training budget (real seconds)"),
+    ("--wall-sample-every", "wall_sample_every_s", float,
+     "cluster: metric grid spacing (real seconds)"),
+    ("--max-gradients", "max_gradients", int,
+     "cluster: stop after N applied gradients"),
+]
+# fault-plan flags (cluster backend): merged into spec.faults
+_FAULT_FLAGS = [
+    ("--straggler", "stragglers", 'WID:SECONDS[,WID:SECONDS...]',
+     "cluster: extra seconds of delay per gradient for these workers"),
+    ("--kill", "kill", 'WID:AT_S[,WID:AT_S...]',
+     "cluster: kill these workers at the given wall-clock seconds"),
+    ("--respawn-after", "respawn_after_s", float,
+     "cluster: respawn killed workers after this many seconds"),
+    ("--ckpt-every", "checkpoint_every_s", float,
+     "cluster: server checkpoint cadence (needs --ckpt-dir)"),
+    ("--restore-at", "restore_at_s", float,
+     "cluster: restore the latest checkpoint at this wall-clock second"),
 ]
 _POOL_FLAGS = [
     ("--workers", "num_workers", int, "sim: worker count"),
@@ -69,13 +93,25 @@ def _add_spec_flags(ap: argparse.ArgumentParser, backend_flag: bool):
         ap.add_argument(flag, dest=dest, type=typ, default=None, help=hlp)
     for flag, dest, typ, hlp in _POOL_FLAGS:
         ap.add_argument(flag, dest=dest, type=typ, default=None, help=hlp)
+    for flag, dest, typ, hlp in _FAULT_FLAGS:
+        if isinstance(typ, str):     # WID:SECONDS pair lists
+            ap.add_argument(flag, dest=f"fault_{dest}", metavar=typ,
+                            default=None, help=hlp)
+        else:
+            ap.add_argument(flag, dest=f"fault_{dest}", type=typ,
+                            default=None, help=hlp)
     ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
                     default=None, help="reduced config / dataset sizes")
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="write the full RunResult JSON here")
     ap.add_argument("--save-spec", default=None, metavar="FILE",
                     help="write the resolved ExperimentSpec JSON here")
-    ap.add_argument("--ckpt-dir", default=None, help="spmd: checkpoints")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="spmd/cluster: checkpoint directory")
+    ap.add_argument("--resume-from", default=None, metavar="CKPT",
+                    help="cluster: restore this checkpoint into the "
+                         "server before training (K(t) resumes from the "
+                         "restored step)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-step logs; print only the result")
 
@@ -96,6 +132,18 @@ def _build_spec(args, backend: Optional[str]) -> ExperimentSpec:
     if pool_changes:
         import dataclasses
         changes["pool"] = dataclasses.replace(spec.pool, **pool_changes)
+    fault_changes = {}
+    for _, field, typ, _ in _FAULT_FLAGS:
+        v = getattr(args, f"fault_{field}")
+        if v is not None:
+            if isinstance(typ, str):
+                from repro.cluster.faults import parse_fault_pairs
+                v = parse_fault_pairs(v)
+            fault_changes[field] = v
+    if fault_changes:
+        import dataclasses
+        changes["faults"] = dataclasses.replace(spec.faults,
+                                                **fault_changes)
     return spec.with_(**changes) if changes else spec
 
 
@@ -107,6 +155,11 @@ def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
     if spec.backend == "spmd":
         trainer = trainers.SpmdTrainer(ckpt_dir=args.ckpt_dir,
                                        verbose=not args.quiet)
+    elif spec.backend == "cluster":
+        from repro.cluster.trainer import ClusterTrainer
+        trainer = ClusterTrainer(ckpt_dir=args.ckpt_dir,
+                                 resume_from=args.resume_from,
+                                 verbose=not args.quiet)
     else:
         trainer = trainers.SimulatorTrainer()
     result = trainer.run(spec)
@@ -159,10 +212,23 @@ def _cmd_passthrough(name: str, rest: List[str]) -> int:
     if name == "bench":
         try:
             from benchmarks.run import main as bench_main
-        except ImportError as e:
-            print(f"benchmarks package not importable ({e}); run from the "
-                  f"repository root", file=sys.stderr)
-            return 1
+        except ImportError:
+            # the top-level benchmarks package lives next to src/ in the
+            # repo; resolve it relative to the repro package so
+            # `python -m repro bench` works from any CWD (repro is a
+            # namespace package: use __path__, __file__ is None)
+            import repro
+            pkg_dir = os.path.abspath(list(repro.__path__)[0])
+            root = os.path.dirname(os.path.dirname(pkg_dir))
+            if root not in sys.path:
+                sys.path.insert(0, root)
+            try:
+                from benchmarks.run import main as bench_main
+            except ImportError as e:
+                print(f"benchmarks package not importable ({e}; looked "
+                      f"next to the repro package in {root})",
+                      file=sys.stderr)
+                return 1
         return _forward(bench_main, rest)
     raise AssertionError(name)
 

@@ -3,8 +3,9 @@
 :class:`RunResult` supersedes the simulator's ``SimResult`` and the SPMD
 driver's ad-hoc ``history`` list of dicts with one shape: a metric grid
 (``grid`` in ``grid_unit`` units — virtual seconds for the simulator,
-optimizer steps for SPMD) with aligned per-metric series, plus update /
-gradient counters and provenance (the spec that produced it).
+optimizer steps for SPMD, real wall-clock seconds for the cluster
+runtime) with aligned per-metric series, plus update / gradient counters
+and provenance (the spec that produced it).
 
 ``averaged()`` computes the paper's headline statistic — every metric
 averaged over the entire training interval — and ``to_json`` /
@@ -19,10 +20,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class RunResult:
-    backend: str                       # "sim" | "spmd"
+    backend: str                       # "sim" | "spmd" | "cluster"
     mode: str                          # "sync" | "async" | "hybrid"
     schedule: Optional[str]            # schedule spec string (hybrid)
-    grid_unit: str                     # "virtual_s" | "step"
+    grid_unit: str                     # "virtual_s" | "step" | "wall_s"
     grid: Tuple[float, ...]            # metric sample points
     metrics: Dict[str, Tuple[float, ...]]  # name -> series, len == len(grid)
     num_updates: int = 0               # parameter updates applied
@@ -123,3 +124,31 @@ class RunResult:
             wall_s=float(wall_s),
             spec=spec.to_dict() if spec is not None else None,
             extra={"history": history})
+
+    @classmethod
+    def from_cluster(cls, cres, spec=None, wall_s: float = 0.0
+                     ) -> "RunResult":
+        """Adapt a :class:`repro.cluster.runtime.ClusterResult`.
+
+        ``num_gradients`` is the server's applied-gradient counter,
+        exactly; the full conservation ledger and the fault/checkpoint
+        timeline ride along in ``extra``."""
+        mode = cres.mode
+        return cls(
+            backend="cluster", mode=mode,
+            schedule=getattr(spec, "schedule", None)
+            if mode == "hybrid" else None,
+            grid_unit="wall_s",
+            grid=tuple(float(t) for t in cres.times),
+            metrics={
+                "train_loss": tuple(float(x) for x in cres.train_loss),
+                "test_loss": tuple(float(x) for x in cres.test_loss),
+                "test_acc": tuple(float(x) for x in cres.test_acc),
+            },
+            num_updates=int(cres.num_updates),
+            num_gradients=int(cres.num_gradients),
+            wall_s=float(wall_s),
+            spec=spec.to_dict() if spec is not None else None,
+            extra={"accounting": dict(cres.accounting),
+                   "events": list(cres.events),
+                   "start_version": int(cres.start_version)})

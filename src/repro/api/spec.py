@@ -3,7 +3,9 @@
 :class:`ExperimentSpec` is a frozen dataclass naming *what* to run —
 architecture/workload, backend (``sim`` = the paper-faithful event-driven
 parameter-server simulator, ``spmd`` = the group-annealed data-parallel
-driver), aggregation mode, threshold schedule (as a
+driver, ``cluster`` = the wall-clock parameter-server runtime with real
+concurrent workers and fault injection), aggregation mode, threshold
+schedule (as a
 :mod:`repro.api.schedules` spec string), worker pool or step budget,
 seed, and flush/merge options.  It round-trips through JSON
 (``to_json``/``from_json``), so a run is reproducible from a single
@@ -14,10 +16,11 @@ artifact:
     result = repro.api.run(spec)        # -> RunResult
     print(result.averaged())            # paper-style interval averages
 
-Backend-specific fields are simply ignored by the other backend (the
+Backend-specific fields are simply ignored by the other backends (the
 simulator reads ``pool``/``horizon``; the SPMD driver reads
-``steps``/``seq``/``mesh_model``), so one spec can be re-targeted by
-changing ``backend`` alone.
+``steps``/``seq``/``mesh_model``; the cluster runtime reads
+``cluster_workers``/``wall_budget_s``/``faults``), so one spec can be
+re-targeted by changing ``backend`` alone.
 """
 from __future__ import annotations
 
@@ -26,9 +29,10 @@ import json
 from typing import Any, Dict, Optional
 
 from repro.api.schedules import parse_schedule
+from repro.cluster.faults import FaultPlan
 from repro.core.simulator import WorkerPool
 
-BACKENDS = ("sim", "spmd")
+BACKENDS = ("sim", "spmd", "cluster")
 MODES = ("sync", "async", "hybrid")
 FLUSH_MODES = ("sum", "mean")
 
@@ -58,6 +62,12 @@ class ExperimentSpec:
     mesh_model: int = 1            # model-parallel axis size
     smoke: bool = True             # reduced config / dataset sizes
     log_every: int = 10
+    # cluster backend (wall clock, real concurrent workers)
+    cluster_workers: int = 4
+    wall_budget_s: float = 5.0     # real seconds of training
+    wall_sample_every_s: float = 0.25   # metric-grid spacing (real s)
+    max_gradients: Optional[int] = None  # stop after N applied gradients
+    faults: FaultPlan = FaultPlan()      # stragglers / kills / checkpoints
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -71,6 +81,8 @@ class ExperimentSpec:
                              f"got {self.flush_mode!r}")
         if isinstance(self.pool, dict):   # from_json convenience
             object.__setattr__(self, "pool", WorkerPool(**self.pool))
+        if isinstance(self.faults, dict):  # from_json convenience
+            object.__setattr__(self, "faults", FaultPlan(**self.faults))
         if self.mode == "hybrid":
             if not self.schedule:
                 raise ValueError("hybrid mode requires a schedule spec "
@@ -79,10 +91,14 @@ class ExperimentSpec:
             # for syntax, any plausible value will do
             parse_schedule(self.schedule, max(2, self.pool.num_workers))
         for field in ("steps", "horizon", "sample_every", "batch", "seq",
-                      "mesh_model", "log_every"):
+                      "mesh_model", "log_every", "cluster_workers",
+                      "wall_budget_s", "wall_sample_every_s"):
             if getattr(self, field) <= 0:
                 raise ValueError(f"{field} must be > 0, "
                                  f"got {getattr(self, field)!r}")
+        if self.max_gradients is not None and self.max_gradients <= 0:
+            raise ValueError(f"max_gradients must be None or > 0, "
+                             f"got {self.max_gradients!r}")
 
     # --------------------------------------------------------- derivation
     def with_(self, **changes) -> "ExperimentSpec":
@@ -91,7 +107,14 @@ class ExperimentSpec:
 
     # ------------------------------------------------------ serialization
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)   # recurses into the WorkerPool
+        d = dataclasses.asdict(self)   # recurses into pool and faults
+        # canonical JSON form for the fault pair lists (tuples would
+        # come back as lists and break dict-level equality)
+        d["faults"] = {**d["faults"],
+                       "stragglers": [list(p) for p
+                                      in d["faults"]["stragglers"]],
+                       "kill": [list(p) for p in d["faults"]["kill"]]}
+        return d
 
     def to_json(self, indent: Optional[int] = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent)

@@ -13,6 +13,10 @@ a :class:`~repro.api.result.RunResult`:
     (``backend="spmd"``); ``spec.arch`` names an architecture from
     :mod:`repro.configs.registry`.  The trained parameters of the last
     run are kept on ``self.last_params``.
+  * :class:`repro.cluster.trainer.ClusterTrainer` — the wall-clock
+    parameter-server runtime with real concurrent workers and fault
+    injection (``backend="cluster"``); ``spec.arch`` names the same
+    workloads as the simulator.
 
 Both return the same ``RunResult`` shape, so downstream analysis
 (`averaged()`, JSON artifacts, paper tables) is backend-agnostic.
@@ -161,8 +165,10 @@ class SimulatorTrainer:
 class SpmdTrainer:
     """Adapter: ExperimentSpec -> group-annealed SPMD driver -> RunResult.
 
-    ``num_gradients`` counts one gradient per replica per step (the SPMD
-    analogue of the simulator's per-worker gradients)."""
+    ``num_gradients`` counts one gradient per replica per step, reported
+    exactly by the driver (every step counts the replica axis it
+    actually launched — no reconstruction from the log_every-thinned
+    history)."""
 
     def __init__(self, ckpt_dir: Optional[str] = None,
                  verbose: bool = True):
@@ -174,21 +180,24 @@ class SpmdTrainer:
         from repro.launch.train import run_training
 
         t0 = time.time()
-        params, history = run_training(spec, ckpt_dir=self.ckpt_dir,
-                                       verbose=self.verbose)
+        params, history, stats = run_training(spec, ckpt_dir=self.ckpt_dir,
+                                              verbose=self.verbose)
         self.last_params = params
-        # one gradient per replica per step, estimated from the logged
-        # per-step replica counts (history is log_every-thinned)
-        grads = sum(h.get("replicas", 1) for h in history)
-        grads = int(round(grads * spec.steps / max(1, len(history))))
         return RunResult.from_history(
             history, spec=spec, wall_s=time.time() - t0,
-            num_updates=spec.steps, num_gradients=grads)
+            num_updates=stats["num_updates"],
+            num_gradients=stats["num_gradients"])
+
+
+def _cluster_trainer() -> Trainer:
+    from repro.cluster.trainer import ClusterTrainer
+    return ClusterTrainer()
 
 
 TRAINERS: Dict[str, Callable[[], Trainer]] = {
     "sim": SimulatorTrainer,
     "spmd": SpmdTrainer,
+    "cluster": _cluster_trainer,
 }
 
 

@@ -41,11 +41,17 @@ def save_checkpoint(path: str, params, step: int,
                     extra: Optional[Dict[str, Any]] = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(params)
-    np.savez(path + ".npz", **flat)
+    # write-then-rename so a concurrent reader (e.g. the cluster
+    # runtime's mid-run restore) never sees a partial file; the .json
+    # sidecar is the commit marker (latest_step keys off it), so it
+    # lands last.  savez appends ".npz" when missing, hence ".tmp.npz".
+    np.savez(path + ".tmp.npz", **flat)
+    os.replace(path + ".tmp.npz", path + ".npz")
     meta = {"step": int(step), "extra": extra or {},
             "keys": sorted(flat.keys())}
-    with open(path + ".json", "w") as f:
+    with open(path + ".json.tmp", "w") as f:
         json.dump(meta, f)
+    os.replace(path + ".json.tmp", path + ".json")
 
 
 def restore_checkpoint(path: str, like, shardings=None):

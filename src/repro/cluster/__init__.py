@@ -1,0 +1,53 @@
+"""Wall-clock parameter-server runtime (``backend="cluster"``).
+
+Where :mod:`repro.core.simulator` runs the paper's parameter server in
+*virtual* time and :mod:`repro.core.spmd_hybrid` runs its SPMD analogue
+in lockstep, this package runs it for real: worker threads computing
+jitted gradients concurrently against one live server, with stale reads,
+server contention, stragglers, worker kill/respawn, and server
+checkpoint/restore — the failure modes the sync/async tradeoff is
+actually about.
+
+Pieces:
+  * :class:`~repro.cluster.transport.Transport` /
+    :class:`~repro.cluster.transport.InProcTransport` — the wire
+    (in-process queues now; the interface admits multi-process/host);
+  * :class:`~repro.cluster.server.ParameterServer` — live params + the
+    existing ``GradientBuffer``/K(t) machinery under a lock;
+  * :class:`~repro.cluster.worker.Worker` — one thread per worker, real
+    gradients on a deterministic data shard;
+  * :class:`~repro.cluster.faults.FaultPlan` — declarative fault
+    injection (stragglers, kills, respawns, checkpoint cadence);
+  * :class:`~repro.cluster.runtime.ClusterRuntime` — wiring + wall-clock
+    metric sampling;
+  * :class:`~repro.cluster.trainer.ClusterTrainer` — the
+    :mod:`repro.api` adapter.
+"""
+# Only the jax-free pieces load eagerly: repro.api.spec imports
+# FaultPlan from here, and that must not drag the runtime (jax,
+# repro.checkpoint, the worker machinery) into every spec round-trip.
+# The heavy classes resolve lazily on first attribute access (PEP 562).
+from repro.cluster.faults import FaultPlan, parse_fault_pairs  # noqa: F401
+from repro.cluster.transport import (GradientMsg,  # noqa: F401
+                                     InProcTransport, ParamsMsg, Transport)
+
+_LAZY = {
+    "ParameterServer": "repro.cluster.server",
+    "Worker": "repro.cluster.worker",
+    "ClusterRuntime": "repro.cluster.runtime",
+    "ClusterResult": "repro.cluster.runtime",
+    "ClusterTrainer": "repro.cluster.trainer",
+}
+
+__all__ = [
+    "FaultPlan", "parse_fault_pairs", "Transport", "InProcTransport",
+    "GradientMsg", "ParamsMsg", "ParameterServer", "Worker",
+    "ClusterRuntime", "ClusterResult", "ClusterTrainer",
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

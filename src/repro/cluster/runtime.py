@@ -1,0 +1,346 @@
+"""The wall-clock cluster runtime: server + workers + faults + metrics.
+
+:class:`ClusterRuntime` wires one :class:`~repro.cluster.server.
+ParameterServer`, a pool of :class:`~repro.cluster.worker.Worker`
+threads, a :class:`~repro.cluster.transport.InProcTransport`, and the
+:class:`~repro.cluster.faults.FaultPlan` injector, then runs until a
+wall-clock budget elapses or an applied-gradient budget is hit.
+
+Pieces that run concurrently with training:
+
+  * **metric sampler** — snapshots the live params on a fixed wall-clock
+    grid (cheap: pytrees are immutable, a snapshot is a reference);
+    losses/accuracy are evaluated *after* the run so measurement never
+    perturbs the contention being measured;
+  * **fault injector** — kills workers at their planned times (and
+    deregisters them so a sync barrier cannot deadlock on the dead),
+    respawning them after ``respawn_after_s`` with a fresh data-stream
+    generation;
+  * **checkpointer** — saves the server state via :mod:`repro.checkpoint`
+    on a cadence, and optionally restores the latest checkpoint mid-run
+    (``restore_at_s``, simulated server recovery).
+
+Everything blocking takes a timeout and every thread watches a stop
+event, so a wedged run degrades to "budget elapses, run ends" rather
+than a hang.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.cluster.faults import FaultPlan
+from repro.cluster.server import ParameterServer
+from repro.cluster.transport import InProcTransport, Transport
+from repro.cluster.worker import Worker
+from repro.core.schedule import ThresholdSchedule, constant_schedule
+from repro.data.pipeline import shard_iterator
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """What one cluster run produced (adapted into ``RunResult`` by
+    :class:`repro.cluster.trainer.ClusterTrainer`)."""
+    times: np.ndarray            # wall-clock metric grid (seconds)
+    train_loss: np.ndarray
+    test_loss: np.ndarray
+    test_acc: np.ndarray
+    num_updates: int             # parameter updates applied this run
+    num_gradients: int           # == the server's applied counter, exactly
+    mode: str
+    start_version: int           # >0 when resumed from a checkpoint
+    accounting: Dict[str, int]   # applied/dropped/buffered/... + computed
+    events: List[Dict[str, Any]]   # kills, respawns, checkpoints, restores
+    final_params: Any
+    wall_s: float
+
+
+class ClusterRuntime:
+    """One wall-clock parameter-server training run."""
+
+    def __init__(self, loss_fn: Callable, init_params, data, *,
+                 mode: str, lr: float = 0.01, batch: int = 32,
+                 num_workers: int = 4, wall_budget_s: float = 5.0,
+                 sample_every_s: float = 0.25,
+                 schedule: Optional[ThresholdSchedule] = None,
+                 flush_mode: str = "sum", staleness_decay: float = 1.0,
+                 max_gradients: Optional[int] = None, seed: int = 0,
+                 faults: FaultPlan = FaultPlan(),
+                 accuracy_fn: Optional[Callable] = None,
+                 transport: Optional[Transport] = None,
+                 ckpt_dir: Optional[str] = None,
+                 resume_from: Optional[str] = None,
+                 verbose: bool = False):
+        assert mode in ("sync", "async", "hybrid")
+        if mode == "async":
+            schedule = constant_schedule(num_workers, 1)
+        if mode == "hybrid":
+            assert schedule is not None, "hybrid mode needs a schedule"
+        bad_ids = sorted({wid for wid, _ in (*faults.stragglers,
+                                             *faults.kill)
+                          if wid >= num_workers})
+        if bad_ids:
+            raise ValueError(
+                f"FaultPlan names worker ids {bad_ids} but the fleet "
+                f"has only {num_workers} workers (ids 0.."
+                f"{num_workers - 1})")
+        if (faults.checkpoint_every_s > 0 or faults.restore_at_s > 0) \
+                and not ckpt_dir:
+            raise ValueError(
+                "FaultPlan requests checkpointing "
+                f"(checkpoint_every_s={faults.checkpoint_every_s}, "
+                f"restore_at_s={faults.restore_at_s}) but no ckpt_dir "
+                "was given — pass --ckpt-dir / ClusterTrainer(ckpt_dir=)")
+        # every metric snapshot holds a full parameter pytree until the
+        # post-run evaluation; bound the count so a long budget with a
+        # fine grid fails loudly instead of exhausting host memory
+        if wall_budget_s / sample_every_s > 4096:
+            raise ValueError(
+                f"wall_budget_s/sample_every_s = "
+                f"{wall_budget_s / sample_every_s:.0f} metric snapshots "
+                "(> 4096), each retaining a full parameter copy — "
+                "increase sample_every_s")
+        self.loss_fn = loss_fn
+        self.init_params = init_params
+        self.x_tr, self.y_tr, self.x_te, self.y_te = data
+        self.mode = mode
+        self.lr = lr
+        self.batch = batch
+        self.num_workers = num_workers
+        self.wall_budget_s = wall_budget_s
+        self.sample_every_s = sample_every_s
+        self.schedule = schedule
+        self.flush_mode = flush_mode
+        self.staleness_decay = staleness_decay
+        self.max_gradients = max_gradients
+        self.seed = seed
+        self.faults = faults
+        # bounded queue = backpressure: a worker whose gradient the
+        # server can't take yet blocks, as on a real wire
+        self.transport = transport or InProcTransport(
+            grad_capacity=max(4, 2 * num_workers))
+        self.ckpt_dir = ckpt_dir
+        self.resume_from = resume_from
+        self.verbose = verbose
+
+        self._grad = jax.jit(jax.grad(loss_fn))
+        self._loss = jax.jit(loss_fn)
+        self._acc = accuracy_fn
+
+        self._stop = threading.Event()
+        self._workers: Dict[int, Worker] = {}
+        self._all_workers: List[Worker] = []
+        self._generation: Dict[int, int] = {}
+        self.events: List[Dict[str, Any]] = []
+        self._control_errors: List[str] = []
+        self._t0 = 0.0
+
+    def _guarded(self, fn: Callable, name: str) -> threading.Thread:
+        """Control thread whose failure is captured and re-raised by
+        ``run()`` — a dead checkpointer/injector means the fault plan
+        was not executed, which must not look like a clean run."""
+        def body():
+            try:
+                fn()
+            except Exception:
+                import traceback
+                self._control_errors.append(
+                    f"{name}:\n{traceback.format_exc()}")
+        return threading.Thread(target=body, name=name, daemon=True)
+
+    # ------------------------------------------------------------ hooks
+    def _elapsed(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _log_event(self, kind: str, **kw) -> None:
+        ev = {"t": round(self._elapsed(), 3), "event": kind, **kw}
+        self.events.append(ev)
+        if self.verbose:
+            print(f"[cluster +{ev['t']:6.2f}s] {kind} "
+                  f"{ {k: v for k, v in kw.items()} }", flush=True)
+
+    def _spawn(self, wid: int) -> None:
+        gen = self._generation.get(wid, -1) + 1
+        self._generation[wid] = gen
+        batches = shard_iterator(self.x_tr, self.y_tr, wid,
+                                 self.num_workers, self.batch,
+                                 seed=self.seed, generation=gen)
+        w = Worker(wid, grad_fn=self._grad, batches=batches,
+                   transport=self.transport, mode=self.mode,
+                   straggle_s=self.faults.straggle_s(wid), generation=gen)
+        self._workers[wid] = w
+        self._all_workers.append(w)
+        self.server.register(wid)
+        w.start()
+
+    def _kill(self, wid: int) -> None:
+        w = self._workers.get(wid)
+        if w is not None:
+            w.stop_event.set()
+        self.server.deregister(wid)
+        self._log_event("kill", worker=wid)
+
+    # ------------------------------------------------- background loops
+    def _injector(self) -> None:
+        # one merged timeline: a pending respawn must not delay (or
+        # starve) later kill events, so kills and respawns interleave
+        # in wall-clock order ("kill" sorts before "spawn" on ties —
+        # a kill and a respawn at the same instant kill first)
+        events = [(t, "kill", wid) for t, wid in self.faults.kill_events()]
+        if self.faults.respawn_after_s > 0:
+            events += [(t + self.faults.respawn_after_s, "spawn", wid)
+                       for t, wid in self.faults.kill_events()]
+        for t, kind, wid in sorted(events):
+            if self._stop.wait(max(0.0, t - self._elapsed())):
+                return
+            if kind == "kill":
+                self._kill(wid)
+            else:
+                self._spawn(wid)
+                self._log_event("respawn", worker=wid,
+                                generation=self._generation[wid])
+
+    def _checkpointer(self) -> None:
+        while not self._stop.wait(self.faults.checkpoint_every_s):
+            version, params, applied = self.server.snapshot()
+            path = os.path.join(self.ckpt_dir, f"step_{version}")
+            save_checkpoint(path, params, version,
+                            extra={"mode": self.mode, "applied": applied,
+                                   "backend": "cluster"})
+            self._log_event("checkpoint", step=version)
+
+    def _restorer(self) -> None:
+        if self._stop.wait(self.faults.restore_at_s):
+            return
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            self._log_event("restore_skipped", reason="no checkpoint yet")
+            return
+        path = os.path.join(self.ckpt_dir, f"step_{step}")
+        params, step = restore_checkpoint(path, like=self.init_params)
+        self.server.restore(params, step)
+        self._log_event("restore", step=step)
+
+    def _sampler(self, snaps: List) -> None:
+        i = 0
+        while True:
+            target = i * self.sample_every_s
+            wait = target - self._elapsed()
+            if wait > 0 and self._stop.wait(wait):
+                return
+            if self._stop.is_set():
+                return
+            version, params, _ = self.server.snapshot()
+            snaps.append((target, version, params))
+            i += 1
+
+    # -------------------------------------------------------------- run
+    def run(self) -> ClusterResult:
+        start_version = 0
+        start_params = self.init_params
+        if self.resume_from:
+            start_params, start_version = restore_checkpoint(
+                self.resume_from, like=self.init_params)
+
+        # compile the worker gradient before the clock starts, so the
+        # budget measures contention, not XLA (the metric fns are only
+        # evaluated after the run, so they need no warm-up)
+        wx, wy = next(shard_iterator(self.x_tr, self.y_tr, 0,
+                                     self.num_workers, self.batch,
+                                     seed=self.seed))
+        jax.block_until_ready(self._grad(start_params, wx, wy))
+
+        self.server = ParameterServer(
+            start_params, lr=self.lr, mode=self.mode,
+            transport=self.transport, num_workers=self.num_workers,
+            schedule=self.schedule, flush_mode=self.flush_mode,
+            staleness_decay=self.staleness_decay,
+            max_gradients=self.max_gradients, start_version=start_version)
+
+        self._t0 = time.monotonic()
+        if start_version:
+            self._log_event("resume", step=start_version,
+                            path=self.resume_from)
+        snaps: List = []
+        threads = [self._guarded(lambda: self._sampler(snaps), "sampler")]
+        if self.faults.kill:
+            threads.append(self._guarded(self._injector, "injector"))
+        if self.ckpt_dir and self.faults.checkpoint_every_s > 0:
+            threads.append(self._guarded(self._checkpointer, "ckpt"))
+        if self.ckpt_dir and self.faults.restore_at_s > 0:
+            threads.append(self._guarded(self._restorer, "restore"))
+        for t in threads:
+            t.start()
+        for wid in range(self.num_workers):
+            self._spawn(wid)
+
+        deadline = self._t0 + self.wall_budget_s
+        while time.monotonic() < deadline and not self.server.done.is_set():
+            msg = self.transport.recv_gradient(
+                timeout=min(0.02, max(1e-3, deadline - time.monotonic())))
+            if msg is not None:
+                self.server.ingest(msg)
+        wall_s = self._elapsed()
+
+        # ------------------------------------------------------ shutdown
+        # control threads first: the injector must be fully stopped
+        # before worker stop events are set, or a respawn racing the
+        # shutdown would start a worker nobody stops (all its waits
+        # watch self._stop, so these joins return promptly)
+        self._stop.set()
+        for t in threads:
+            t.join(timeout=10.0)
+        for w in self._all_workers:
+            w.stop_event.set()
+        for w in self._all_workers:
+            w.join(timeout=10.0)
+        errors = [f"worker {w.worker_id}.{w.generation}:\n{w.error}"
+                  for w in self._all_workers if w.error]
+        errors += self._control_errors
+        # a thread that outlived its join would keep mutating transport/
+        # server state under the accounting we are about to report
+        errors += [f"{t.name} did not stop within the join timeout"
+                   for t in (*self._all_workers, *threads)
+                   if t.is_alive()]
+        if errors:
+            raise RuntimeError("cluster thread(s) crashed or hung:\n"
+                               + "\n".join(errors))
+
+        in_flight = 0
+        while self.transport.recv_gradient(timeout=0) is not None:
+            in_flight += 1
+        accounting = self.server.accounting()
+        accounting["in_flight"] = in_flight
+        accounting["computed"] = sum(w.sent for w in self._all_workers)
+        per_worker: Dict[str, int] = {}
+        for w in self._all_workers:     # all generations of each id
+            key = str(w.worker_id)
+            per_worker[key] = per_worker.get(key, 0) + w.sent
+        accounting["computed_per_worker"] = per_worker
+
+        # ---------------------------------- evaluate the metric snapshots
+        times, tr, te, acc = [], [], [], []
+        for target, _, params in snaps:
+            times.append(target)
+            tr.append(float(self._loss(params, self.x_tr[:2048],
+                                       self.y_tr[:2048])))
+            te.append(float(self._loss(params, self.x_te, self.y_te)))
+            acc.append(float(self._acc(params, self.x_te, self.y_te))
+                       if self._acc is not None else 0.0)
+
+        _, final_params, applied = self.server.snapshot()
+        return ClusterResult(
+            times=np.asarray(times), train_loss=np.asarray(tr),
+            test_loss=np.asarray(te), test_acc=np.asarray(acc),
+            num_updates=accounting["updates"], num_gradients=applied,
+            mode=self.mode, start_version=start_version,
+            accounting=accounting, events=list(self.events),
+            final_params=jax.device_get(final_params), wall_s=wall_s)

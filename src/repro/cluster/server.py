@@ -1,0 +1,201 @@
+"""The parameter server: live params + aggregation policy under a lock.
+
+The server owns the one mutable copy of the parameters and reuses the
+repo's existing aggregation machinery — :class:`repro.core.buffer.
+GradientBuffer` and a :class:`repro.core.schedule.ThresholdSchedule`
+K(t) — so the cluster runtime exercises *exactly* the same policies as
+the virtual-time simulator, but against real concurrent workers:
+
+  * ``async``  — K(t) ≡ 1: every ingested gradient is applied at once;
+  * ``hybrid`` — gradients buffer until |buffer| >= K(version), then
+    flush as one update (Smooth Switch);
+  * ``sync``   — a barrier round: one gradient from every *live* worker
+    at the current version, aggregated in worker-id order (which makes
+    the policy bitwise-reproducible), applied as their mean.  Gradients
+    from an older version (e.g. a worker that died mid-round and came
+    back) are dropped and accounted.
+
+Every mutation happens under ``self.lock``; membership changes
+(kill/respawn) re-check the sync barrier so a shrinking fleet cannot
+deadlock a round.  Exact accounting — ``applied`` / ``dropped``
+gradients and ``version`` (= updates) — is what
+``RunResult.num_gradients`` reports, to the gradient.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buffer import GradientBuffer
+from repro.core.schedule import ThresholdSchedule
+from repro.cluster.transport import GradientMsg, ParamsMsg, Transport
+
+
+class ParameterServer:
+    def __init__(self, params, *, lr: float, mode: str,
+                 transport: Transport, num_workers: int,
+                 schedule: Optional[ThresholdSchedule] = None,
+                 flush_mode: str = "sum", staleness_decay: float = 1.0,
+                 max_gradients: Optional[int] = None,
+                 start_version: int = 0):
+        assert mode in ("sync", "async", "hybrid")
+        assert flush_mode in ("sum", "mean")
+        if mode in ("async", "hybrid"):
+            assert schedule is not None, f"{mode} mode needs a K(t) schedule"
+        self.lock = threading.RLock()
+        self.params = params
+        self.version = int(start_version)   # parameter updates applied
+        self.start_version = int(start_version)
+        self.mode = mode
+        self.lr = lr
+        self.schedule = schedule
+        self.flush_mode = flush_mode
+        self.staleness_decay = staleness_decay
+        self.max_gradients = max_gradients
+        self.transport = transport
+        self.buffer = GradientBuffer(staleness_decay)
+        # the whole flush — weighted aggregation of K gradients + the
+        # parameter update — is one fused executable; the server is a
+        # serial resource, so per-leaf eager dispatch here would
+        # serialize the fleet.  jit caches one executable per buffer
+        # size K (the argument tuple's structure), mirroring the SPMD
+        # driver's one-executable-per-phase discipline.
+        def _agg_apply(params, grads, weights, scale):
+            wsum = jnp.sum(weights)
+
+            def comb(p, *leaves):
+                s = weights[0] * leaves[0]
+                for w, leaf in zip(weights[1:], leaves[1:]):
+                    s = s + w * leaf
+                return p - scale * (s / wsum)
+
+            return jax.tree.map(comb, params, *grads)
+
+        self._agg_apply = jax.jit(_agg_apply)
+        # compile every buffer size the run can reach (K ∈ 1..fleet)
+        # before the clock starts: a flush only ever aggregates up to
+        # one gradient per worker, and compiling mid-run would stall
+        # the whole fleet under the server lock
+        for k in range(1, max(1, num_workers) + 1):
+            self._agg_apply(params, (params,) * k,
+                            jnp.ones((k,), jnp.float32), 0.0)
+        self.applied = 0                    # gradients folded into updates
+        self.dropped = 0                    # stale / discarded gradients
+        self.updates_applied = 0            # _apply calls (never rolled
+        #                                     back, unlike version)
+        # membership starts empty: workers register as they spawn
+        # (num_workers is the fleet size, used to pre-compile above)
+        self.live: Set[int] = set()
+        self._round: Dict[int, Any] = {}    # sync: worker_id -> gradient
+        self.done = threading.Event()       # max_gradients budget reached
+        transport.publish_params(ParamsMsg(self.version, self.params))
+
+    # ------------------------------------------------------- membership
+    def register(self, worker_id: int) -> None:
+        with self.lock:
+            self.live.add(worker_id)
+
+    def deregister(self, worker_id: int) -> None:
+        with self.lock:
+            self.live.discard(worker_id)
+            if self.mode == "sync":
+                # a shrinking fleet may complete the round it was blocking
+                self._maybe_complete_round()
+
+    # ---------------------------------------------------------- ingest
+    def ingest(self, msg: GradientMsg) -> None:
+        with self.lock:
+            if self.done.is_set():
+                self.dropped += 1
+                return
+            if self.mode == "sync":
+                self._ingest_sync(msg)
+            else:
+                self._ingest_buffered(msg)
+
+    def _ingest_sync(self, msg: GradientMsg) -> None:
+        if msg.version != self.version:
+            self.dropped += 1       # late arrival from a previous round
+            return
+        if msg.worker_id in self._round:
+            # a worker re-contributing to an in-progress round (it can,
+            # legitimately, after a restore rolled the version back
+            # while it was waiting): latest wins, the overwritten
+            # gradient is accounted as dropped
+            self.dropped += 1
+        self._round[msg.worker_id] = msg.grad
+        self._maybe_complete_round()
+
+    def _maybe_complete_round(self) -> None:
+        if not self.live or not set(self._round) >= self.live:
+            return
+        wids = sorted(self._round)          # deterministic fold order
+        grads = [self._round[w] for w in wids]
+        self._round = {}
+        # sync: the plain mean of the round's gradients
+        self._apply(grads, np.ones(len(grads)), self.lr)
+
+    def _ingest_buffered(self, msg: GradientMsg) -> None:
+        self.buffer.add(msg.grad, msg.version)
+        if len(self.buffer) >= self.schedule(self.version):
+            grads, versions = self.buffer.drain()
+            # clamp at 0: after a restore rolls the version back, an
+            # in-flight gradient can be tagged with a *future* version,
+            # and a negative exponent would upweight exactly the
+            # abandoned-history gradients restore() discards
+            stale = np.maximum(
+                0.0, self.version - np.asarray(versions, np.float64))
+            weights = self.staleness_decay ** stale
+            # "sum" applies every buffered gradient at full lr (the
+            # paper's Algorithm 1; K=1 ≡ async exactly); "mean" is the
+            # sync-style confident update — both are one fused scale
+            k = len(grads)
+            scale = self.lr * k if self.flush_mode == "sum" else self.lr
+            self._apply(grads, weights, scale)
+
+    def _apply(self, grads, weights, scale: float) -> None:
+        self.params = self._agg_apply(
+            self.params, tuple(grads),
+            jnp.asarray(weights, jnp.float32), scale)
+        self.version += 1
+        self.updates_applied += 1
+        self.applied += len(grads)
+        self.transport.publish_params(ParamsMsg(self.version, self.params))
+        if self.max_gradients and self.applied >= self.max_gradients:
+            self.done.set()
+
+    # ----------------------------------------------- snapshot / restore
+    def snapshot(self):
+        """(version, params, applied) — params is an immutable pytree
+        reference, so this is cheap and safe to evaluate later."""
+        with self.lock:
+            return self.version, self.params, self.applied
+
+    def restore(self, params, step: int) -> None:
+        """Restore-into-running-server: replace the live params and
+        version (so K(t) continues from ``step``), discarding any
+        in-buffer or mid-round gradients (they were computed against a
+        history that no longer exists)."""
+        with self.lock:
+            lost = len(self.buffer) + len(self._round)
+            self.dropped += lost
+            self.buffer = GradientBuffer(self.staleness_decay)
+            self._round = {}
+            self.params = params
+            self.version = int(step)
+            self.transport.publish_params(
+                ParamsMsg(self.version, self.params))
+
+    def accounting(self) -> Dict[str, int]:
+        with self.lock:
+            # "updates" counts _apply calls: a mid-run restore rolls
+            # version backwards but not the work actually done, so this
+            # stays consistent with the applied-gradient counter
+            return {"applied": self.applied, "dropped": self.dropped,
+                    "buffered": len(self.buffer),
+                    "pending_round": len(self._round),
+                    "updates": self.updates_applied}

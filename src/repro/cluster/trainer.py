@@ -1,0 +1,86 @@
+"""Adapter: ExperimentSpec -> wall-clock cluster runtime -> RunResult.
+
+``backend="cluster"`` in :mod:`repro.api`.  ``spec.arch`` names the same
+simulator workloads (``mlp``, ``cnn-mnist``, ``cnn-cifar``, anything
+added via ``register_sim_workload``) — the point of the third backend is
+that one spec re-targets simulator → SPMD → real concurrent cluster.
+
+The reported ``num_gradients`` is the server's applied-gradient counter,
+exactly; ``extra["accounting"]`` carries the full conservation ledger
+(computed == applied + dropped + buffered + pending + in-flight) and
+``extra["events"]`` the fault/checkpoint timeline.
+"""
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING, Optional
+
+from repro.cluster.runtime import ClusterRuntime
+
+if TYPE_CHECKING:   # real imports are lazy: repro.api.spec imports
+    from repro.api.result import RunResult      # repro.cluster.faults,
+    from repro.api.spec import ExperimentSpec   # so this must not be
+    #                                             circular at module load
+
+
+class ClusterTrainer:
+    """Trainer protocol implementation for ``backend="cluster"``.
+
+    ``ckpt_dir`` hosts the fault plan's checkpoint cadence / mid-run
+    restore; when the plan needs one and none was given (e.g. the
+    ``repro.api.run(spec)`` path, where only the spec is available), a
+    temp directory is provisioned so a checkpointing spec stays
+    runnable from its JSON alone (its path is logged as an event).
+    ``resume_from`` starts the server from a saved checkpoint (K(t)
+    continues from the restored step).  The trained parameters of the
+    last run are kept on ``self.last_params``."""
+
+    def __init__(self, ckpt_dir: Optional[str] = None,
+                 resume_from: Optional[str] = None, verbose: bool = False):
+        self.ckpt_dir = ckpt_dir
+        self.resume_from = resume_from
+        self.verbose = verbose
+        self.last_params = None
+
+    def run(self, spec: "ExperimentSpec") -> "RunResult":
+        from repro.api.result import RunResult
+        from repro.api.schedules import parse_schedule
+        from repro.api.trainers import SIM_WORKLOADS
+
+        builder = SIM_WORKLOADS.get(spec.arch)
+        if builder is None:
+            known = ", ".join(sorted(SIM_WORKLOADS))
+            raise ValueError(f"unknown cluster workload {spec.arch!r} "
+                             f"(known: {known}; register new ones via "
+                             f"repro.api.register_sim_workload)")
+        loss_fn, init_params, data, accuracy_fn = builder(spec)
+        schedule = None
+        if spec.mode == "hybrid":
+            schedule = parse_schedule(spec.schedule, spec.cluster_workers)
+
+        ckpt_dir = self.ckpt_dir
+        if ckpt_dir is None and (spec.faults.checkpoint_every_s > 0
+                                 or spec.faults.restore_at_s > 0):
+            import tempfile
+            ckpt_dir = tempfile.mkdtemp(prefix="repro-cluster-ckpt-")
+
+        runtime = ClusterRuntime(
+            loss_fn, init_params, data, mode=spec.mode, lr=spec.lr,
+            batch=spec.batch, num_workers=spec.cluster_workers,
+            wall_budget_s=spec.wall_budget_s,
+            sample_every_s=spec.wall_sample_every_s, schedule=schedule,
+            flush_mode=spec.flush_mode,
+            staleness_decay=spec.staleness_decay,
+            max_gradients=spec.max_gradients, seed=spec.seed,
+            faults=spec.faults, accuracy_fn=accuracy_fn,
+            ckpt_dir=ckpt_dir, resume_from=self.resume_from,
+            verbose=self.verbose)
+        if ckpt_dir is not None and self.ckpt_dir is None:
+            runtime.events.append({"t": 0.0,
+                                   "event": "ckpt_dir_provisioned",
+                                   "path": ckpt_dir})
+        t0 = time.time()
+        cres = runtime.run()
+        self.last_params = cres.final_params
+        return RunResult.from_cluster(cres, spec=spec,
+                                      wall_s=time.time() - t0)

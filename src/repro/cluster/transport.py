@@ -1,0 +1,113 @@
+"""Message transport between cluster workers and the parameter server.
+
+Two channels:
+
+  * gradients, worker -> server (:class:`GradientMsg`): a multi-producer
+    queue the server drains;
+  * parameters, server -> workers (:class:`ParamsMsg`): a versioned
+    broadcast cell — workers always read the latest published version,
+    optionally blocking until a minimum version appears (the sync
+    barrier's worker side).
+
+:class:`Transport` is the interface; :class:`InProcTransport` is the
+in-process (threads + queue) implementation.  The interface is shaped so
+a multi-process/multi-host transport (sockets, shared memory, RPC) can
+slot in later: messages are plain dataclasses, all blocking calls take
+timeouts, and nothing assumes the pytrees share an address space beyond
+the payload field itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Optional, Protocol
+
+
+@dataclasses.dataclass
+class GradientMsg:
+    worker_id: int
+    grad: Any          # gradient pytree
+    version: int       # params version the gradient was computed against
+    seq: int           # worker-local gradient counter (accounting)
+
+
+@dataclasses.dataclass
+class ParamsMsg:
+    version: int
+    params: Any        # params pytree
+
+
+class Transport(Protocol):
+    """Wire between N workers and one parameter server."""
+
+    def send_gradient(self, msg: GradientMsg,
+                      timeout: Optional[float] = None
+                      ) -> bool:                             # worker side
+        ...
+
+    def recv_gradient(self, timeout: Optional[float] = None
+                      ) -> Optional[GradientMsg]:            # server side
+        ...
+
+    def publish_params(self, msg: ParamsMsg) -> None:        # server side
+        ...
+
+    def fetch_params(self, min_version: int = 0,
+                     timeout: Optional[float] = None
+                     ) -> Optional[ParamsMsg]:               # worker side
+        ...
+
+    def pending_gradients(self) -> int:
+        ...
+
+
+class InProcTransport:
+    """Threads-in-one-process transport: queue + versioned broadcast cell.
+
+    ``grad_capacity`` bounds the gradient queue (0 = unbounded): a full
+    queue blocks the sending worker, which is the backpressure a real
+    wire applies when the server is the bottleneck — without it an
+    outpaced server accumulates an unbounded stale-gradient backlog."""
+
+    def __init__(self, grad_capacity: int = 0):
+        self._grads: "queue.Queue[GradientMsg]" = \
+            queue.Queue(maxsize=grad_capacity)
+        self._cell: Optional[ParamsMsg] = None
+        self._cond = threading.Condition()
+
+    # ------------------------------------------------- gradient channel
+    def send_gradient(self, msg: GradientMsg,
+                      timeout: Optional[float] = None) -> bool:
+        try:
+            self._grads.put(msg, timeout=timeout)
+            return True
+        except queue.Full:
+            return False
+
+    def recv_gradient(self, timeout: Optional[float] = None
+                      ) -> Optional[GradientMsg]:
+        try:
+            if timeout is None or timeout <= 0:
+                return self._grads.get_nowait()
+            return self._grads.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def pending_gradients(self) -> int:
+        return self._grads.qsize()
+
+    # ------------------------------------------------ parameter channel
+    def publish_params(self, msg: ParamsMsg) -> None:
+        with self._cond:
+            self._cell = msg
+            self._cond.notify_all()
+
+    def fetch_params(self, min_version: int = 0,
+                     timeout: Optional[float] = None
+                     ) -> Optional[ParamsMsg]:
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: self._cell is not None
+                and self._cell.version >= min_version, timeout)
+            return self._cell if ok else None

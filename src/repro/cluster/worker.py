@@ -1,0 +1,89 @@
+"""A cluster worker: one thread running real jitted gradient steps.
+
+Each worker owns a deterministic minibatch iterator over its shard of
+the training data (see :func:`repro.data.pipeline.shard_iterator`),
+fetches the latest published parameters from the transport, computes a
+real (jitted) gradient, and sends it to the server tagged with the
+parameter version it read — staleness in this runtime is physical, not
+simulated.
+
+Policy differences live entirely in *when* a worker blocks:
+
+  * ``async`` / ``hybrid`` — fetch whatever version is current, never
+    wait: a slow server means more stale gradients, exactly the
+    contention the hybrid buffer amortises;
+  * ``sync`` — after contributing to round v, block until the server
+    publishes v+1 (the barrier's worker side).
+
+Fault hooks: ``straggle_s`` adds a sleep per gradient (a slow node /
+link); ``stop_event`` is the cooperative kill switch the fault injector
+and the runtime's shutdown both use.  A killed worker's in-flight
+gradient is lost *before* send, so the accounting invariant
+(sent == applied + dropped + buffered + pending + in-flight) holds.
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+from typing import Callable, Iterator, Optional
+
+import jax
+
+from repro.cluster.transport import GradientMsg, Transport
+
+
+class Worker(threading.Thread):
+    def __init__(self, worker_id: int, *, grad_fn: Callable,
+                 batches: Iterator, transport: Transport, mode: str,
+                 straggle_s: float = 0.0, generation: int = 0,
+                 name: Optional[str] = None):
+        super().__init__(name=name or f"worker-{worker_id}.{generation}",
+                         daemon=True)
+        self.worker_id = worker_id
+        self.generation = generation
+        self.grad_fn = grad_fn
+        self.batches = batches
+        self.transport = transport
+        self.mode = mode
+        self.straggle_s = straggle_s
+        self.stop_event = threading.Event()
+        self.sent = 0            # gradients actually handed to the server
+        self.error: Optional[str] = None
+
+    def run(self) -> None:
+        try:
+            self._loop()
+        except Exception:                       # surfaced by the runtime
+            self.error = traceback.format_exc()
+
+    def _loop(self) -> None:
+        next_version = 0        # sync: the round we haven't contributed to
+        while not self.stop_event.is_set():
+            min_v = next_version if self.mode == "sync" else 0
+            msg = self.transport.fetch_params(min_version=min_v,
+                                              timeout=0.05)
+            if msg is None:
+                if self.mode == "sync" and min_v > 0:
+                    # a checkpoint restore moves the server's version
+                    # *backwards*; waiting for the old round would stall
+                    # the barrier until the budget expires — resync
+                    cur = self.transport.fetch_params(timeout=0)
+                    if cur is not None and cur.version < min_v:
+                        msg = cur
+                if msg is None:
+                    continue
+            x, y = next(self.batches)
+            grad = self.grad_fn(msg.params, x, y)
+            jax.block_until_ready(grad)
+            if self.straggle_s and self.stop_event.wait(self.straggle_s):
+                break           # killed mid-straggle: gradient is lost
+            out = GradientMsg(self.worker_id, grad, msg.version,
+                              self.sent + 1)
+            ok = False          # bounded queue: block until the server
+            while not ok and not self.stop_event.is_set():  # drains, or
+                ok = self.transport.send_gradient(out, timeout=0.05)
+            if not ok:
+                break           # ...killed while blocked: gradient lost
+            self.sent += 1
+            if self.mode == "sync":
+                next_version = msg.version + 1

@@ -55,12 +55,27 @@ class GradientBuffer:
     def flush(self, current_version: int):
         """Aggregate + clear.  Returns (g_agg, num_aggregated)."""
         assert self._grads, "flush of empty buffer"
-        stale = current_version - np.asarray(self._versions, np.float64)
-        weights = self.staleness_decay ** stale
-        agg = aggregate_flush(self._grads, weights)
         n = len(self._grads)
+        if n == 1:
+            # the weighted mean of one gradient is itself (w/w = 1);
+            # skipping the per-leaf arithmetic keeps the K=1 (async) hot
+            # path at zero aggregation cost
+            agg = self._grads[0]
+        else:
+            stale = current_version - np.asarray(self._versions, np.float64)
+            weights = self.staleness_decay ** stale
+            agg = aggregate_flush(self._grads, weights)
         self._grads, self._versions = [], []
         return agg, n
+
+    def drain(self):
+        """Take the buffered (grads, versions) and clear, without
+        aggregating — for callers that fuse the aggregation into a
+        jitted update (e.g. the cluster parameter server, where per-leaf
+        eager arithmetic would serialize the whole fleet)."""
+        grads, versions = self._grads, self._versions
+        self._grads, self._versions = [], []
+        return grads, versions
 
     def staleness(self, current_version: int) -> List[int]:
         return [current_version - v for v in self._versions]

@@ -103,8 +103,14 @@ def make_replica_step(loss_fn: Callable, opt_update: Callable):
         # SPMD module with collectives can interleave with the next step's
         # module across device threads and deadlock XLA-CPU's in-process
         # communicator (and costs an extra launch on TPU).
+        # "replicas" is the gradient count of this step (one gradient per
+        # replica group), reported by the executable itself so the
+        # driver's exact num_gradients accounting is grounded in what
+        # actually ran, not in what the host believes it launched.
         return new_p, new_o, {"loss": jnp.mean(loss),
                               "loss_per_replica": loss,
+                              "replicas": jnp.asarray(loss.shape[0],
+                                                      jnp.int32),
                               "divergence": replica_divergence(new_p), **{
             k: jnp.mean(v) for k, v in metrics.items()}}
 

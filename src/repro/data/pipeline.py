@@ -67,3 +67,19 @@ def worker_shards(n_samples: int, num_workers: int):
     """Deterministic round-robin shard indices (the simulator's data
     partition across PS workers)."""
     return [np.arange(w, n_samples, num_workers) for w in range(num_workers)]
+
+
+def shard_iterator(x: np.ndarray, y: np.ndarray, worker_id: int,
+                   num_workers: int, batch: int, seed: int = 0,
+                   generation: int = 0) -> Iterator:
+    """Infinite per-worker minibatch iterator over the worker's shard —
+    the cluster runtime's data feed.  Deterministic per
+    ``(seed, worker_id, generation)``: the i-th batch a worker draws is
+    the same in every run, which is what makes the sync policy bitwise
+    reproducible; ``generation`` bumps on respawn so a resurrected
+    worker does not replay its dead predecessor's stream."""
+    idx = worker_shards(x.shape[0], num_workers)[worker_id]
+    rng = np.random.default_rng((seed, worker_id, generation))
+    while True:
+        take = rng.choice(idx, size=batch, replace=True)
+        yield x[take], y[take]

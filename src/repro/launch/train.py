@@ -72,9 +72,13 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
                  out_json: Optional[str] = None, verbose: bool = True):
     """Run the SPMD driver from an :class:`repro.api.ExperimentSpec`.
 
-    Returns ``(params_final, history)`` where ``history`` is the logged
-    list of per-step metric dicts (``repro.api.SpmdTrainer`` adapts it
-    into the unified ``RunResult``).
+    Returns ``(params_final, history, stats)`` where ``history`` is the
+    logged list of per-step metric dicts and ``stats`` carries the
+    driver's exact counters (``num_updates``, ``num_gradients`` — one
+    gradient per replica per executed step, accumulated as the steps
+    run, not reconstructed from the log_every-thinned history).
+    ``repro.api.SpmdTrainer`` adapts all of it into the unified
+    ``RunResult``.
     """
     from repro.api.schedules import parse_schedule
 
@@ -112,6 +116,7 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
     history = []
     t0 = time.time()
     tokens_done = 0
+    grads_done = 0
     params_R = None
     step = 0
     steps = spec.steps
@@ -146,8 +151,13 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
                 b_R = _shard_batch_R(b, mesh, R)
                 params_R, opt_R, metrics = step_fn(params_R, opt_R, b_R)
                 tokens_done += spec.batch * spec.seq
+                grads_done += R     # one gradient per replica this step
                 if step % spec.log_every == 0 or step == t_end - 1:
                     div = float(metrics["divergence"]) if R > 1 else 0.0
+                    # the executable reports its own replica axis; it must
+                    # agree with the R this phase launched
+                    assert int(metrics["replicas"]) == R, \
+                        (int(metrics["replicas"]), R)
                     rec = {"step": step, "group_size": g, "replicas": R,
                            "loss": float(metrics["loss"]),
                            "divergence": div,
@@ -171,12 +181,13 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
     # final merge for the returned model
     params_final = jax.tree.map(lambda x: np.asarray(x[0]),
                                 merge_replicas(jax.device_get(params_R)))
+    stats = {"num_updates": step, "num_gradients": grads_done}
     if out_json:
         with open(out_json, "w") as f:
             json.dump({"arch": spec.arch, "mode": spec.mode,
-                       "spec": spec.to_dict(), "history": history}, f,
-                      indent=2)
-    return params_final, history
+                       "spec": spec.to_dict(), "stats": stats,
+                       "history": history}, f, indent=2)
+    return params_final, history, stats
 
 
 def _legacy_schedule_spec(schedule_kind: str, step_size: int,
@@ -208,7 +219,9 @@ def train(arch: str, steps: int, mode: str, batch: int, seq: int,
         if mode == "hybrid" else None,
         seed=seed, lr=lr, batch=batch, steps=steps, seq=seq,
         merge_alpha=merge_alpha, smoke=smoke, log_every=log_every)
-    return run_training(spec, ckpt_dir=ckpt_dir, out_json=out_json)
+    params, history, _ = run_training(spec, ckpt_dir=ckpt_dir,
+                                      out_json=out_json)
+    return params, history   # the legacy (params, history) contract
 
 
 def main(argv=None):

@@ -149,15 +149,20 @@ def test_sim_run_result_shape():
     assert res.spec["schedule"] == "step:50"
 
 
-def test_sim_vs_spmd_result_parity():
-    """Both backends emit the same RunResult shape from the same spec
-    fields (grid + aligned metrics + counters + averaged())."""
+def test_backend_result_parity():
+    """All three backends emit the same RunResult shape from the same
+    spec fields (grid + aligned metrics + counters + averaged())."""
     sim = run(_sim_spec())
     spmd = run(ExperimentSpec(
         arch="xlstm-350m", backend="spmd", mode="sync", schedule=None,
         steps=2, batch=2, seq=16, lr=1e-3, smoke=True, log_every=1))
+    cluster = run(ExperimentSpec(
+        arch="mlp", backend="cluster", mode="sync", schedule=None,
+        cluster_workers=3, wall_budget_s=1.0, wall_sample_every_s=0.25,
+        batch=16, smoke=True))
     assert spmd.backend == "spmd" and spmd.grid_unit == "step"
-    for res in (sim, spmd):
+    assert cluster.backend == "cluster" and cluster.grid_unit == "wall_s"
+    for res in (sim, spmd, cluster):
         assert len(res.grid) > 0
         for series in res.metrics.values():
             assert len(series) == len(res.grid)
@@ -166,6 +171,9 @@ def test_sim_vs_spmd_result_parity():
         assert set(avg) == set(res.metrics)
         assert all(np.isfinite(v) for v in avg.values())
     assert spmd.num_updates == 2
+    # one gradient per replica per step, counted exactly by the driver
+    assert spmd.num_gradients == sum(
+        h["replicas"] for h in spmd.extra["history"])
 
 
 def test_mismatched_metric_grid_rejected():

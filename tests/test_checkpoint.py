@@ -1,0 +1,89 @@
+"""Tests for ``repro.checkpoint.ckpt``: save/restore round-trips
+(pytree structure, dtypes — including bf16's npz upcast/downcast — and
+values), ``latest_step`` discovery, and the restore-into-a-running-
+cluster path (K(t) resumes from the restored step, not step 0)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, FaultPlan, parse_schedule
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.cluster.trainer import ClusterTrainer
+
+
+def _tree():
+    return {
+        "dense": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                  "b": jnp.ones((4,), jnp.float32)},
+        "embed": jnp.asarray([[1, 2], [3, 4]], jnp.int32),
+        "scale": jnp.asarray([0.5, -2.0], jnp.bfloat16),
+        "stack": [jnp.zeros((2, 2), jnp.float32),
+                  jnp.full((3,), 7, jnp.float32)],
+    }
+
+
+def test_ckpt_round_trip_structure_and_dtypes(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "step_5")
+    save_checkpoint(path, tree, step=5, extra={"note": "hi"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    back, step = restore_checkpoint(path, like)
+    assert step == 5
+    assert jax.tree_util.tree_structure(back) == \
+        jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype        # bf16 restored as bf16
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_ckpt_restore_shape_mismatch_caught(tmp_path):
+    path = str(tmp_path / "step_0")
+    save_checkpoint(path, {"w": jnp.zeros((2, 2))}, step=0)
+    with pytest.raises(AssertionError):
+        restore_checkpoint(path, {"w": jnp.zeros((3, 3))})
+
+
+def test_latest_step(tmp_path):
+    d = str(tmp_path)
+    assert latest_step(d) is None
+    for s in (3, 11, 7):
+        save_checkpoint(os.path.join(d, f"step_{s}"),
+                        {"w": jnp.zeros(2)}, step=s)
+    assert latest_step(d) == 11
+    assert latest_step(str(tmp_path / "missing")) is None
+
+
+def test_cluster_resume_continues_mid_schedule(tmp_path):
+    """Restoring a checkpoint into a cluster run resumes the K(t)
+    schedule from the restored step: the server's version starts at the
+    checkpoint step, so the threshold picks up mid-anneal instead of
+    re-opening at K=1."""
+    d = str(tmp_path)
+    spec = ExperimentSpec(
+        arch="mlp", backend="cluster", mode="hybrid", schedule="step:10",
+        cluster_workers=3, wall_budget_s=1.5, wall_sample_every_s=0.5,
+        batch=16, faults=FaultPlan(checkpoint_every_s=0.4))
+    first = ClusterTrainer(ckpt_dir=d).run(spec)
+    step = latest_step(d)
+    assert step is not None and step > 10, \
+        f"first run too short to cross a schedule step ({step})"
+    assert any(e["event"] == "checkpoint" for e in first.extra["events"])
+
+    resumed = ClusterTrainer(
+        resume_from=os.path.join(d, f"step_{step}")).run(
+            spec.with_(faults=FaultPlan(), wall_budget_s=1.0))
+    assert resumed.extra["start_version"] == step
+    # mid-schedule: the threshold at the restored step is already > 1
+    schedule = parse_schedule(spec.schedule, spec.cluster_workers)
+    assert schedule(step) > 1
+    # and the run continued from there (fresh updates counted from the
+    # restored version, not from 0)
+    assert resumed.num_updates > 0
+    a = resumed.extra["accounting"]
+    assert a["updates"] == resumed.num_updates
