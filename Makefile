@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test quickstart smoke-sim smoke-train smoke-cluster examples
+.PHONY: test quickstart smoke-sim smoke-train smoke-cluster examples \
+	bench-server
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +30,16 @@ smoke-cluster:
 	    --cluster-workers 4 --wall-budget 10 --wall-sample-every 1 \
 	    --mode hybrid --schedule step:40 --straggler 0:0.1 --quiet \
 	    --out /tmp/repro_cluster_smoke.json
+
+# server aggregation hot path: slab vs pre-PR pytree, emitting
+# BENCH_server.json (stable schema, diffed across PRs).  The hard
+# timeout turns a wedged benchmark into a fast failure; CI records the
+# numbers rather than gating on them (wall-clock speedups on shared
+# runners are too noisy for a hard >= 2x gate — pass --check locally
+# for the strict version).
+bench-server:
+	timeout 600 $(PY) -m benchmarks.server_throughput --quick \
+	    --out BENCH_server.json
 
 examples:
 	$(PY) examples/quickstart.py

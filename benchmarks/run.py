@@ -34,6 +34,14 @@ def main(argv=None):
 
     print()
     print("#" * 70)
+    print("# Server flush throughput: slab path vs pre-PR pytree path")
+    print("#" * 70)
+    from benchmarks import server_throughput
+    server_throughput.main(["--quick"] if args.quick
+                           else ["--full"] if args.full else [])
+
+    print()
+    print("#" * 70)
     print("# Kernel microbenchmarks (jnp reference wall-time + TPU roofline)")
     print("#" * 70)
     from benchmarks import kernels

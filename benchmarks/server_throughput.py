@@ -1,0 +1,264 @@
+"""Server aggregation hot-path benchmark: slab path vs pre-PR pytree path.
+
+The parameter server is the serial resource of the cluster runtime —
+every microsecond it spends aggregating is stolen from the whole fleet
+at once.  This benchmark measures the two implementations of its fused
+aggregate+apply on the CI workload (the ``mlp`` classifier the cluster
+smoke tests train):
+
+  * **pytree** — the pre-slab ``ParameterServer`` hot path, frozen here
+    verbatim: one jitted per-leaf weighted fold per buffer size K,
+    precompiled for every K in 1..fleet at construction (O(fleet)
+    startup compiles), params re-allocated on every update;
+  * **slab** — the live path (:mod:`repro.core.slab`): gradients staged
+    into a preallocated (K_max, P) buffer, ONE donated flush executable
+    for every K via zero-weight masking.
+
+Reported per (fleet, K) cell:
+
+  * ``grads_per_s`` — gradients applied per second over the **full
+    server lifecycle**: construction + executable compilation + serving
+    ``n_flushes`` flushes of K gradients.  CI cluster runs are
+    short-lived servers (seconds of wall budget), so startup compiles
+    are real serving time; this is the headline number and the
+    acceptance criterion (slab >= 2x pytree at K >= 4).
+  * ``startup_s`` / ``serve_s`` — the split, so the trajectory records
+    where the time goes;
+  * ``p50_ms`` / ``p99_ms`` — steady-state per-flush apply latency
+    (compiles excluded), for both paths.
+
+Emits ``BENCH_server.json`` with a stable schema
+(``repro.bench.server/v1``) so future PRs can diff the perf trajectory:
+
+  PYTHONPATH=src python -m benchmarks.server_throughput --quick
+  # or: make bench-server   /   python -m repro bench
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.slab import SlabAggregator, slab_codec
+
+
+# ------------------------------------------------------------- workload
+
+def ci_workload(seed: int = 0):
+    """The CI workload: the ``mlp`` classifier params (what
+    ``make smoke-cluster`` trains) and a bank of gradient-sized trees."""
+    from repro.models.cnn import init_mlp_clf
+    params = init_mlp_clf(jax.random.PRNGKey(seed))
+    return params
+
+
+def gradient_bank(params, n: int):
+    """n distinct gradient trees (deterministic, gradient-sized)."""
+    def one(i):
+        ks = jax.random.split(jax.random.PRNGKey(1000 + i),
+                              len(jax.tree_util.tree_leaves(params)))
+        flat, treedef = jax.tree_util.tree_flatten(params)
+        leaves = [0.01 * jax.random.normal(k, x.shape)
+                  for k, x in zip(ks, flat)]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    bank = [one(i) for i in range(n)]
+    jax.block_until_ready(bank)
+    return bank
+
+
+# ----------------------------------------------------------- the paths
+
+class PytreePath:
+    """The pre-slab server hot path, frozen for comparison: jitted
+    per-K fold over gradient pytrees + the O(fleet) precompile loop."""
+
+    name = "pytree"
+
+    def __init__(self, params, fleet: int, lr: float):
+        self.lr = lr
+        self.params = params
+
+        def _agg_apply(params, grads, weights, scale):
+            wsum = jnp.sum(weights)
+
+            def comb(p, *leaves):
+                s = weights[0] * leaves[0]
+                for w, leaf in zip(weights[1:], leaves[1:]):
+                    s = s + w * leaf
+                return p - scale * (s / wsum)
+
+            return jax.tree.map(comb, params, *grads)
+
+        self._agg_apply = jax.jit(_agg_apply)
+        # the pre-PR startup rule: compile every buffer size the run can
+        # reach (K in 1..fleet) before the clock starts
+        for k in range(1, max(1, fleet) + 1):
+            jax.block_until_ready(self._agg_apply(
+                params, (params,) * k, jnp.ones((k,), jnp.float32), 0.0))
+
+    def serve_flush(self, grad_trees: List, weights: np.ndarray,
+                    scale: float) -> None:
+        self.params = self._agg_apply(
+            self.params, tuple(grad_trees),
+            jnp.asarray(weights, jnp.float32), scale)
+        jax.block_until_ready(self.params)
+
+
+class SlabPath:
+    """The live slab path: stage K rows, one donated flush."""
+
+    name = "slab"
+
+    def __init__(self, params, fleet: int, lr: float):
+        self.lr = lr
+        self.codec = slab_codec(params)
+        self.agg = SlabAggregator(self.codec, params, max(1, fleet))
+        self.agg.warmup()
+
+    def serve_flush(self, grad_slabs: List, weights: np.ndarray,
+                    scale: float) -> None:
+        for slot, slab in enumerate(grad_slabs):
+            self.agg.stage(slab, slot)
+        jax.block_until_ready(self.agg.flush_apply(weights, scale))
+
+
+# ----------------------------------------------------------- measuring
+
+def bench_cell(params, fleet: int, K: int, n_flushes: int,
+               lr: float = 0.05) -> Dict:
+    """One (fleet, K) cell: both paths, same gradients, same flush
+    sequence."""
+    bank = gradient_bank(params, max(K, 4))
+    codec = slab_codec(params)
+    bank_slabs = [codec.encode(g) for g in bank]
+    jax.block_until_ready(bank_slabs)
+    weights = np.ones((K,), np.float32)
+    n_gradients = n_flushes * K
+    cell: Dict = {"fleet": fleet, "K": K, "n_flushes": n_flushes,
+                  "n_gradients": n_gradients}
+
+    for cls, grads in ((PytreePath, bank), (SlabPath, bank_slabs)):
+        rows = [grads[i % len(grads)] for i in range(K)]
+        t0 = time.perf_counter()
+        path = cls(params, fleet, lr)
+        startup_s = time.perf_counter() - t0
+        lat = np.empty(n_flushes)
+        t1 = time.perf_counter()
+        for i in range(n_flushes):
+            f0 = time.perf_counter()
+            path.serve_flush(rows, weights, lr * K)
+            lat[i] = time.perf_counter() - f0
+        serve_s = time.perf_counter() - t1
+        cell[cls.name] = {
+            "startup_s": round(startup_s, 4),
+            "serve_s": round(serve_s, 4),
+            "grads_per_s": round(n_gradients / (startup_s + serve_s), 1),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        }
+    cell["speedup_grads_per_s"] = round(
+        cell["slab"]["grads_per_s"] / cell["pytree"]["grads_per_s"], 2)
+    return cell
+
+
+def run_grid(fleets, ks, n_flushes: int) -> Dict:
+    params = ci_workload()
+    codec = slab_codec(params)
+    grid = []
+    for fleet in fleets:
+        for K in ks:
+            if K > fleet:
+                continue
+            cell = bench_cell(params, fleet, K, n_flushes)
+            grid.append(cell)
+            print(f"fleet={fleet:3d} K={K:3d}: "
+                  f"pytree {cell['pytree']['grads_per_s']:9.1f} g/s "
+                  f"(p50 {cell['pytree']['p50_ms']:.2f}ms) | "
+                  f"slab {cell['slab']['grads_per_s']:9.1f} g/s "
+                  f"(p50 {cell['slab']['p50_ms']:.2f}ms) | "
+                  f"speedup {cell['speedup_grads_per_s']:.2f}x",
+                  flush=True)
+    # the acceptance cell: K >= 4 cells must show >= 2x; record the
+    # worst of them so the pass/fail is the conservative reading
+    acc_cells = [c for c in grid if c["K"] >= 4]
+    worst = min(acc_cells, key=lambda c: c["speedup_grads_per_s"]) \
+        if acc_cells else None
+    report = {
+        "schema": "repro.bench.server/v1",
+        "workload": "mlp",
+        "P": codec.size, "P_padded": codec.padded_size,
+        "leaves": len(codec.sizes),
+        "definition": ("grads_per_s = n_gradients / (startup_s + "
+                       "serve_s); startup includes executable "
+                       "compilation (the pre-slab server compiled one "
+                       "executable per K in 1..fleet; the slab server "
+                       "compiles exactly one)"),
+        "grid": grid,
+        "acceptance": None if worst is None else {
+            "criterion": "slab >= 2x pytree grads/sec at K >= 4",
+            "fleet": worst["fleet"], "K": worst["K"],
+            "pytree_grads_per_s": worst["pytree"]["grads_per_s"],
+            "slab_grads_per_s": worst["slab"]["grads_per_s"],
+            "speedup": worst["speedup_grads_per_s"],
+            "pass": bool(worst["speedup_grads_per_s"] >= 2.0),
+        },
+        "env": {"backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "device_count": jax.device_count()},
+    }
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="server flush throughput: slab vs pre-PR pytree path")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized grid (fleets 4/8, K 1/4)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger grid (fleets up to 32, K up to 16)")
+    ap.add_argument("--fleets", type=int, nargs="*", default=None)
+    ap.add_argument("--ks", type=int, nargs="*", default=None)
+    ap.add_argument("--flushes", type=int, default=None,
+                    help="flushes per cell (default 100; CI runs are "
+                         "short-lived servers, so the count is sized "
+                         "like a smoke run's update budget)")
+    ap.add_argument("--out", default="BENCH_server.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero when the acceptance criterion "
+                         "(slab >= 2x pytree grads/sec at K >= 4) fails "
+                         "— turns the CI step into a perf-regression "
+                         "gate, not just a recorder")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        fleets, ks, n = [4, 8, 16, 32], [1, 4, 8, 16], 200
+    elif args.quick:
+        fleets, ks, n = [4, 8], [1, 4], 100
+    else:
+        fleets, ks, n = [4, 8, 16], [1, 4, 8], 100
+    fleets = args.fleets if args.fleets else fleets
+    ks = args.ks if args.ks else ks
+    n = args.flushes if args.flushes else n
+
+    report = run_grid(fleets, ks, n)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    acc = report["acceptance"]
+    if acc:
+        print(f"\nacceptance (worst K>=4 cell, fleet={acc['fleet']} "
+              f"K={acc['K']}): pytree {acc['pytree_grads_per_s']} g/s, "
+              f"slab {acc['slab_grads_per_s']} g/s -> "
+              f"{acc['speedup']}x ({'PASS' if acc['pass'] else 'FAIL'})")
+    print(f"wrote {args.out}")
+    if args.check and acc and not acc["pass"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,12 @@ a :class:`~repro.api.result.RunResult`:
     injection (``backend="cluster"``); ``spec.arch`` names the same
     workloads as the simulator.
 
+All three backends aggregate gradients on the shared slab path
+(:mod:`repro.core.slab`): one flat tile-aligned gradient slab per
+message, one fused (donated) flush executable per run — the Pallas
+kernel on TPU, its jnp formulation elsewhere — so a spec re-targets
+simulator → SPMD → cluster without changing the aggregation numerics.
+
 Both return the same ``RunResult`` shape, so downstream analysis
 (`averaged()`, JSON artifacts, paper tables) is backend-agnostic.
 :func:`run` is the one-call entry point that dispatches on

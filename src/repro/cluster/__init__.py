@@ -10,10 +10,13 @@ actually about.
 
 Pieces:
   * :class:`~repro.cluster.transport.Transport` /
-    :class:`~repro.cluster.transport.InProcTransport` — the wire
-    (in-process queues now; the interface admits multi-process/host);
+    :class:`~repro.cluster.transport.InProcTransport` — the wire,
+    carrying gradient/params *slabs* (:mod:`repro.core.slab`) as single
+    contiguous arrays (in-process queues now; the interface and the
+    slab wire format admit multi-process/host);
   * :class:`~repro.cluster.server.ParameterServer` — live params + the
-    existing ``GradientBuffer``/K(t) machinery under a lock;
+    slab aggregation path (one donated fused flush executable) driven
+    by the K(t) schedule, under a lock;
   * :class:`~repro.cluster.worker.Worker` — one thread per worker, real
     gradients on a deterministic data shard;
   * :class:`~repro.cluster.faults.FaultPlan` — declarative fault

@@ -9,9 +9,11 @@ wall-clock budget elapses or an applied-gradient budget is hit.
 Pieces that run concurrently with training:
 
   * **metric sampler** — snapshots the live params on a fixed wall-clock
-    grid (cheap: pytrees are immutable, a snapshot is a reference);
-    losses/accuracy are evaluated *after* the run so measurement never
-    perturbs the contention being measured;
+    grid.  It holds the *published* params slab — by the donation
+    contract a fresh, never-donated executable output, so the reference
+    costs nothing and stays valid — and all decoding plus loss/accuracy
+    evaluation happens *after* the run, so measurement never perturbs
+    the contention being measured;
   * **fault injector** — kills workers at their planned times (and
     deregisters them so a sync barrier cannot deadlock on the dead),
     respawning them after ``respawn_after_s`` with a fresh data-stream
@@ -42,6 +44,7 @@ from repro.cluster.server import ParameterServer
 from repro.cluster.transport import InProcTransport, Transport
 from repro.cluster.worker import Worker
 from repro.core.schedule import ThresholdSchedule, constant_schedule
+from repro.core.slab import slab_codec
 from repro.data.pipeline import shard_iterator
 
 
@@ -131,7 +134,18 @@ class ClusterRuntime:
         self.resume_from = resume_from
         self.verbose = verbose
 
-        self._grad = jax.jit(jax.grad(loss_fn))
+        # the slab wire format: workers fetch a params *slab*, decode,
+        # differentiate, and re-encode the gradient — all in one jitted
+        # executable, so each gradient ships as a single contiguous
+        # (P,) array and is flattened exactly once, on the worker
+        self.codec = slab_codec(init_params)
+        grad_fn = jax.grad(loss_fn)
+
+        def _grad_slab(p_slab, x, y):
+            return self.codec.encode(
+                grad_fn(self.codec.decode(p_slab), x, y))
+
+        self._grad = jax.jit(_grad_slab)
         self._loss = jax.jit(loss_fn)
         self._acc = accuracy_fn
 
@@ -230,6 +244,10 @@ class ClusterRuntime:
         self._log_event("restore", step=step)
 
     def _sampler(self, snaps: List) -> None:
+        # snapshot_slab is zero work (a reference to the published,
+        # never-donated params slab): sampling must not steal decode /
+        # host-copy time from the serial resource it is measuring —
+        # the slabs are decoded after the run, with the metrics
         i = 0
         while True:
             target = i * self.sample_every_s
@@ -238,8 +256,8 @@ class ClusterRuntime:
                 return
             if self._stop.is_set():
                 return
-            version, params, _ = self.server.snapshot()
-            snaps.append((target, version, params))
+            version, slab, _ = self.server.snapshot_slab()
+            snaps.append((target, version, slab))
             i += 1
 
     # -------------------------------------------------------------- run
@@ -256,7 +274,8 @@ class ClusterRuntime:
         wx, wy = next(shard_iterator(self.x_tr, self.y_tr, 0,
                                      self.num_workers, self.batch,
                                      seed=self.seed))
-        jax.block_until_ready(self._grad(start_params, wx, wy))
+        jax.block_until_ready(
+            self._grad(self.codec.encode(start_params), wx, wy))
 
         self.server = ParameterServer(
             start_params, lr=self.lr, mode=self.mode,
@@ -328,7 +347,8 @@ class ClusterRuntime:
 
         # ---------------------------------- evaluate the metric snapshots
         times, tr, te, acc = [], [], [], []
-        for target, _, params in snaps:
+        for target, _, slab in snaps:
+            params = self.codec.decode(slab)
             times.append(target)
             tr.append(float(self._loss(params, self.x_tr[:2048],
                                        self.y_tr[:2048])))
@@ -336,6 +356,8 @@ class ClusterRuntime:
             acc.append(float(self._acc(params, self.x_te, self.y_te))
                        if self._acc is not None else 0.0)
 
+        # snapshot() already returns a host copy (the donation rule:
+        # nothing escaping the server may alias the donated slab)
         _, final_params, applied = self.server.snapshot()
         return ClusterResult(
             times=np.asarray(times), train_loss=np.asarray(tr),
@@ -343,4 +365,4 @@ class ClusterRuntime:
             num_updates=accounting["updates"], num_gradients=applied,
             mode=self.mode, start_version=start_version,
             accounting=accounting, events=list(self.events),
-            final_params=jax.device_get(final_params), wall_s=wall_s)
+            final_params=final_params, wall_s=wall_s)

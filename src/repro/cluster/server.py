@@ -1,10 +1,9 @@
 """The parameter server: live params + aggregation policy under a lock.
 
-The server owns the one mutable copy of the parameters and reuses the
-repo's existing aggregation machinery — :class:`repro.core.buffer.
-GradientBuffer` and a :class:`repro.core.schedule.ThresholdSchedule`
-K(t) — so the cluster runtime exercises *exactly* the same policies as
-the virtual-time simulator, but against real concurrent workers:
+The server owns the one mutable copy of the parameters — as a flat
+**gradient slab** (:mod:`repro.core.slab`) — and reuses the repo's
+aggregation policies (a :class:`repro.core.schedule.ThresholdSchedule`
+K(t)) against real concurrent workers:
 
   * ``async``  — K(t) ≡ 1: every ingested gradient is applied at once;
   * ``hybrid`` — gradients buffer until |buffer| >= K(version), then
@@ -14,6 +13,22 @@ the virtual-time simulator, but against real concurrent workers:
     the policy bitwise-reproducible), applied as their mean.  Gradients
     from an older version (e.g. a worker that died mid-round and came
     back) are dropped and accounted.
+
+The aggregation hot path is the slab path end-to-end: workers ship
+``(P,)`` gradient slabs (see :class:`~repro.cluster.transport.
+GradientMsg`), the server stages them into a preallocated
+``(K_max, P)`` buffer, and **one** jitted, donated executable
+(:class:`repro.core.slab.SlabAggregator`) applies every flush — any
+buffer size K, any fleet size, one compile.  The pre-slab server
+compiled ``num_workers`` separate executables at startup and copied the
+full params pytree on every update; both costs are gone (the startup
+probe in ``tests/test_slab.py`` pins the executable count to 1).
+
+Donation rule: the params slab is updated *in place*, so nothing that
+escapes the server may alias it.  Workers receive the published copy
+the flush executable emits; :meth:`snapshot` decodes **and copies to
+host** under the lock — a checkpoint that held a live reference would
+be silently corrupted by the next flush.
 
 Every mutation happens under ``self.lock``; membership changes
 (kill/respawn) re-check the sync barrier so a shrinking fleet cannot
@@ -26,11 +41,9 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, Optional, Set
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buffer import GradientBuffer
+from repro.core.slab import SlabAggregator, SlabBuffer, slab_codec
 from repro.core.schedule import ThresholdSchedule
 from repro.cluster.transport import GradientMsg, ParamsMsg, Transport
 
@@ -41,13 +54,14 @@ class ParameterServer:
                  schedule: Optional[ThresholdSchedule] = None,
                  flush_mode: str = "sum", staleness_decay: float = 1.0,
                  max_gradients: Optional[int] = None,
-                 start_version: int = 0):
+                 start_version: int = 0,
+                 use_pallas: Optional[bool] = None,
+                 interpret: bool = False):
         assert mode in ("sync", "async", "hybrid")
         assert flush_mode in ("sum", "mean")
         if mode in ("async", "hybrid"):
             assert schedule is not None, f"{mode} mode needs a K(t) schedule"
         self.lock = threading.RLock()
-        self.params = params
         self.version = int(start_version)   # parameter updates applied
         self.start_version = int(start_version)
         self.mode = mode
@@ -57,42 +71,37 @@ class ParameterServer:
         self.staleness_decay = staleness_decay
         self.max_gradients = max_gradients
         self.transport = transport
-        self.buffer = GradientBuffer(staleness_decay)
-        # the whole flush — weighted aggregation of K gradients + the
-        # parameter update — is one fused executable; the server is a
-        # serial resource, so per-leaf eager dispatch here would
-        # serialize the fleet.  jit caches one executable per buffer
-        # size K (the argument tuple's structure), mirroring the SPMD
-        # driver's one-executable-per-phase discipline.
-        def _agg_apply(params, grads, weights, scale):
-            wsum = jnp.sum(weights)
-
-            def comb(p, *leaves):
-                s = weights[0] * leaves[0]
-                for w, leaf in zip(weights[1:], leaves[1:]):
-                    s = s + w * leaf
-                return p - scale * (s / wsum)
-
-            return jax.tree.map(comb, params, *grads)
-
-        self._agg_apply = jax.jit(_agg_apply)
-        # compile every buffer size the run can reach (K ∈ 1..fleet)
-        # before the clock starts: a flush only ever aggregates up to
-        # one gradient per worker, and compiling mid-run would stall
-        # the whole fleet under the server lock
-        for k in range(1, max(1, num_workers) + 1):
-            self._agg_apply(params, (params,) * k,
-                            jnp.ones((k,), jnp.float32), 0.0)
+        # a flush aggregates at most one gradient per worker — except
+        # async, where the policy is K ≡ 1 *by definition* (the
+        # schedule is ignored; see _ingest_buffered), pinning the
+        # staging buffer to one row.  For hybrid, a schedule built for
+        # a larger fleet can demand K > num_workers, so the staging
+        # buffer covers the schedule's own ceiling too.
+        if mode == "async":
+            k_max = 1
+        else:
+            k_max = max(1, num_workers,
+                        schedule.num_workers if schedule else 0)
+        self.codec = slab_codec(params)
+        self.agg = SlabAggregator(self.codec, params, k_max,
+                                  use_pallas=use_pallas,
+                                  interpret=interpret)
+        # compile the stage + flush executables before the clock starts
+        # (compiling mid-run would stall the whole fleet under the
+        # server lock) — one compile each, for any fleet size
+        self.agg.warmup()
+        self.buffer = SlabBuffer(self.agg, staleness_decay)
         self.applied = 0                    # gradients folded into updates
         self.dropped = 0                    # stale / discarded gradients
         self.updates_applied = 0            # _apply calls (never rolled
         #                                     back, unlike version)
         # membership starts empty: workers register as they spawn
-        # (num_workers is the fleet size, used to pre-compile above)
+        # (num_workers is the fleet size = the staging buffer's K_max)
         self.live: Set[int] = set()
-        self._round: Dict[int, Any] = {}    # sync: worker_id -> gradient
+        self._round: Dict[int, Any] = {}    # sync: worker_id -> grad slab
         self.done = threading.Event()       # max_gradients budget reached
-        transport.publish_params(ParamsMsg(self.version, self.params))
+        transport.publish_params(ParamsMsg(self.version,
+                                           self.agg.params_slab))
 
     # ------------------------------------------------------- membership
     def register(self, worker_id: int) -> None:
@@ -134,61 +143,76 @@ class ParameterServer:
         if not self.live or not set(self._round) >= self.live:
             return
         wids = sorted(self._round)          # deterministic fold order
-        grads = [self._round[w] for w in wids]
+        for slot, w in enumerate(wids):
+            self.agg.stage(self._round[w], slot)
+        k = len(wids)
         self._round = {}
         # sync: the plain mean of the round's gradients
-        self._apply(grads, np.ones(len(grads)), self.lr)
+        self._apply(np.ones((k,)), self.lr)
 
     def _ingest_buffered(self, msg: GradientMsg) -> None:
         self.buffer.add(msg.grad, msg.version)
-        if len(self.buffer) >= self.schedule(self.version):
-            grads, versions = self.buffer.drain()
-            # clamp at 0: after a restore rolls the version back, an
-            # in-flight gradient can be tagged with a *future* version,
-            # and a negative exponent would upweight exactly the
-            # abandoned-history gradients restore() discards
-            stale = np.maximum(
-                0.0, self.version - np.asarray(versions, np.float64))
-            weights = self.staleness_decay ** stale
+        # async is K ≡ 1 by definition (its one-row staging buffer
+        # depends on it); hybrid asks the K(t) schedule
+        k_needed = 1 if self.mode == "async" else \
+            self.schedule(self.version)
+        if len(self.buffer) >= k_needed:
+            weights = self.buffer.weights(self.version)
+            k = len(self.buffer)
+            self.buffer.clear()
             # "sum" applies every buffered gradient at full lr (the
             # paper's Algorithm 1; K=1 ≡ async exactly); "mean" is the
             # sync-style confident update — both are one fused scale
-            k = len(grads)
             scale = self.lr * k if self.flush_mode == "sum" else self.lr
-            self._apply(grads, weights, scale)
+            self._apply(weights, scale)
 
-    def _apply(self, grads, weights, scale: float) -> None:
-        self.params = self._agg_apply(
-            self.params, tuple(grads),
-            jnp.asarray(weights, jnp.float32), scale)
+    def _apply(self, weights: np.ndarray, scale: float) -> None:
+        pub = self.agg.flush_apply(weights, scale)
         self.version += 1
         self.updates_applied += 1
-        self.applied += len(grads)
-        self.transport.publish_params(ParamsMsg(self.version, self.params))
+        self.applied += len(weights)
+        self.transport.publish_params(ParamsMsg(self.version, pub))
         if self.max_gradients and self.applied >= self.max_gradients:
             self.done.set()
 
     # ----------------------------------------------- snapshot / restore
     def snapshot(self):
-        """(version, params, applied) — params is an immutable pytree
-        reference, so this is cheap and safe to evaluate later."""
+        """(version, params, applied) — params is a **host copy** of the
+        decoded tree: with a donated params slab a live reference to the
+        server's internals would be invalidated by the next flush.  Only
+        the published-slab grab needs the lock (it is a fresh,
+        never-donated executable output); the decode + host copy happens
+        outside it, so samplers/checkpointers never stall ingest on the
+        serial resource they are measuring."""
         with self.lock:
-            return self.version, self.params, self.applied
+            version, pub, applied = (self.version, self.agg.params_slab,
+                                     self.applied)
+        return version, self.codec.decode_host(pub), applied
+
+    def snapshot_slab(self):
+        """(version, params_slab, applied) — the *published* params
+        slab, which by the donation contract is a fresh executable
+        output that stays valid forever.  The zero-work snapshot for
+        in-run samplers: decode after the run, off the hot path."""
+        with self.lock:
+            return self.version, self.agg.params_slab, self.applied
 
     def restore(self, params, step: int) -> None:
         """Restore-into-running-server: replace the live params and
         version (so K(t) continues from ``step``), discarding any
         in-buffer or mid-round gradients (they were computed against a
-        history that no longer exists)."""
+        history that no longer exists — and are *wiped*, not just
+        masked, because a diverged non-finite gradient would poison
+        later flushes through ``0 · inf = nan``)."""
         with self.lock:
             lost = len(self.buffer) + len(self._round)
             self.dropped += lost
-            self.buffer = GradientBuffer(self.staleness_decay)
+            self.buffer.discard()
             self._round = {}
-            self.params = params
+            self.agg.reset_params(params)
             self.version = int(step)
             self.transport.publish_params(
-                ParamsMsg(self.version, self.params))
+                ParamsMsg(self.version, self.agg.params_slab))
 
     def accounting(self) -> Dict[str, int]:
         with self.lock:

@@ -8,7 +8,10 @@ that one spec re-targets simulator → SPMD → real concurrent cluster.
 The reported ``num_gradients`` is the server's applied-gradient counter,
 exactly; ``extra["accounting"]`` carries the full conservation ledger
 (computed == applied + dropped + buffered + pending + in-flight) and
-``extra["events"]`` the fault/checkpoint timeline.
+``extra["events"]`` the fault/checkpoint timeline.  The server runs the
+slab aggregation path (:mod:`repro.core.slab`): one flush executable
+regardless of fleet size, donated in-place updates, slab wire format on
+the transport.
 """
 from __future__ import annotations
 

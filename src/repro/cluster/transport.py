@@ -9,12 +9,19 @@ Two channels:
     optionally blocking until a minimum version appears (the sync
     barrier's worker side).
 
+**Wire format:** both payloads are gradient *slabs* (:mod:`repro.core.
+slab`) — one contiguous, tile-aligned ``(P,)`` float32 array per
+message, not a pytree of leaves.  Workers flatten a gradient exactly
+once (inside their jitted gradient executable) and the server stages
+the slab straight into its aggregation buffer.  A multi-process /
+multi-host transport (sockets, shared memory, RPC) serializes each
+message as one buffer with no per-leaf framing — the slab codec on both
+ends is the (cached) schema.
+
 :class:`Transport` is the interface; :class:`InProcTransport` is the
-in-process (threads + queue) implementation.  The interface is shaped so
-a multi-process/multi-host transport (sockets, shared memory, RPC) can
-slot in later: messages are plain dataclasses, all blocking calls take
-timeouts, and nothing assumes the pytrees share an address space beyond
-the payload field itself.
+in-process (threads + queue) implementation.  All blocking calls take
+timeouts, and nothing assumes the payloads share an address space
+beyond the payload field itself.
 """
 from __future__ import annotations
 
@@ -27,7 +34,7 @@ from typing import Any, Optional, Protocol
 @dataclasses.dataclass
 class GradientMsg:
     worker_id: int
-    grad: Any          # gradient pytree
+    grad: Any          # gradient slab: (P,) f32 (repro.core.slab layout)
     version: int       # params version the gradient was computed against
     seq: int           # worker-local gradient counter (accounting)
 
@@ -35,7 +42,8 @@ class GradientMsg:
 @dataclasses.dataclass
 class ParamsMsg:
     version: int
-    params: Any        # params pytree
+    params: Any        # params slab: (P,) f32 — the server's published
+    #                    copy (never an alias of its donated buffer)
 
 
 class Transport(Protocol):

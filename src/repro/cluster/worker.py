@@ -2,10 +2,13 @@
 
 Each worker owns a deterministic minibatch iterator over its shard of
 the training data (see :func:`repro.data.pipeline.shard_iterator`),
-fetches the latest published parameters from the transport, computes a
-real (jitted) gradient, and sends it to the server tagged with the
-parameter version it read — staleness in this runtime is physical, not
-simulated.
+fetches the latest published parameter *slab* from the transport,
+computes a real (jitted) gradient, and sends the gradient back as a
+slab tagged with the parameter version it read — staleness in this
+runtime is physical, not simulated.  ``grad_fn`` is slab-in/slab-out
+(decode → grad → encode fused into one executable, built by the
+runtime), so the worker flattens each gradient exactly once and the
+transport carries single contiguous arrays in both directions.
 
 Policy differences live entirely in *when* a worker blocks:
 

@@ -10,8 +10,13 @@ With staleness_decay=1.0 (default) this is the plain mean, which matches
 the paper (their flush gives every buffered gradient equal weight); the
 decay knob is the beyond-paper extension evaluated in EXPERIMENTS.md.
 
-`aggregate_flush` is the compute hot-spot; `repro.kernels.hybrid_aggregate`
-provides the Pallas TPU kernel for it (this module is its jnp oracle).
+This module is the **legacy pytree reference**: the live hot paths
+(cluster server, simulator) aggregate on the slab path instead —
+:class:`repro.core.slab.SlabBuffer` staging into one fused, donated
+flush executable whose TPU inner loop is
+``repro.kernels.hybrid_aggregate.flush_pallas``.  `aggregate_flush`
+stays as the per-leaf oracle that parity tests and the server
+throughput benchmark compare the slab path against.
 """
 from __future__ import annotations
 

@@ -15,6 +15,9 @@ parameter server, and three aggregation policies:
 
 Time is *virtual* (an event heap), so a 100-second paper run costs only
 the gradient computations, all of which are real jitted JAX on real models.
+The aggregation itself runs on the same slab path as the wall-clock
+cluster server (:mod:`repro.core.slab`): gradients are flattened once
+into ``(P,)`` slabs and every flush is one fused, donated executable.
 Metrics (train loss / test loss / test accuracy) are sampled on a fixed
 virtual-time grid, mirroring the paper's "metric vs time" plots and the
 "averaged over the entire training interval" tables.
@@ -27,11 +30,10 @@ import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buffer import GradientBuffer, aggregate_flush
 from repro.core.schedule import ThresholdSchedule, constant_schedule
+from repro.core.slab import SlabAggregator, SlabBuffer, slab_codec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,9 +117,20 @@ class PSTrainer:
         self.seed = seed
         self.staleness_decay = staleness_decay
 
-        self._grad = jax.jit(jax.grad(loss_fn))
+        # the slab aggregation path (repro.core.slab): each simulated
+        # worker's gradient is flattened once, inside the jitted
+        # gradient executable, and every flush goes through the same
+        # fused slab executable the cluster server uses
+        self._codec = slab_codec(init_params)
+        grad_fn = jax.grad(loss_fn)
+        self._grad = jax.jit(
+            lambda p, x, y: self._codec.encode(grad_fn(p, x, y)))
         self._loss = jax.jit(loss_fn)
         self.accuracy_fn = accuracy_fn
+        # aggregators (and their compiled stage/flush executables) are
+        # reused across simulate() calls — one compile per staging
+        # width, however many runs a comparison sweep makes
+        self._agg_cache: Dict[int, SlabAggregator] = {}
 
     # ------------------------------------------------------------------
     def _sample_batch(self, rng: np.random.Generator, shard_idx):
@@ -166,7 +179,21 @@ class PSTrainer:
             schedule = constant_schedule(W, W)
         assert schedule is not None, "hybrid mode needs a schedule"
 
-        buffer = GradientBuffer(self.staleness_decay)
+        # async pins K(t) ≡ 1 (the schedule is the constant built
+        # above), so its staging buffer needs a single row; sync/hybrid
+        # flushes aggregate at most one gradient per worker — or up to
+        # the schedule's own ceiling, if it was built for a larger fleet
+        k_max = 1 if mode == "async" else max(W, schedule.num_workers)
+        agg = self._agg_cache.get(k_max)
+        if agg is None:
+            agg = self._agg_cache[k_max] = SlabAggregator(
+                self._codec, params, k_max)
+        else:
+            # reused executables, fresh state: re-seed the params and
+            # wipe rows a previous run may have left staged
+            agg.reset_params(params)
+            agg.wipe_staging()
+        buffer = SlabBuffer(agg, self.staleness_decay)
         version = 0            # number of parameter updates applied
         n_grads = 0
         sample_t = [t for t in np.arange(0.0, horizon + 1e-9, sample_every)]
@@ -188,13 +215,12 @@ class PSTrainer:
                 record_until(min(round_end, horizon))
                 if round_end >= horizon:
                     break
-                grads = []
-                for w in range(W):
+                for w in range(W):     # staged in worker order (slot = w)
                     x, y = self._sample_batch(rng, shards[w])
-                    grads.append(self._grad(params, x, y))
+                    agg.stage(self._grad(params, x, y), w)
                     n_grads += 1
-                agg = aggregate_flush(grads, np.ones(W))
-                params = jax.tree.map(lambda p, g: p - self.lr * g, params, agg)
+                agg.flush_apply(np.ones(W), self.lr)   # round mean
+                params = agg.params_tree()
                 version += 1
                 now = round_end
             record_until(horizon)
@@ -223,16 +249,20 @@ class PSTrainer:
                 now, _, w, v_read, params_read = heapq.heappop(heap)
                 record_until(now)
                 x, y = self._sample_batch(rng, shards[w])
-                grad = self._grad(params_read, x, y)
+                grad_slab = self._grad(params_read, x, y)
                 n_grads += 1
                 done = max(now, server_free) + self.pool.ps_ingest_time
-                buffer.add(grad, v_read)
+                buffer.add(grad_slab, v_read)
                 if len(buffer) >= schedule(version):
-                    agg, k = buffer.flush(version)
-                    if self.flush_mode == "sum":
-                        agg = jax.tree.map(lambda g: g * k, agg)
-                    params = jax.tree.map(lambda p, g: p - self.lr * g,
-                                          params, agg)
+                    weights = buffer.weights(version)
+                    k = len(buffer)
+                    buffer.clear()
+                    # "sum" applies every buffered gradient at full lr
+                    # (K=1 ≡ async exactly); "mean" averages the buffer
+                    scale = self.lr * k if self.flush_mode == "sum" \
+                        else self.lr
+                    agg.flush_apply(weights, scale)
+                    params = agg.params_tree()
                     version += 1
                     done += self.pool.ps_apply_time
                 server_free = done

@@ -1,0 +1,308 @@
+"""Flat gradient/parameter slabs — the wire and aggregation format.
+
+A *slab* is one contiguous ``(P_pad,)`` float32 array holding every leaf
+of a pytree: leaves in ``jax.tree`` flatten order, raveled C-order,
+concatenated, and zero-padded so ``P_pad`` is a multiple of the Pallas
+flush tile (:data:`repro.kernels.hybrid_aggregate.TILE_P`).  Workers
+flatten a gradient **once** and ship the slab; the server stages
+incoming slabs into a preallocated ``(K_max, P_pad)`` buffer and applies
+every flush through **one** jitted, donated executable, regardless of
+how many gradients K the flush aggregates.  The same layout is what a
+multi-process transport would put on the wire (one buffer, no per-leaf
+framing).
+
+Layout::
+
+    offset 0         sizes[0]        sizes[0]+sizes[1]   ...        P  P_pad
+    |  leaf 0 (ravel) | leaf 1 (ravel) |  ...  | leaf L-1 | 0-padding |
+
+Donation rules (enforced by :class:`SlabAggregator`, relied on by the
+cluster server):
+
+* the aggregator's private params slab and the staging buffer are
+  donated into their executables — they are updated in place and must
+  never escape the aggregator;
+* everything handed to callers (the published params slab, decoded
+  trees) is a *fresh* executable output, never an alias of a donated
+  buffer, so it stays valid across later flushes;
+* long-lived consumers (checkpoints, metric snapshots) must still copy
+  to host (``jax.device_get``) before releasing the server lock — see
+  ``ParameterServer.snapshot``.
+
+Backend matrix for the flush's inner reduction:
+
+============  =======================================================
+TPU           :func:`repro.kernels.hybrid_aggregate.flush_pallas`
+              (masked: zero-weight rows beyond K contribute exactly 0)
+CPU / other   jnp fallback — a statically unrolled masked fold, bitwise
+              identical to the legacy per-leaf fold for uniform weights
+tests         the Pallas kernel under ``interpret=True``
+============  =======================================================
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hybrid_aggregate import TILE_P, flush_pallas
+
+
+class SlabCodec:
+    """Cached pytree ⇄ slab codec for one (treedef, shapes, dtypes).
+
+    ``encode``/``decode`` are jitted; both return fresh buffers (decode
+    never returns views into the slab, so decoded trees survive the
+    slab's donation into a later flush).
+    """
+
+    def __init__(self, treedef, shapes: Tuple[Tuple[int, ...], ...],
+                 dtypes: Tuple[Any, ...]):
+        for dt in dtypes:
+            if not jnp.issubdtype(dt, jnp.floating):
+                raise TypeError(
+                    f"slab codec requires floating leaves, got {dt} "
+                    "(the slab is a float32 array; integer leaves would "
+                    "round-trip lossily)")
+            if jnp.dtype(dt).itemsize > 4:
+                raise TypeError(
+                    f"slab codec requires leaves <= 32-bit, got {dt} "
+                    "(the slab is a float32 array; wider floats would "
+                    "be silently quantized on the round trip)")
+        self.treedef = treedef
+        self.shapes = shapes
+        self.dtypes = dtypes
+        self.sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+        self.offsets = tuple(int(o) for o in
+                             np.cumsum((0,) + self.sizes)[:-1])
+        self.size = int(sum(self.sizes))            # live elements P
+        assert self.size > 0, "empty pytree has no slab"
+        self.padded_size = -(-self.size // TILE_P) * TILE_P
+        self._encode = jax.jit(self._encode_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    # ------------------------------------------------------------ codec
+    def _encode_impl(self, tree):
+        leaves = jax.tree_util.tree_leaves(tree)
+        flat = jnp.concatenate(
+            [jnp.ravel(x).astype(jnp.float32) for x in leaves])
+        return jnp.pad(flat, (0, self.padded_size - self.size))
+
+    def _decode_impl(self, slab):
+        leaves = [
+            slab[off:off + n].reshape(shape).astype(dtype)
+            for off, n, shape, dtype in zip(self.offsets, self.sizes,
+                                            self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def encode(self, tree) -> jax.Array:
+        """tree -> (P_pad,) f32 slab (fresh buffer)."""
+        return self._encode(tree)
+
+    def decode(self, slab) -> Any:
+        """(P_pad,) slab -> tree with the template's shapes/dtypes."""
+        return self._decode(slab)
+
+    def decode_host(self, slab) -> Any:
+        """Decode + copy to host numpy — the snapshot/checkpoint form
+        (valid forever, regardless of later donations)."""
+        return jax.device_get(self._decode(slab))
+
+    def __repr__(self):
+        return (f"SlabCodec(leaves={len(self.sizes)}, P={self.size}, "
+                f"padded={self.padded_size})")
+
+
+_CODEC_CACHE: Dict[Tuple, SlabCodec] = {}
+
+
+def slab_codec(tree) -> SlabCodec:
+    """The cached codec for ``tree``'s structure (treedef + leaf shapes
+    + dtypes).  Two pytrees with identical structure share one codec —
+    and therefore its compiled encode/decode executables."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(np.shape(x)) for x in leaves)
+    dtypes = tuple(jnp.dtype(getattr(x, "dtype", None)
+                             or jnp.result_type(x)) for x in leaves)
+    key = (treedef, shapes, dtypes)
+    codec = _CODEC_CACHE.get(key)
+    if codec is None:
+        codec = _CODEC_CACHE[key] = SlabCodec(treedef, shapes, dtypes)
+    return codec
+
+
+class SlabAggregator:
+    """Params slab + ``(K_max, P_pad)`` staging buffer + the **one**
+    donated fused flush executable.
+
+    The flush computes, for the first ``k`` staged rows ``g_i`` with
+    weights ``w_i`` (zero-padded to ``K_max``)::
+
+        params <- params - scale * (Σ_i w_i · g_i) / (Σ_i w_i)
+
+    in place (the params slab is donated), and returns a fresh
+    *published* copy of the new params that is safe to hand to workers:
+    it never aliases the donated buffer (guarded by a regression test in
+    ``tests/test_slab.py``).  One executable serves every buffer size
+    ``1 <= k <= K_max`` purely through zero-weight masking of the
+    unused rows.  The jit cache is per-aggregator, so
+    ``flush_cache_size()`` is an exact probe that no per-K
+    recompilation crept back in.
+    """
+
+    def __init__(self, codec: SlabCodec, params, k_max: int, *,
+                 use_pallas: Optional[bool] = None,
+                 interpret: bool = False):
+        assert k_max >= 1, k_max
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.codec = codec
+        self.k_max = int(k_max)
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        # private, donated state: in-place updated, never escapes
+        self._slab = codec.encode(params)
+        self._staging = jnp.zeros((self.k_max, codec.padded_size),
+                                  jnp.float32)
+        # published params slab: always a fresh executable output
+        self._pub = codec.encode(params)
+        self._stage = jax.jit(self._stage_impl, donate_argnums=(0,))
+        self._flush = jax.jit(self._flush_impl, donate_argnums=(0,))
+        self._zero_row = jnp.zeros((codec.padded_size,), jnp.float32)
+
+    # ------------------------------------------------------ executables
+    @staticmethod
+    def _stage_impl(staging, row, slot):
+        # donated: an in-place row write, not a buffer copy
+        return jax.lax.dynamic_update_slice(staging, row[None], (slot, 0))
+
+    def _flush_impl(self, pslab, staging, weights, scale):
+        # both branches reduce via zero-weight masking — rows past the
+        # live count hold weight 0 and contribute exactly +0.0 — which
+        # is what lets ONE executable serve every buffer size k
+        if self.use_pallas:
+            agg = flush_pallas(staging, weights, interpret=self.interpret)
+        else:
+            # jnp fallback: a statically unrolled masked fold in staging
+            # order — structurally identical to the legacy per-leaf fold
+            # (same muls, same adds, same order), which keeps the sync
+            # round mean bitwise-equal to the pre-slab server.  (A
+            # fori_loop over only the k live rows compiles to different
+            # FMA contraction and drifts by 1 ulp.)
+            agg = weights[0] * staging[0]
+            for i in range(1, self.k_max):
+                agg = agg + weights[i] * staging[i]
+        new = pslab - scale * (agg / jnp.sum(weights))
+        # `new + 0.0` is the published copy: a second output buffer that
+        # does NOT alias the donated input (tests/test_slab.py guards
+        # this against XLA deciding to alias the two outputs)
+        return new, new + 0.0
+
+    # ------------------------------------------------------------- API
+    def stage(self, slab: jax.Array, slot: int) -> None:
+        """Write one gradient slab into staging row ``slot`` (in place)."""
+        assert 0 <= slot < self.k_max, (slot, self.k_max)
+        self._staging = self._stage(self._staging, slab,
+                                    jnp.asarray(slot, jnp.int32))
+
+    def flush_apply(self, weights: np.ndarray, scale: float) -> jax.Array:
+        """Aggregate the first ``len(weights)`` staged rows and apply the
+        update.  Returns the freshly published params slab."""
+        k = len(weights)
+        assert 1 <= k <= self.k_max, (k, self.k_max)
+        wfull = np.zeros((self.k_max,), np.float32)
+        wfull[:k] = np.asarray(weights, np.float32)
+        self._slab, self._pub = self._flush(
+            self._slab, self._staging, jnp.asarray(wfull),
+            jnp.asarray(scale, jnp.float32))
+        return self._pub
+
+    @property
+    def params_slab(self) -> jax.Array:
+        """The published params slab (safe to ship / hold)."""
+        return self._pub
+
+    def params_tree(self):
+        """Decode the published params into a fresh pytree."""
+        return self.codec.decode(self._pub)
+
+    def params_tree_host(self):
+        """Decode + host copy — the checkpoint/snapshot form."""
+        return self.codec.decode_host(self._pub)
+
+    def reset_params(self, params) -> None:
+        """Replace the live params (checkpoint restore)."""
+        self._slab = self.codec.encode(params)
+        self._pub = self.codec.encode(params)
+
+    def wipe_staging(self) -> None:
+        """Zero every staging row.  Needed when staged gradients are
+        *discarded* rather than consumed by a flush: zero-weight masking
+        neutralizes any finite leftover, but a non-finite row (a
+        diverged gradient the restore is recovering from) would poison
+        later flushes — ``0 · inf = nan``."""
+        self._staging = jnp.zeros_like(self._staging)
+
+    def warmup(self) -> None:
+        """Compile the stage + flush executables before the clock starts
+        (one compile each, for any fleet size — vs the pre-slab server's
+        one compile per K in 1..num_workers).  The warmup flush uses
+        scale=0 over a zero row, so the params are bitwise unchanged."""
+        self.stage(self._zero_row, 0)
+        self.flush_apply(np.ones((1,), np.float32), 0.0)
+
+    def flush_cache_size(self) -> int:
+        """Number of compiled flush executables (the probe asserted to
+        be exactly 1 in tests, regardless of fleet size / K)."""
+        return int(self._flush._cache_size())
+
+
+class SlabBuffer:
+    """Slab-backed gradient buffer: the staged-rows counterpart of
+    :class:`repro.core.buffer.GradientBuffer`.
+
+    Gradient slabs are staged into the aggregator as they arrive (row =
+    arrival order); only the parameter versions they were computed
+    against are tracked host-side, for the staleness weights.  The
+    flush itself is :meth:`SlabAggregator.flush_apply`.
+    """
+
+    def __init__(self, aggregator: SlabAggregator,
+                 staleness_decay: float = 1.0):
+        self.agg = aggregator
+        self.staleness_decay = float(staleness_decay)
+        self._versions: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self._versions)
+
+    def add(self, slab: jax.Array, version: int) -> None:
+        self.agg.stage(slab, len(self._versions))
+        self._versions.append(int(version))
+
+    def weights(self, current_version: int) -> np.ndarray:
+        """Staleness weights ``decay^(now - v_i)`` for the staged rows.
+        The exponent is clamped at 0: after a checkpoint restore rolls
+        the version back, an in-flight gradient can be tagged with a
+        *future* version, and a negative exponent would upweight exactly
+        the abandoned-history gradients the restore discards."""
+        stale = np.maximum(0.0, current_version
+                           - np.asarray(self._versions, np.float64))
+        return self.staleness_decay ** stale
+
+    def clear(self) -> None:
+        """Forget rows that a flush just **consumed** (no wipe needed:
+        consumed rows are finite values already folded into the params,
+        and zero weights mask them on the next flush)."""
+        self._versions = []
+
+    def discard(self) -> None:
+        """Drop staged rows **unconsumed** (checkpoint restore).  The
+        rows are wiped, not just masked: a discarded gradient may be
+        non-finite — that divergence can be exactly what the restore is
+        recovering from — and ``0 · inf = nan`` would defeat the
+        masking on every later flush."""
+        self.agg.wipe_staging()
+        self._versions = []

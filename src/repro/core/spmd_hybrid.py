@@ -57,11 +57,42 @@ def merge_replicas(params_R, alpha: float = 1.0):
 
     alpha < 1 gives a partial (Lookahead-style) merge — a beyond-paper
     extension: θ_r ← α·mean + (1-α)·θ_r.
+
+    This is the per-leaf reference; the train driver's phase switches
+    use :func:`merge_replicas_slab`, which routes the same reduction
+    through the slab aggregation path (the Pallas flush kernel on TPU).
     """
     def m(p):
         mean = jnp.mean(p, axis=0, keepdims=True)
         return alpha * jnp.broadcast_to(mean, p.shape) + (1 - alpha) * p
     return jax.tree.map(m, params_R)
+
+
+def merge_replicas_slab(params_R, alpha: float = 1.0, *,
+                        use_pallas: Optional[bool] = None,
+                        interpret: Optional[bool] = None):
+    """The hybrid flush on the slab path: replicas are encoded into an
+    ``(R, P)`` slab matrix and averaged by the same fused weighted
+    reduction the parameter server's flush uses
+    (:func:`repro.kernels.ops.hybrid_flush` → ``flush_pallas`` on TPU,
+    the jnp reference elsewhere), then decoded and α-blended exactly
+    like :func:`merge_replicas`."""
+    from repro.core.slab import slab_codec
+    from repro.kernels import ops
+
+    codec = slab_codec(jax.tree.map(lambda p: p[0], params_R))
+    R = jax.tree.leaves(params_R)[0].shape[0]
+    rows = jax.vmap(codec.encode)(params_R)          # (R, P_pad)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    total = ops.hybrid_flush(rows, jnp.ones((R,), jnp.float32),
+                             use_pallas=use_pallas, interpret=interpret)
+    mean_tree = codec.decode(total / R)
+
+    def m(mean_leaf, p):
+        mean_b = jnp.broadcast_to(mean_leaf[None], p.shape)
+        return alpha * mean_b + (1 - alpha) * p
+    return jax.tree.map(m, mean_tree, params_R)
 
 
 def reshard_replicas(params_R, R_new: int):

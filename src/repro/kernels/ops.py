@@ -27,30 +27,25 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
 
 
 # ------------------------------------------------------------ flat utils
+# Thin wrappers over the slab codec (repro.core.slab) — the canonical
+# pytree ⇄ tile-aligned-slab layout shared by the cluster transport, the
+# simulator, and these kernels.
 
 def tree_to_flat(grads_trees: List) -> jax.Array:
-    """Stack K gradient pytrees into a (K, P_padded) matrix (P padded to
-    the kernel tile)."""
-    flats = []
-    for tree in grads_trees:
-        leaves = [jnp.ravel(x) for x in jax.tree.leaves(tree)]
-        flats.append(jnp.concatenate(leaves))
-    mat = jnp.stack(flats)
-    P = mat.shape[1]
-    pad = (-P) % TILE_P
-    if pad:
-        mat = jnp.pad(mat, ((0, 0), (0, pad)))
-    return mat
+    """Stack K gradient pytrees into a (K, P_padded) slab matrix (P
+    padded to the kernel tile; repro.core.slab layout).  The slab wire
+    dtype is float32: narrower float leaves (bf16/f16) are widened, and
+    the codec rejects integer or wider-than-32-bit leaves."""
+    from repro.core.slab import slab_codec
+    codec = slab_codec(grads_trees[0])
+    return jnp.stack([codec.encode(t) for t in grads_trees])
 
 
 def flat_to_tree(flat: jax.Array, like) -> object:
-    leaves = jax.tree.leaves(like)
-    out, off = [], 0
-    for leaf in leaves:
-        n = leaf.size
-        out.append(flat[off:off + n].reshape(leaf.shape).astype(leaf.dtype))
-        off += n
-    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out)
+    """Decode one f32 slab back into ``like``'s structure (leaves cast
+    back to their template dtypes — exact for <= 32-bit floats)."""
+    from repro.core.slab import slab_codec
+    return slab_codec(like).decode(flat)
 
 
 # ------------------------------------------------------------------- ops

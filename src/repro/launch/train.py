@@ -40,7 +40,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint import save_checkpoint
 from repro.configs.registry import ARCH_NAMES, get_config, smoke_variant
 from repro.core.spmd_hybrid import (build_phases, make_replica_step,
-                                    merge_replicas, replica_divergence,
+                                    merge_replicas_slab, replica_divergence,
                                     replica_param_shardings,
                                     replicate_params, reshard_replicas)
 from repro.data.synthetic import token_stream
@@ -129,13 +129,15 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
         else:
             # Phase switch (the paper's buffer flush): merge replicas and
             # change the group factor.  Done host-side — the device arrays
-            # are fetched, merged/resharded in numpy, and re-placed under
-            # the new mesh.  This keeps exactly one SPMD executable alive
-            # per phase (XLA-CPU's in-process communicator deadlocks if
-            # modules with collectives interleave; on TPU this is one
-            # host-sync per phase, a handful per run).
+            # are fetched, merged/resharded outside the mesh, and re-placed
+            # under the new mesh.  This keeps exactly one SPMD executable
+            # alive per phase (XLA-CPU's in-process communicator deadlocks
+            # if modules with collectives interleave; on TPU this is one
+            # host-sync per phase, a handful per run).  The merge itself
+            # routes through the slab aggregation path — the same fused
+            # flush the parameter server applies.
             host = jax.device_get(params_R)
-            host = merge_replicas(host, alpha=spec.merge_alpha)
+            host = merge_replicas_slab(host, alpha=spec.merge_alpha)
             host_R = reshard_replicas(host, R)
         mesh = build_hybrid_mesh(R, spec.mesh_model)
         with axis_rules(mesh):
@@ -172,7 +174,7 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
 
             jax.block_until_ready((params_R, opt_R))
             if ckpt_dir:
-                merged = merge_replicas(jax.device_get(params_R))
+                merged = merge_replicas_slab(jax.device_get(params_R))
                 one = jax.tree.map(lambda x: np.asarray(x[0]), merged)
                 save_checkpoint(os.path.join(ckpt_dir, f"step_{step}"),
                                 one, step, extra={"arch": spec.arch,
@@ -180,7 +182,7 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
 
     # final merge for the returned model
     params_final = jax.tree.map(lambda x: np.asarray(x[0]),
-                                merge_replicas(jax.device_get(params_R)))
+                                merge_replicas_slab(jax.device_get(params_R)))
     stats = {"num_updates": step, "num_gradients": grads_done}
     if out_json:
         with open(out_json, "w") as f:

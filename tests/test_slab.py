@@ -1,0 +1,428 @@
+"""Tests for the slab gradient path (``repro.core.slab``): codec
+round-trip properties, numerical parity of the slab aggregation against
+the legacy pytree fold (bitwise for the sync mean, allclose for weighted
+flushes), the donation contract (published params survive later donated
+flushes; snapshots stay valid while flushes continue), and the
+one-flush-executable guarantee for any fleet size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.slab import SlabAggregator, SlabBuffer, slab_codec
+from repro.cluster.server import ParameterServer
+from repro.cluster.transport import GradientMsg, ParamsMsg
+from repro.core.schedule import constant_schedule, step_schedule
+from repro.kernels.hybrid_aggregate import TILE_P
+
+
+def _tree(seed: int, scale: float = 1.0, shapes=None):
+    shapes = shapes or {"w1": (20, 64), "b1": (64,), "w2": (64, 10)}
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {name: scale * jax.random.normal(k, s)
+            for k, (name, s) in zip(ks, sorted(shapes.items()))}
+
+
+@jax.jit
+def _legacy_agg_apply_jit(params, grads, weights, scale):
+    wsum = jnp.sum(weights)
+
+    def comb(p, *leaves):
+        s = weights[0] * leaves[0]
+        for w, leaf in zip(weights[1:], leaves[1:]):
+            s = s + w * leaf
+        return p - scale * (s / wsum)
+
+    return jax.tree.map(comb, params, *grads)
+
+
+def legacy_agg_apply(params, grads, weights, scale):
+    """The pre-slab server's fused aggregate+apply, verbatim: one
+    *jitted* executable per buffer size K, folding the K gradient
+    pytrees leaf by leaf, normalized by Σw.  (Jitted like the original —
+    eager execution skips XLA's FMA contraction and drifts by 1 ulp.)
+    The slab executable must reproduce it bitwise for uniform weights."""
+    return _legacy_agg_apply_jit(params, tuple(grads),
+                                 jnp.asarray(weights, jnp.float32),
+                                 jnp.float32(scale))
+
+
+# ----------------------------------------------------------------- codec
+
+@settings(max_examples=25, deadline=None)
+@given(n_leaves=st.integers(1, 4), seed=st.integers(0, 2 ** 16),
+       dim=st.sampled_from([1, 3, 17, 128, 300]),
+       ranks=st.sampled_from([(1,), (2,), (1, 2), (3, 1)]))
+def test_codec_round_trip_property(n_leaves, seed, dim, ranks):
+    """Property: decode(encode(tree)) is bitwise identical for any tree
+    of floating leaves, and the slab is tile-aligned with zero padding."""
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i in range(n_leaves):
+        key, k = jax.random.split(key)
+        shape = tuple(dim + i for _ in range(ranks[i % len(ranks)]))
+        tree[f"leaf{i}"] = jax.random.normal(k, shape)
+    codec = slab_codec(tree)
+    slab = codec.encode(tree)
+    assert slab.shape == (codec.padded_size,) and slab.dtype == jnp.float32
+    assert codec.padded_size % TILE_P == 0
+    assert codec.size == sum(np.prod(s) for s in codec.shapes)
+    np.testing.assert_array_equal(
+        np.asarray(slab[codec.size:]), 0.0)        # padding is zeros
+    back = codec.decode(slab)
+    for name in tree:
+        got, want = np.asarray(back[name]), np.asarray(tree[name])
+        assert got.dtype == want.dtype and got.shape == want.shape
+        np.testing.assert_array_equal(got, want)
+
+
+def test_codec_bf16_round_trip_exact():
+    """bf16 leaves widen to f32 on the slab and narrow back exactly."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 8)
+                                   ).astype(jnp.bfloat16)}
+    codec = slab_codec(tree)
+    back = codec.decode(codec.encode(tree))
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+
+
+def test_codec_cached_per_structure():
+    """Same structure -> same codec object (and compiled executables);
+    different shapes -> a different codec."""
+    assert slab_codec(_tree(0)) is slab_codec(_tree(1))
+    other = slab_codec({"w": jnp.zeros((4, 4))})
+    assert other is not slab_codec(_tree(0))
+
+
+def test_codec_rejects_integer_leaves():
+    with pytest.raises(TypeError, match="floating"):
+        slab_codec({"ids": jnp.zeros((3,), jnp.int32)})
+
+
+def test_codec_layout_offsets():
+    """Leaves occupy [offset, offset+size) in flatten order."""
+    tree = _tree(3)
+    codec = slab_codec(tree)
+    slab = np.asarray(codec.encode(tree))
+    leaves = jax.tree_util.tree_leaves(tree)
+    for leaf, off, n in zip(leaves, codec.offsets, codec.sizes):
+        np.testing.assert_array_equal(slab[off:off + n],
+                                      np.asarray(leaf).ravel())
+
+
+# ------------------------------------------------ aggregator vs legacy
+
+def test_slab_flush_bitwise_equals_legacy_sync_fold():
+    """Uniform weights (the sync round mean): the slab executable's fold
+    must be bitwise identical to the legacy per-leaf fold."""
+    params, grads = _tree(0), [_tree(i + 1, 0.01) for i in range(3)]
+    codec = slab_codec(params)
+    agg = SlabAggregator(codec, params, k_max=5)
+    for i, g in enumerate(grads):
+        agg.stage(codec.encode(g), i)
+    pub = agg.flush_apply(np.ones(3), 0.05)
+    want = legacy_agg_apply(params, tuple(grads), np.ones(3), 0.05)
+    got = codec.decode(pub)
+    for name in params:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]), err_msg=name)
+
+
+@pytest.mark.parametrize("weights", [
+    np.array([1.0, 0.9, 0.81, 0.729]),     # staleness decay 0.9
+    np.array([0.3, 1.0, 0.3, 0.7]),
+])
+def test_slab_flush_weighted_allclose_legacy(weights):
+    params, grads = _tree(0), [_tree(i + 1, 0.01) for i in range(4)]
+    codec = slab_codec(params)
+    agg = SlabAggregator(codec, params, k_max=4)
+    for i, g in enumerate(grads):
+        agg.stage(codec.encode(g), i)
+    got = codec.decode(agg.flush_apply(weights, 0.04))
+    want = legacy_agg_apply(params, tuple(grads), weights, 0.04)
+    for name in params:
+        np.testing.assert_allclose(np.asarray(got[name]),
+                                   np.asarray(want[name]),
+                                   rtol=1e-6, atol=1e-7, err_msg=name)
+
+
+def test_slab_flush_pallas_interpret_matches_jnp():
+    """The Pallas kernel (interpret mode on CPU) and the jnp fallback
+    compute the same flush — the TPU/CPU backend matrix is consistent."""
+    params, grads = _tree(0), [_tree(i + 1, 0.01) for i in range(3)]
+    codec = slab_codec(params)
+    outs = []
+    for use_pallas in (False, True):
+        agg = SlabAggregator(codec, params, k_max=4,
+                             use_pallas=use_pallas, interpret=use_pallas)
+        for i, g in enumerate(grads):
+            agg.stage(codec.encode(g), i)
+        outs.append(np.asarray(
+            agg.flush_apply(np.array([1.0, 0.9, 0.81]), 0.03)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6, atol=1e-7)
+
+
+def test_slab_buffer_staleness_weights_clamped():
+    """decay^(now - v) with the exponent clamped at 0: a gradient tagged
+    with a *future* version (post-restore) is not up-weighted."""
+    params = _tree(0)
+    agg = SlabAggregator(slab_codec(params), params, k_max=3)
+    buf = SlabBuffer(agg, staleness_decay=0.5)
+    slab = agg.codec.encode(_tree(1, 0.01))
+    for v in (4, 6, 9):                    # staleness 2, 0, -3 at now=6
+        buf.add(slab, v)
+    np.testing.assert_allclose(buf.weights(6), [0.25, 1.0, 1.0])
+    buf.clear()
+    assert len(buf) == 0
+
+
+# ------------------------------------------------------ donation contract
+
+def test_published_params_survive_later_donated_flushes():
+    """The flush executable's second output (the published params) must
+    never alias the donated buffer: copies handed out at version v stay
+    bitwise intact while the server keeps flushing."""
+    params = _tree(0)
+    codec = slab_codec(params)
+    agg = SlabAggregator(codec, params, k_max=2)
+    g = codec.encode(_tree(1, 0.01))
+    agg.stage(g, 0)
+    pub_v1 = agg.flush_apply(np.ones(1), 0.01)
+    held = np.asarray(pub_v1).copy()
+    for _ in range(5):                      # donations keep recycling
+        agg.stage(g, 0)                     # the private buffers
+        agg.flush_apply(np.ones(1), 0.01)
+    np.testing.assert_array_equal(np.asarray(pub_v1), held)
+    # and the params did actually move on
+    assert not np.array_equal(np.asarray(agg.params_slab), held)
+
+
+class _CellTransport:
+    """Minimal transport stub: remembers the last published params."""
+
+    def __init__(self):
+        self.published = []
+
+    def publish_params(self, msg: ParamsMsg):
+        self.published.append(msg)
+
+    def send_gradient(self, msg, timeout=None):   # pragma: no cover
+        return True
+
+    def recv_gradient(self, timeout=None):        # pragma: no cover
+        return None
+
+    def pending_gradients(self):                  # pragma: no cover
+        return 0
+
+
+def _server(mode="hybrid", num_workers=3, schedule=None, **kw):
+    params = _tree(0)
+    if mode in ("async", "hybrid") and schedule is None:
+        schedule = constant_schedule(num_workers,
+                                     1 if mode == "async" else 2)
+    return params, ParameterServer(
+        params, lr=0.05, mode=mode, transport=_CellTransport(),
+        num_workers=num_workers, schedule=schedule, **kw)
+
+
+def test_snapshot_survives_continued_flushes():
+    """Regression for the checkpoint-under-donation hazard: a snapshot
+    taken mid-run must be a copy — its values stay bitwise intact while
+    later flushes keep donating (and therefore recycling) the server's
+    params buffers."""
+    params, server = _server(mode="async", num_workers=2)
+    codec = server.codec
+    grads = [codec.encode(_tree(i + 1, 0.01)) for i in range(4)]
+    for i in range(3):
+        server.ingest(GradientMsg(0, grads[i], server.version, i))
+    version, snap, applied = server.snapshot()
+    held = {k: np.asarray(v).copy() for k, v in snap.items()}
+    for i in range(40):                 # checkpoint-while-training
+        server.ingest(GradientMsg(0, grads[i % 4], server.version, i))
+    for k in held:                      # the snapshot did not move
+        np.testing.assert_array_equal(np.asarray(snap[k]), held[k])
+    # while the live params did
+    _, now, _ = server.snapshot()
+    assert any(not np.array_equal(held[k], np.asarray(now[k]))
+               for k in held)
+    assert version == 3 and applied == 3
+
+
+# ------------------------------------------------- server parity / probe
+
+def _replay_legacy(params, msgs, mode, schedule, lr, flush_mode="sum",
+                   staleness_decay=1.0, num_workers=3):
+    """Replay an ingest sequence through the pre-slab server semantics
+    (pytree buffers + legacy_agg_apply) and return the final params."""
+    version, buffer, round_ = 0, [], {}
+    p = params
+    for msg in msgs:
+        if mode == "sync":
+            if msg.version != version:
+                continue
+            round_[msg.worker_id] = msg.grad
+            if set(round_) >= set(range(num_workers)):
+                wids = sorted(round_)
+                grads = [round_[w] for w in wids]
+                round_ = {}
+                p = legacy_agg_apply(p, tuple(grads),
+                                     np.ones(len(grads)), lr)
+                version += 1
+        else:
+            buffer.append((msg.grad, msg.version))
+            if len(buffer) >= schedule(version):
+                grads = [g for g, _ in buffer]
+                stale = np.maximum(0.0, version - np.asarray(
+                    [v for _, v in buffer], np.float64))
+                weights = staleness_decay ** stale
+                k = len(buffer)
+                buffer = []
+                scale = lr * k if flush_mode == "sum" else lr
+                p = legacy_agg_apply(p, tuple(grads), weights, scale)
+                version += 1
+    return p, version
+
+
+@pytest.mark.parametrize("mode,flush_mode,decay", [
+    ("sync", "sum", 1.0),
+    ("async", "sum", 1.0),
+    ("hybrid", "sum", 1.0),
+    ("hybrid", "mean", 1.0),
+    ("hybrid", "sum", 0.9),
+    ("hybrid", "mean", 0.9),
+])
+def test_server_slab_path_matches_legacy_pytree_path(mode, flush_mode,
+                                                     decay):
+    """Numerical parity of the live slab server against the pre-slab
+    pytree path, on an identical deterministic ingest sequence: bitwise
+    for the sync round mean, allclose <= 1e-6 for weighted flushes."""
+    num_workers = 3
+    schedule = None
+    if mode == "hybrid":
+        schedule = step_schedule(num_workers, 2)   # K anneals 1 -> 3
+    elif mode == "async":
+        schedule = constant_schedule(num_workers, 1)
+    params, server = _server(mode=mode, num_workers=num_workers,
+                             schedule=schedule, flush_mode=flush_mode,
+                             staleness_decay=decay)
+    for w in range(num_workers):
+        server.register(w)
+    codec = server.codec
+    grad_trees = [_tree(100 + i, 0.01) for i in range(12)]
+
+    # deterministic ingest: round-robin workers, each reading the
+    # then-current version (so hybrid/async staleness is exercised but
+    # reproducible)
+    slab_msgs, tree_msgs = [], []
+    for i, g in enumerate(grad_trees):
+        wid = i % num_workers
+        v = server.version
+        msg = GradientMsg(wid, codec.encode(g), v, i)
+        server.ingest(msg)
+        tree_msgs.append(GradientMsg(wid, g, v, i))
+        slab_msgs.append(msg)
+
+    want, want_version = _replay_legacy(
+        params, tree_msgs, mode, schedule, server.lr,
+        flush_mode=flush_mode, staleness_decay=decay,
+        num_workers=num_workers)
+    assert server.version == want_version > 0
+    _, got, _ = server.snapshot()
+    for name in params:
+        g, w = np.asarray(got[name]), np.asarray(want[name])
+        if mode == "sync":
+            np.testing.assert_array_equal(g, w, err_msg=name)  # bitwise
+        else:
+            np.testing.assert_allclose(g, w, rtol=1e-6, atol=1e-7,
+                                       err_msg=name)
+
+
+def test_restore_wipes_nonfinite_staged_gradients():
+    """Regression: diverged (inf/nan) gradients sitting in the buffer
+    when a restore discards them must not poison later flushes — zero
+    masking alone is not enough (0 · inf = nan), so discard wipes.
+    The restore rolls K(t) back to 1, so the discarded rows would be
+    masked (never overwritten) by the next flush."""
+    num_workers = 3
+    schedule = step_schedule(num_workers, 1)       # K(v) = 1 + v
+    params, server = _server(mode="hybrid", num_workers=num_workers,
+                             schedule=schedule)
+    codec = server.codec
+    g = _tree(2, 0.01)
+    for i in range(3):     # advance to version 2 (flushes at K=1, K=2)
+        server.ingest(GradientMsg(i, codec.encode(g), server.version, i))
+    assert server.version == 2 and len(server.buffer) == 0
+    # two diverged gradients buffer at rows 0 and 1, awaiting K=3
+    bad = jax.tree.map(lambda x: jnp.full_like(x, jnp.inf), _tree(1))
+    for i in range(2):
+        server.ingest(GradientMsg(i, codec.encode(bad),
+                                  server.version, 3 + i))
+    assert len(server.buffer) == 2
+    server.restore(params, step=0)          # discards them; K back to 1
+    assert server.dropped == 2
+    # the next flush stages only row 0 — row 1 (the inf) is masked,
+    # so without the wipe it would turn the params to NaN
+    server.ingest(GradientMsg(0, codec.encode(g), server.version, 5))
+    _, got, _ = server.snapshot()
+    want = legacy_agg_apply(params, (g,), np.ones(1), server.lr)
+    for name in params:
+        assert np.isfinite(np.asarray(got[name])).all(), name
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]), err_msg=name)
+
+
+def test_hybrid_schedule_larger_than_fleet_does_not_overflow_staging():
+    """Regression: a K(t) schedule built for a larger fleet than the
+    actual worker count must not overflow the staging buffer — k_max is
+    sized to the schedule's own ceiling, so the buffer keeps filling
+    until the demanded K is reached."""
+    num_workers = 2
+    schedule = step_schedule(5, 1)         # K(t) can demand up to 5
+    params, server = _server(mode="hybrid", num_workers=num_workers,
+                             schedule=schedule)
+    codec = server.codec
+    for i in range(20):
+        server.ingest(GradientMsg(i % num_workers,
+                                  codec.encode(_tree(i, 0.01)),
+                                  server.version, i))
+    # flush sizes 1,2,3,4,5,5 — every gradient accounted, none clobbered
+    assert server.applied == 20 and len(server.buffer) == 0
+    assert server.agg.flush_cache_size() == 1
+
+
+def test_async_flushes_every_gradient_regardless_of_schedule():
+    """async is K ≡ 1 by definition: its one-row staging buffer relies
+    on the schedule being ignored, whatever K it would demand."""
+    params, server = _server(mode="async", num_workers=3,
+                             schedule=step_schedule(3, 1))
+    codec = server.codec
+    for i in range(6):
+        server.ingest(GradientMsg(i % 3, codec.encode(_tree(i, 0.01)),
+                                  server.version, i))
+    assert server.applied == server.version == 6
+    assert server.agg.k_max == 1
+
+
+@pytest.mark.parametrize("num_workers", [1, 3, 5])
+def test_exactly_one_flush_executable_any_fleet(num_workers):
+    """The jit-cache probe: after serving traffic across every buffer
+    size K in 1..fleet, the server holds exactly ONE compiled flush
+    executable (the pre-slab server compiled ``num_workers`` of them
+    before the clock even started)."""
+    schedule = step_schedule(num_workers, 1)       # K grows every update
+    params, server = _server(mode="hybrid", num_workers=num_workers,
+                             schedule=schedule)
+    codec = server.codec
+    seen_k = set()
+    for i in range(4 * num_workers):
+        k_now = schedule(server.version)
+        seen_k.add(k_now)
+        server.ingest(GradientMsg(i % num_workers,
+                                  codec.encode(_tree(i, 0.01)),
+                                  server.version, i))
+    assert seen_k == set(range(1, num_workers + 1))  # every K exercised
+    assert server.agg.flush_cache_size() == 1
+    assert server.applied == 4 * num_workers
