@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test quickstart smoke-sim smoke-train smoke-cluster examples \
-	bench-server
+.PHONY: test quickstart smoke-sim smoke-train smoke-cluster smoke-proc \
+	examples bench-server
 
 test:
 	$(PY) -m pytest -x -q
@@ -31,14 +31,26 @@ smoke-cluster:
 	    --mode hybrid --schedule step:40 --straggler 0:0.1 --quiet \
 	    --out /tmp/repro_cluster_smoke.json
 
-# server aggregation hot path: slab vs pre-PR pytree, emitting
-# BENCH_server.json (stable schema, diffed across PRs).  The hard
-# timeout turns a wedged benchmark into a fast failure; CI records the
-# numbers rather than gating on them (wall-clock speedups on shared
+# multi-process transport: every worker is its own OS process with its
+# own JAX runtime, talking slab frames to the server over Unix-domain
+# sockets.  Ends on the gradient budget; the hard timeout turns a hung
+# fleet (a worker that never connected, a deadlocked barrier) into a
+# fast failure
+smoke-proc:
+	timeout 240 $(PY) -m repro run --backend cluster --arch mlp --smoke \
+	    --transport proc --cluster-workers 2 --wall-budget 8 \
+	    --wall-sample-every 2 --mode hybrid --schedule step:40 \
+	    --max-gradients 400 --quiet --out /tmp/repro_proc_smoke.json
+
+# server aggregation hot path (slab vs pre-PR pytree) plus the
+# end-to-end transport grid (in-proc threads vs multi-proc workers),
+# emitting BENCH_server.json (stable schema, diffed across PRs).  The
+# hard timeout turns a wedged benchmark into a fast failure; CI records
+# the numbers rather than gating on them (wall-clock speedups on shared
 # runners are too noisy for a hard >= 2x gate — pass --check locally
 # for the strict version).
 bench-server:
-	timeout 600 $(PY) -m benchmarks.server_throughput --quick \
+	timeout 900 $(PY) -m benchmarks.server_throughput --quick \
 	    --out BENCH_server.json
 
 examples:

@@ -18,6 +18,12 @@ def main(argv=None):
                     help="smallest grids (CI-sized)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (hours)")
+    ap.add_argument("--transport", nargs="*", default=None,
+                    choices=["inproc", "socket", "proc", "none"],
+                    help="transports for the server-throughput "
+                         "end-to-end grid (forwarded to "
+                         "benchmarks.server_throughput; 'none' skips "
+                         "it)")
     args = ap.parse_args(argv)
 
     t0 = time.time()
@@ -34,11 +40,14 @@ def main(argv=None):
 
     print()
     print("#" * 70)
-    print("# Server flush throughput: slab path vs pre-PR pytree path")
+    print("# Server throughput: flush paths + in-proc vs multi-proc")
     print("#" * 70)
     from benchmarks import server_throughput
-    server_throughput.main(["--quick"] if args.quick
-                           else ["--full"] if args.full else [])
+    st_flags = (["--quick"] if args.quick
+                else ["--full"] if args.full else [])
+    if args.transport is not None:
+        st_flags += ["--transport", *args.transport]
+    server_throughput.main(st_flags)
 
     print()
     print("#" * 70)

@@ -1,10 +1,12 @@
-"""Server aggregation hot-path benchmark: slab path vs pre-PR pytree path.
+"""Server hot-path benchmark: flush paths and end-to-end transports.
 
 The parameter server is the serial resource of the cluster runtime —
 every microsecond it spends aggregating is stolen from the whole fleet
-at once.  This benchmark measures the two implementations of its fused
-aggregate+apply on the CI workload (the ``mlp`` classifier the cluster
-smoke tests train):
+at once.  Two sections, one artifact (``BENCH_server.json``):
+
+**Flush grid** — the two implementations of the fused aggregate+apply
+on the CI workload (the ``mlp`` classifier the cluster smoke tests
+train):
 
   * **pytree** — the pre-slab ``ParameterServer`` hot path, frozen here
     verbatim: one jitted per-leaf weighted fold per buffer size K,
@@ -27,10 +29,23 @@ Reported per (fleet, K) cell:
   * ``p50_ms`` / ``p99_ms`` — steady-state per-flush apply latency
     (compiles excluded), for both paths.
 
+**Transport grid** — the same server driven end-to-end through the
+cluster runtime under each transport (``--transport``): ``inproc``
+worker threads vs ``proc`` worker processes (own JAX runtimes, socket
+slab frames).  Each (fleet, K, transport) cell runs a real hybrid
+training burst with ``const:K`` and reports gradients/sec over the
+serving window (the clock starts only once the fleet is ready, so
+worker-process startup is excluded and the numbers are comparable).
+This is where "does contention actually cost us" gets a number: thread
+workers share one GIL/runtime, process workers genuinely contend on
+the server alone.
+
 Emits ``BENCH_server.json`` with a stable schema
-(``repro.bench.server/v1``) so future PRs can diff the perf trajectory:
+(``repro.bench.server/v2``) so future PRs can diff the perf trajectory:
 
   PYTHONPATH=src python -m benchmarks.server_throughput --quick
+  PYTHONPATH=src python -m benchmarks.server_throughput \\
+      --transport inproc proc     # transport grid selection
   # or: make bench-server   /   python -m repro bench
 """
 from __future__ import annotations
@@ -127,6 +142,52 @@ class SlabPath:
         jax.block_until_ready(self.agg.flush_apply(weights, scale))
 
 
+# ------------------------------------------------- transport end-to-end
+
+def bench_transport_cell(fleet: int, K: int, transport: str,
+                         max_gradients: int, budget_s: float) -> Dict:
+    """One (fleet, K, transport) cell: a real cluster training burst
+    (hybrid, ``const:K``) through the full runtime.  gradients/sec is
+    applied gradients over the *serving* window — the fleet-ready
+    barrier keeps worker-process startup out of the denominator."""
+    from repro.api import ExperimentSpec
+    from repro.cluster.trainer import ClusterTrainer
+
+    spec = ExperimentSpec(
+        arch="mlp", backend="cluster", mode="hybrid",
+        schedule=f"const:{K}", cluster_workers=fleet,
+        wall_budget_s=budget_s, wall_sample_every_s=budget_s,
+        batch=32, smoke=True, transport=transport,
+        max_gradients=max_gradients)
+    res = ClusterTrainer().run(spec)
+    a = res.extra["accounting"]
+    serve_s = res.extra["serve_wall_s"]
+    return {"transport": transport, "fleet": fleet, "K": K,
+            "applied": a["applied"], "updates": a["updates"],
+            "computed": a["computed"],
+            "serve_wall_s": round(serve_s, 3),
+            "total_wall_s": round(res.wall_s, 3),
+            "grads_per_s": round(a["applied"] / max(serve_s, 1e-9), 1)}
+
+
+def run_transport_grid(fleets, ks, transports, max_gradients: int,
+                       budget_s: float):
+    rows = []
+    for fleet in fleets:
+        for K in ks:
+            if K > fleet:
+                continue
+            for transport in transports:
+                row = bench_transport_cell(fleet, K, transport,
+                                           max_gradients, budget_s)
+                rows.append(row)
+                print(f"fleet={fleet:3d} K={K:3d} "
+                      f"{transport:7s}: {row['grads_per_s']:9.1f} g/s "
+                      f"({row['applied']} grads in "
+                      f"{row['serve_wall_s']:.2f}s serving)", flush=True)
+    return rows
+
+
 # ----------------------------------------------------------- measuring
 
 def bench_cell(params, fleet: int, K: int, n_flushes: int,
@@ -189,7 +250,7 @@ def run_grid(fleets, ks, n_flushes: int) -> Dict:
     worst = min(acc_cells, key=lambda c: c["speedup_grads_per_s"]) \
         if acc_cells else None
     report = {
-        "schema": "repro.bench.server/v1",
+        "schema": "repro.bench.server/v2",
         "workload": "mlp",
         "P": codec.size, "P_padded": codec.padded_size,
         "leaves": len(codec.sizes),
@@ -216,7 +277,8 @@ def run_grid(fleets, ks, n_flushes: int) -> Dict:
 
 def main(argv=None):
     ap = argparse.ArgumentParser(
-        description="server flush throughput: slab vs pre-PR pytree path")
+        description="server throughput: slab vs pytree flush paths, "
+                    "plus end-to-end in-proc vs multi-proc transports")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized grid (fleets 4/8, K 1/4)")
     ap.add_argument("--full", action="store_true",
@@ -227,6 +289,12 @@ def main(argv=None):
                     help="flushes per cell (default 100; CI runs are "
                          "short-lived servers, so the count is sized "
                          "like a smoke run's update budget)")
+    ap.add_argument("--transport", nargs="*", default=None,
+                    choices=["inproc", "socket", "proc", "none"],
+                    help="transports for the end-to-end grid (default: "
+                         "inproc proc — the in-proc vs multi-proc "
+                         "comparison; 'none' skips the section, e.g. "
+                         "for flush-path-only iteration)")
     ap.add_argument("--out", default="BENCH_server.json")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero when the acceptance criterion "
@@ -237,15 +305,40 @@ def main(argv=None):
 
     if args.full:
         fleets, ks, n = [4, 8, 16, 32], [1, 4, 8, 16], 200
+        t_fleets, t_ks, t_grads, t_budget = [2, 4, 8], [1, 4, 8], 600, 12.0
     elif args.quick:
         fleets, ks, n = [4, 8], [1, 4], 100
+        t_fleets, t_ks, t_grads, t_budget = [2, 4], [1, 4], 300, 8.0
     else:
         fleets, ks, n = [4, 8, 16], [1, 4, 8], 100
+        t_fleets, t_ks, t_grads, t_budget = [2, 4], [1, 4], 400, 10.0
+    # --fleets/--ks override BOTH grids (K > fleet cells are skipped,
+    # so a shrunken flush grid cannot silently keep large proc cells)
     fleets = args.fleets if args.fleets else fleets
     ks = args.ks if args.ks else ks
     n = args.flushes if args.flushes else n
+    t_fleets = args.fleets if args.fleets else t_fleets
+    t_ks = args.ks if args.ks else t_ks
+    transports = args.transport if args.transport is not None \
+        else ["inproc", "proc"]
+    if "none" in transports:
+        transports = []
 
     report = run_grid(fleets, ks, n)
+    if transports:
+        print(f"\ntransport grid (hybrid const:K, {t_grads} gradients "
+              f"per cell, serving window only):")
+        report["transports"] = {
+            "definition": ("grads_per_s = applied / serve_wall_s; the "
+                           "serving window starts at the fleet-ready "
+                           "barrier, so worker-process startup (JAX "
+                           "import + compile) is excluded and inproc/"
+                           "proc cells are comparable"),
+            "max_gradients": t_grads,
+            "budget_s": t_budget,
+            "grid": run_transport_grid(t_fleets, t_ks, transports,
+                                       t_grads, t_budget),
+        }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")

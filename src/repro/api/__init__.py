@@ -34,14 +34,15 @@ from repro.api.schedules import (SCHEDULE_FAMILIES,  # noqa: F401
                                  ScheduleFamily, parse_schedule,
                                  register_schedule, schedule_help)
 from repro.api.spec import (BACKENDS, FLUSH_MODES, MODES,  # noqa: F401
-                            ExperimentSpec)
+                            TRANSPORTS, ExperimentSpec)
 from repro.api.trainers import (SIM_WORKLOADS, TRAINERS,  # noqa: F401
                                 SimulatorTrainer, SpmdTrainer, Trainer,
                                 get_trainer, register_sim_workload, run)
 from repro.cluster.faults import FaultPlan  # noqa: F401
 
 __all__ = [
-    "BACKENDS", "MODES", "FLUSH_MODES", "ExperimentSpec", "RunResult",
+    "BACKENDS", "MODES", "FLUSH_MODES", "TRANSPORTS", "ExperimentSpec",
+    "RunResult",
     "FaultPlan", "SCHEDULE_FAMILIES", "ScheduleFamily", "parse_schedule",
     "register_schedule", "schedule_help", "Trainer", "SimulatorTrainer",
     "SpmdTrainer", "TRAINERS", "SIM_WORKLOADS",

@@ -17,6 +17,8 @@ Examples:
       --steps 40 --mode hybrid --schedule step:10 --out /tmp/result.json
   python -m repro run --backend cluster --arch mlp --cluster-workers 4 \
       --wall-budget 10 --straggler 0:0.1 --kill 1:4 --respawn-after 1
+  python -m repro run --backend cluster --arch mlp --transport proc \
+      --cluster-workers 2 --wall-budget 8 --max-gradients 100
   python -m repro run --spec experiment.json
 """
 from __future__ import annotations
@@ -53,7 +55,11 @@ _SPEC_FLAGS = [
     ("--mesh-model", "mesh_model", int, "spmd: model-parallel axis size"),
     ("--log-every", "log_every", int, "spmd: metric logging interval"),
     ("--cluster-workers", "cluster_workers", int,
-     "cluster: worker thread count"),
+     "cluster: worker count (threads or processes, see --transport)"),
+    ("--transport", "transport", str,
+     "cluster: worker wire — inproc (threads+queue, default), socket "
+     "(threads over TCP slab frames), proc (one OS process per worker "
+     "over Unix-domain sockets)"),
     ("--wall-budget", "wall_budget_s", float,
      "cluster: wall-clock training budget (real seconds)"),
     ("--wall-sample-every", "wall_sample_every_s", float,

@@ -151,4 +151,9 @@ class RunResult:
             spec=spec.to_dict() if spec is not None else None,
             extra={"accounting": dict(cres.accounting),
                    "events": list(cres.events),
-                   "start_version": int(cres.start_version)})
+                   "start_version": int(cres.start_version),
+                   # serving window only (clock starts after the fleet
+                   # is ready) — the denominator for gradients/sec that
+                   # is comparable across transports, unlike wall_s
+                   # which includes worker-process startup
+                   "serve_wall_s": float(cres.wall_s)})

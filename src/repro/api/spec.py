@@ -19,8 +19,8 @@ artifact:
 Backend-specific fields are simply ignored by the other backends (the
 simulator reads ``pool``/``horizon``; the SPMD driver reads
 ``steps``/``seq``/``mesh_model``; the cluster runtime reads
-``cluster_workers``/``wall_budget_s``/``faults``), so one spec can be
-re-targeted by changing ``backend`` alone.
+``cluster_workers``/``wall_budget_s``/``faults``/``transport``), so one
+spec can be re-targeted by changing ``backend`` alone.
 """
 from __future__ import annotations
 
@@ -30,6 +30,7 @@ from typing import Any, Dict, Optional
 
 from repro.api.schedules import parse_schedule
 from repro.cluster.faults import FaultPlan
+from repro.cluster.transport import TRANSPORTS
 from repro.core.simulator import WorkerPool
 
 BACKENDS = ("sim", "spmd", "cluster")
@@ -68,6 +69,7 @@ class ExperimentSpec:
     wall_sample_every_s: float = 0.25   # metric-grid spacing (real s)
     max_gradients: Optional[int] = None  # stop after N applied gradients
     faults: FaultPlan = FaultPlan()      # stragglers / kills / checkpoints
+    transport: str = "inproc"      # worker wire: inproc | socket | proc
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -79,6 +81,9 @@ class ExperimentSpec:
         if self.flush_mode not in FLUSH_MODES:
             raise ValueError(f"flush_mode must be one of {FLUSH_MODES}, "
                              f"got {self.flush_mode!r}")
+        if self.transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS}, "
+                             f"got {self.transport!r}")
         if isinstance(self.pool, dict):   # from_json convenience
             object.__setattr__(self, "pool", WorkerPool(**self.pool))
         if isinstance(self.faults, dict):  # from_json convenience

@@ -9,11 +9,15 @@ checkpoint/restore — the failure modes the sync/async tradeoff is
 actually about.
 
 Pieces:
-  * :class:`~repro.cluster.transport.Transport` /
-    :class:`~repro.cluster.transport.InProcTransport` — the wire,
-    carrying gradient/params *slabs* (:mod:`repro.core.slab`) as single
-    contiguous arrays (in-process queues now; the interface and the
-    slab wire format admit multi-process/host);
+  * :class:`~repro.cluster.transport.Transport` — the wire, carrying
+    gradient/params *slabs* (:mod:`repro.core.slab`) as single
+    contiguous arrays.  Three implementations:
+    :class:`~repro.cluster.transport.InProcTransport` (threads +
+    queue, the default and parity baseline),
+    :class:`~repro.cluster.mptransport.SocketTransport` (TCP /
+    Unix-domain length-prefixed slab frames), and
+    :class:`~repro.cluster.mptransport.ProcTransport` (one OS process
+    per worker with its own JAX runtime; kills are SIGKILL);
   * :class:`~repro.cluster.server.ParameterServer` — live params + the
     slab aggregation path (one donated fused flush executable) driven
     by the K(t) schedule, under a lock;
@@ -31,7 +35,7 @@ Pieces:
 # repro.checkpoint, the worker machinery) into every spec round-trip.
 # The heavy classes resolve lazily on first attribute access (PEP 562).
 from repro.cluster.faults import FaultPlan, parse_fault_pairs  # noqa: F401
-from repro.cluster.transport import (GradientMsg,  # noqa: F401
+from repro.cluster.transport import (TRANSPORTS, GradientMsg,  # noqa: F401
                                      InProcTransport, ParamsMsg, Transport)
 
 _LAZY = {
@@ -40,12 +44,19 @@ _LAZY = {
     "ClusterRuntime": "repro.cluster.runtime",
     "ClusterResult": "repro.cluster.runtime",
     "ClusterTrainer": "repro.cluster.trainer",
+    # numpy/socket only (jax-free), but lazy keeps spec round-trips lean
+    "SocketTransport": "repro.cluster.mptransport",
+    "SocketWorkerClient": "repro.cluster.mptransport",
+    "ProcTransport": "repro.cluster.mptransport",
+    "ProcWorkerConfig": "repro.cluster.mptransport",
 }
 
 __all__ = [
-    "FaultPlan", "parse_fault_pairs", "Transport", "InProcTransport",
-    "GradientMsg", "ParamsMsg", "ParameterServer", "Worker",
-    "ClusterRuntime", "ClusterResult", "ClusterTrainer",
+    "FaultPlan", "parse_fault_pairs", "Transport", "TRANSPORTS",
+    "InProcTransport", "SocketTransport", "SocketWorkerClient",
+    "ProcTransport", "ProcWorkerConfig", "GradientMsg", "ParamsMsg",
+    "ParameterServer", "Worker", "ClusterRuntime", "ClusterResult",
+    "ClusterTrainer",
 ]
 
 

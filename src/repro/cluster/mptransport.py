@@ -1,0 +1,918 @@
+"""Multi-process slab transport: sockets + one-process-per-worker.
+
+:class:`SocketTransport` implements the :class:`~repro.cluster.
+transport.Transport` protocol over real sockets (TCP or Unix-domain):
+the server side is a *hub* — a listener plus one reader/writer thread
+pair per accepted worker connection — and the worker side is a
+:class:`SocketWorkerClient` endpoint created by :meth:`SocketTransport.
+connect` (same process) or by connecting to ``hub.address`` from
+another process.  :class:`ProcTransport` extends the hub with a
+``multiprocessing`` launcher that runs each worker in its own OS
+process with its own JAX runtime, so GIL contention, stale parameter
+reads, stragglers, and SIGKILL worker death are physical across address
+spaces.
+
+**Wire format** — the slab layout (:mod:`repro.core.slab`) is the
+schema on both ends, so every message is ONE length-prefixed frame with
+no per-leaf serialization::
+
+    frame   := header payload
+    header  := !BI            (type: u8, payload length: u32)
+    HELLO   := !Ii            worker_id, generation     (worker -> hub)
+    GRAD    := !IiQ raw-slab  worker_id, version, seq   (worker -> hub)
+    PARAMS  := !ii  raw-slab  version, restore-epoch    (hub -> worker)
+
+``raw-slab`` is the ``(P_pad,)`` float32 slab's native byte image —
+f32 round-trips bitwise, which is what makes the cross-process parity
+test exact.  (Frame headers are network order; slab bytes are native
+order — a true multi-host transport would pin them, see ROADMAP.)
+
+**Channel semantics** match :class:`~repro.cluster.transport.
+InProcTransport` exactly (the conformance suite in
+``tests/test_transport.py`` runs against all three):
+
+  * gradients: per-connection FIFO into one bounded hub queue.  A full
+    queue blocks the connection's reader, TCP/UDS flow control
+    propagates the stall to the worker's socket, and the worker's small
+    outbound queue fills — ``send_gradient`` returning ``False`` is
+    end-to-end physical backpressure;
+  * params: versioned broadcast.  The hub keeps the latest published
+    frame; per-connection writers push it, *coalescing* intermediate
+    versions for slow readers (only the newest publication matters —
+    including a checkpoint restore that moves the version backwards).
+
+**Shutdown / accounting**: a SIGKILLed worker can die mid-frame; the
+hub discards the torn tail frame (``torn_frames``) and counts only
+complete frames in :meth:`received_counts` — which is therefore the
+exact "computed" side of the conservation ledger on both socket
+transports (whatever never reached the hub died with the sender,
+exactly like a thread worker killed before ``send``).  ``quiesce()``
+joins the connection readers after the producers are gone, making
+``pending_gradients()`` exact for the final drain.
+
+**Membership / barrier**: the runtime registers a worker with the
+server when its HELLO arrives (:attr:`SocketTransport.on_worker_ready`)
+and deregisters it when its connection dies
+(:attr:`~SocketTransport.on_worker_gone`) — a child that is still
+importing JAX must not stall a sync barrier it cannot contribute to.
+``hold_params``/``release_params`` implement the fleet-ready barrier's
+starting gun: until release, connected workers idle in
+``fetch_params`` instead of banking gradients before the clock starts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import socket
+import struct
+import sys
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.cluster.transport import GradientMsg, ParamsMsg
+
+_HDR = struct.Struct("!BI")          # frame type, payload length
+_HELLO = struct.Struct("!Ii")        # worker_id, generation
+_GRAD = struct.Struct("!IiQ")        # worker_id, version, seq
+_PARAMS = struct.Struct("!ii")       # version, restore epoch
+
+_F_HELLO, _F_GRAD, _F_PARAMS = 1, 2, 3
+
+# one frame must fit in memory several times over; anything bigger is a
+# corrupted header (e.g. a reader that lost frame sync), not a real slab
+_MAX_FRAME = 1 << 31
+
+
+def _recv_exact(sock: socket.socket, n: int
+                ) -> "tuple[Optional[bytes], bool]":
+    """Read exactly ``n`` bytes.  Returns ``(data, partial)``: data is
+    ``None`` on EOF / error, and ``partial`` is True when the peer died
+    after delivering *some* of the bytes — a torn read, as opposed to a
+    clean EOF on a frame boundary.  (Mattering for accounting: a
+    SIGKILL can cut a frame mid-header, not just mid-payload.)"""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        try:
+            k = sock.recv_into(view[got:], n - got)
+        except (OSError, ValueError):
+            return None, got > 0
+        if k == 0:
+            return None, got > 0
+        got += k
+    return bytes(buf), False
+
+
+def _grad_frame(msg: GradientMsg) -> bytes:
+    slab = np.ascontiguousarray(np.asarray(msg.grad, dtype=np.float32))
+    payload_len = _GRAD.size + slab.nbytes
+    return (_HDR.pack(_F_GRAD, payload_len)
+            + _GRAD.pack(msg.worker_id, msg.version, msg.seq)
+            + slab.tobytes())
+
+
+def _params_frame(msg: ParamsMsg) -> bytes:
+    slab = np.ascontiguousarray(np.asarray(msg.params, dtype=np.float32))
+    return (_HDR.pack(_F_PARAMS, _PARAMS.size + slab.nbytes)
+            + _PARAMS.pack(msg.version, msg.epoch) + slab.tobytes())
+
+
+def _configure(sock: socket.socket) -> None:
+    if sock.family == socket.AF_INET:
+        # grad/params frames are latency-critical; never Nagle-delay them
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+
+# ======================================================== server side
+
+
+class _Conn:
+    """One accepted worker connection: a reader thread (gradients in)
+    and a writer thread (coalesced params broadcast out)."""
+
+    def __init__(self, hub: "SocketTransport", sock: socket.socket):
+        self.hub = hub
+        self.sock = sock
+        self.worker_id: Optional[int] = None
+        self.generation = 0
+        self.closed = threading.Event()
+        self._params_ev = threading.Event()
+        self._last_sent: Optional[bytes] = None
+        self._lock = threading.Lock()       # close() idempotence
+        _configure(sock)
+        self.reader = threading.Thread(target=self._read_loop,
+                                       name="hub-reader", daemon=True)
+        self.writer = threading.Thread(target=self._write_loop,
+                                       name="hub-writer", daemon=True)
+        self._params_ev.set()               # push current params on join
+        self.reader.start()
+        self.writer.start()
+
+    # ------------------------------------------------------- gradients in
+    def _read_loop(self) -> None:
+        try:
+            while not self.closed.is_set():
+                hdr, partial = _recv_exact(self.sock, _HDR.size)
+                if hdr is None:
+                    if partial:
+                        self.hub._note_torn()   # died mid-header
+                    break                       # else: clean EOF
+                ftype, n = _HDR.unpack(hdr)
+                if n > _MAX_FRAME:
+                    self.hub._note_torn()
+                    break
+                payload, _ = _recv_exact(self.sock, n)
+                if payload is None:
+                    self.hub._note_torn()       # died mid-frame: discard
+                    break
+                if ftype == _F_HELLO:
+                    wid, gen = _HELLO.unpack(payload)
+                    self.worker_id, self.generation = wid, gen
+                    self.hub._on_hello(self)
+                elif ftype == _F_GRAD:
+                    wid, version, seq = _GRAD.unpack(
+                        payload[:_GRAD.size])
+                    grad = np.frombuffer(payload, np.float32,
+                                         offset=_GRAD.size)
+                    msg = GradientMsg(wid, grad, version, seq)
+                    if self.hub._enqueue(msg):  # blocks: backpressure
+                        self.hub._count_received(wid)
+                # unknown frame types are ignored (forward compat)
+        finally:
+            self.close()
+            self.hub._conn_closed(self)
+
+    # ----------------------------------------------------- params out
+    def notify_params(self) -> None:
+        self._params_ev.set()
+
+    def _write_loop(self) -> None:
+        while not self.closed.is_set():
+            if not self._params_ev.wait(0.2):
+                continue
+            self._params_ev.clear()
+            frame = self.hub._pub_frame     # latest only: coalesced
+            if frame is None or frame is self._last_sent:
+                continue
+            try:
+                self.sock.sendall(frame)
+            except OSError:
+                break
+            self._last_sent = frame
+
+    # ------------------------------------------------------------- misc
+    def half_close(self) -> None:
+        """Stop the params direction (worker sees EOF and shuts down)
+        while still reading its in-flight gradient frames to the end."""
+        try:
+            self.sock.shutdown(socket.SHUT_WR)
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        with self._lock:
+            if self.closed.is_set():
+                return
+            self.closed.set()
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class SocketTransport:
+    """The server-side hub: a full :class:`Transport` over real sockets.
+
+    ``recv_gradient`` / ``publish_params`` / ``pending_gradients`` /
+    ``quiesce`` are the parameter server's half and run in the hub
+    process.  Workers use :class:`SocketWorkerClient` endpoints —
+    :meth:`connect` builds one in-process (thread workers), and child
+    processes connect to :attr:`address` themselves.  The hub's own
+    ``send_gradient`` / ``fetch_params`` are local loopbacks (no
+    socket), kept so the hub satisfies the whole protocol.
+
+    ``grad_capacity`` bounds the hub gradient queue exactly like
+    :class:`InProcTransport` (0 = unbounded); the bound propagates to
+    workers through socket flow control (see module docstring).
+    """
+
+    def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
+                 host: str = "127.0.0.1"):
+        assert family in ("unix", "tcp"), family
+        self.family = family
+        self._sockdir: Optional[str] = None
+        if family == "unix":
+            self._sockdir = tempfile.mkdtemp(prefix="repro-slab-hub-")
+            self.address: Any = os.path.join(self._sockdir, "hub.sock")
+            lsock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            lsock.bind(self.address)
+        else:
+            lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            lsock.bind((host, 0))
+            self.address = lsock.getsockname()
+        lsock.listen(128)
+        lsock.settimeout(0.2)               # close() unblocks accept
+        self._lsock = lsock
+        self._grads: "queue.Queue[GradientMsg]" = \
+            queue.Queue(maxsize=grad_capacity)
+        self._closed = threading.Event()
+        self._conns: List[_Conn] = []
+        self._conns_cond = threading.Condition()
+        self._received: Dict[int, int] = {}
+        self._recv_lock = threading.Lock()
+        self._torn = 0
+        self._pub_frame: Optional[bytes] = None
+        self._pub_msg: Optional[ParamsMsg] = None
+        self._pub_cond = threading.Condition()
+        self._held_frame: Optional[bytes] = None
+        self._hold = False          # hold_params(): see fleet barrier
+        self._draining = False      # half_close_workers() was called
+        # membership hooks (set by the runtime before spawning): called
+        # from hub reader threads with (worker_id, generation) when a
+        # worker finishes connecting / when its connection dies.  The
+        # proc runtime registers workers with the server on HELLO — a
+        # worker that is still importing JAX must not hold up a sync
+        # barrier it cannot yet contribute to
+        self.on_worker_ready: Optional[Any] = None
+        self.on_worker_gone: Optional[Any] = None
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="hub-accept", daemon=True)
+        self._accept_thread.start()
+
+    # ------------------------------------------------------- accept side
+    def _accept_loop(self) -> None:
+        while not self._closed.is_set():
+            try:
+                sock, _ = self._lsock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            with self._conns_cond:
+                conn = _Conn(self, sock)
+                self._conns.append(conn)
+            if self._draining:
+                # shutdown already began: a late joiner (e.g. a respawn
+                # that was still compiling) gets its EOF immediately,
+                # so it stops instead of training against a dead run
+                conn.half_close()
+
+    def _on_hello(self, conn: _Conn) -> None:
+        with self._conns_cond:
+            self._conns_cond.notify_all()
+        if self.on_worker_ready is not None:
+            self.on_worker_ready(conn.worker_id, conn.generation)
+
+    def _conn_closed(self, conn: _Conn) -> None:
+        with self._conns_cond:
+            self._conns_cond.notify_all()
+        if self.on_worker_gone is not None and conn.worker_id is not None:
+            self.on_worker_gone(conn.worker_id, conn.generation)
+
+    def _enqueue(self, msg: GradientMsg) -> bool:
+        # bounded put that stays interruptible by close(): the reader
+        # blocking here is what turns a full hub queue into socket
+        # backpressure all the way to the worker
+        while not self._closed.is_set():
+            try:
+                self._grads.put(msg, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _count_received(self, worker_id: int) -> None:
+        with self._recv_lock:
+            self._received[worker_id] = \
+                self._received.get(worker_id, 0) + 1
+
+    def _note_torn(self) -> None:
+        with self._recv_lock:
+            self._torn += 1
+
+    # ----------------------------------------------- Transport (server)
+    def recv_gradient(self, timeout: Optional[float] = None
+                      ) -> Optional[GradientMsg]:
+        try:
+            if timeout is not None and timeout <= 0:
+                return self._grads.get_nowait()
+            return self._grads.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def publish_params(self, msg: ParamsMsg) -> None:
+        frame = _params_frame(msg)
+        with self._pub_cond:
+            # unconditional replace — a restore publishes an OLDER
+            # version and workers must resync to it (see Transport)
+            self._pub_msg = ParamsMsg(
+                msg.version, np.frombuffer(frame, np.float32,
+                                           offset=_HDR.size + _PARAMS.size),
+                epoch=msg.epoch)
+            if self._hold:
+                self._held_frame = frame
+                self._pub_cond.notify_all()
+                return                  # workers see it on release
+            self._pub_frame = frame
+            self._pub_cond.notify_all()
+        self._notify_all_conns()
+
+    def _notify_all_conns(self) -> None:
+        with self._conns_cond:
+            conns = list(self._conns)
+        for conn in conns:
+            conn.notify_params()
+
+    def hold_params(self) -> None:
+        """Withhold the params broadcast from workers (the hub-local
+        cell still updates).  Workers that connect meanwhile block in
+        ``fetch_params`` instead of free-running — the fleet-ready
+        barrier uses this so no gradient work predates the serving
+        clock (which would flatter the multi-process benchmark)."""
+        with self._pub_cond:
+            self._hold = True
+            if self._pub_frame is not None:
+                self._held_frame = self._pub_frame
+                self._pub_frame = None
+
+    def release_params(self) -> None:
+        """Release a :meth:`hold_params` hold: push the latest params
+        to every connected worker (the starting gun)."""
+        with self._pub_cond:
+            self._hold = False
+            if self._held_frame is not None:
+                self._pub_frame = self._held_frame
+                self._held_frame = None
+        self._notify_all_conns()
+
+    def pending_gradients(self) -> int:
+        return self._grads.qsize()
+
+    # --------------------------------------------- Transport (loopback)
+    def send_gradient(self, msg: GradientMsg,
+                      timeout: Optional[float] = None) -> bool:
+        try:
+            if timeout is not None and timeout <= 0:
+                self._grads.put_nowait(msg)
+            else:
+                self._grads.put(msg, timeout=timeout)
+        except queue.Full:
+            return False
+        self._count_received(msg.worker_id)
+        return True
+
+    def fetch_params(self, min_version: int = 0,
+                     timeout: Optional[float] = None
+                     ) -> Optional[ParamsMsg]:
+        with self._pub_cond:
+            ok = self._pub_cond.wait_for(
+                lambda: self._pub_msg is not None
+                and self._pub_msg.version >= min_version,
+                0 if (timeout is not None and timeout <= 0) else timeout)
+            return self._pub_msg if ok else None
+
+    # ------------------------------------------------------- lifecycle
+    def connect(self, worker_id: int, generation: int = 0,
+                send_capacity: int = 2) -> "SocketWorkerClient":
+        """A worker-side endpoint in this process (thread workers)."""
+        return SocketWorkerClient(self.address, worker_id,
+                                  generation=generation,
+                                  family=self.family,
+                                  send_capacity=send_capacity)
+
+    def wait_for_workers(self, n: int,
+                         timeout: Optional[float] = None) -> bool:
+        """Block until ``n`` distinct workers have said HELLO and are
+        still connected (process workers connect only after their JAX
+        runtime is warm, so this is the fleet-ready barrier)."""
+        def ready() -> bool:
+            live = {c.worker_id for c in self._conns
+                    if c.worker_id is not None and not c.closed.is_set()}
+            return len(live) >= n
+        with self._conns_cond:
+            return self._conns_cond.wait_for(ready, timeout)
+
+    def live_workers(self) -> Set[int]:
+        with self._conns_cond:
+            return {c.worker_id for c in self._conns
+                    if c.worker_id is not None and not c.closed.is_set()}
+
+    def received_counts(self) -> Dict[int, int]:
+        """Complete gradient frames received, per worker id — the exact
+        "computed" ledger column for process workers.  Read only after
+        :meth:`quiesce` returned ``True``."""
+        with self._recv_lock:
+            return dict(self._received)
+
+    @property
+    def torn_frames(self) -> int:
+        """Frames discarded because the sender died mid-write."""
+        with self._recv_lock:
+            return self._torn
+
+    def half_close_workers(self) -> None:
+        """Send EOF to every worker (params direction) while still
+        draining their in-flight gradient frames — the clean-shutdown
+        signal for process workers.  Workers that connect *after* this
+        call are half-closed on arrival (see the accept loop), so a
+        late-starting respawn can never outlive the run."""
+        self._draining = True
+        with self._conns_cond:
+            conns = list(self._conns)
+        for conn in conns:
+            conn.half_close()
+
+    def quiesce(self, timeout: Optional[float] = None) -> bool:
+        """True once every connection reader has drained to EOF (all
+        producers must already be stopped/closed).  Interleave with
+        ``recv_gradient(timeout=0)`` drains: a reader blocked on the
+        bounded queue needs the caller to make room."""
+        deadline = None if timeout is None else \
+            time.monotonic() + max(0.0, timeout)
+        with self._conns_cond:
+            conns = list(self._conns)
+        for conn in conns:
+            remain = None if deadline is None else \
+                max(0.0, deadline - time.monotonic())
+            conn.reader.join(timeout=remain)
+            if conn.reader.is_alive():
+                return False
+        return True
+
+    def close(self) -> None:
+        self._closed.set()
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        with self._conns_cond:
+            conns = list(self._conns)
+        for conn in conns:
+            conn.close()
+        self._accept_thread.join(timeout=2.0)
+        if self.family == "unix":
+            for path in (self.address,):
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+            if self._sockdir:
+                try:
+                    os.rmdir(self._sockdir)
+                except OSError:
+                    pass
+
+
+# ======================================================== worker side
+
+
+class SocketWorkerClient:
+    """The worker half of the protocol over one socket connection.
+
+    ``send_gradient`` enqueues into a small bounded outbound queue
+    drained by a sender thread (so a timed-out send never leaves a torn
+    frame on the wire — the frame is sent whole or not at all), and
+    ``fetch_params`` waits on a local versioned cell kept current by a
+    reader thread — the same broadcast-cell semantics as
+    :class:`InProcTransport`.
+
+    :attr:`closed` is set when the connection dies (server shutdown,
+    kill, network error); runtimes wire it up as the worker's stop
+    event so a dead server can never leave a live worker spinning.
+    """
+
+    def __init__(self, address: Any, worker_id: int, *,
+                 generation: int = 0, family: str = "unix",
+                 send_capacity: int = 2, connect_timeout: float = 10.0):
+        self.worker_id = worker_id
+        self.generation = generation
+        if family == "unix":
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(connect_timeout)
+            sock.connect(address)
+        else:
+            sock = socket.create_connection(tuple(address),
+                                            timeout=connect_timeout)
+        sock.settimeout(None)
+        _configure(sock)
+        self.sock = sock
+        self.closed = threading.Event()
+        self._cell: Optional[ParamsMsg] = None
+        self._cond = threading.Condition()
+        self._sendq: "queue.Queue[GradientMsg]" = \
+            queue.Queue(maxsize=max(1, send_capacity))
+        self._close_lock = threading.Lock()
+        self._closed_once = False
+        self.sock.sendall(_HDR.pack(_F_HELLO, _HELLO.size)
+                          + _HELLO.pack(worker_id, generation))
+        self._reader = threading.Thread(
+            target=self._read_loop, name=f"client-reader-{worker_id}",
+            daemon=True)
+        self._sender = threading.Thread(
+            target=self._send_loop, name=f"client-sender-{worker_id}",
+            daemon=True)
+        self._reader.start()
+        self._sender.start()
+
+    # ------------------------------------------------------ wire threads
+    def _read_loop(self) -> None:
+        try:
+            while not self.closed.is_set():
+                hdr, _ = _recv_exact(self.sock, _HDR.size)
+                if hdr is None:
+                    break
+                ftype, n = _HDR.unpack(hdr)
+                if n > _MAX_FRAME:
+                    break
+                payload, _ = _recv_exact(self.sock, n)
+                if payload is None:
+                    break
+                if ftype == _F_PARAMS:
+                    version, epoch = _PARAMS.unpack(
+                        payload[:_PARAMS.size])
+                    slab = np.frombuffer(payload, np.float32,
+                                         offset=_PARAMS.size)
+                    with self._cond:
+                        self._cell = ParamsMsg(version, slab,
+                                               epoch=epoch)
+                        self._cond.notify_all()
+        finally:
+            self._mark_closed()
+
+    def _send_loop(self) -> None:
+        while True:
+            try:
+                msg = self._sendq.get(timeout=0.1)
+            except queue.Empty:
+                if self.closed.is_set():
+                    return
+                continue
+            try:
+                self.sock.sendall(_grad_frame(msg))
+            except OSError:
+                # the frame was accepted but never shipped: do NOT
+                # task_done() it — flush() must not claim it landed
+                self._mark_closed()
+                return
+            self._sendq.task_done()
+
+    def _mark_closed(self) -> None:
+        self.closed.set()
+        with self._cond:
+            self._cond.notify_all()         # wake blocked fetch_params
+
+    # ------------------------------------------- Transport (worker half)
+    def send_gradient(self, msg: GradientMsg,
+                      timeout: Optional[float] = None) -> bool:
+        if timeout is not None and timeout <= 0:
+            if self.closed.is_set():
+                return False
+            try:
+                self._sendq.put_nowait(msg)
+                return True
+            except queue.Full:
+                return False
+        deadline = None if timeout is None else \
+            time.monotonic() + timeout
+        while not self.closed.is_set():
+            remain = None if deadline is None else \
+                deadline - time.monotonic()
+            if remain is not None and remain <= 0:
+                return False
+            try:
+                self._sendq.put(msg, timeout=0.05 if remain is None
+                                else min(0.05, remain))
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def fetch_params(self, min_version: int = 0,
+                     timeout: Optional[float] = None
+                     ) -> Optional[ParamsMsg]:
+        def ok() -> bool:
+            return (self._cell is not None
+                    and self._cell.version >= min_version)
+        with self._cond:
+            if timeout is not None and timeout <= 0:
+                return self._cell if ok() else None
+            deadline = None if timeout is None else \
+                time.monotonic() + timeout
+            while not ok():
+                if self.closed.is_set():
+                    return None
+                remain = None if deadline is None else \
+                    deadline - time.monotonic()
+                if remain is not None and remain <= 0:
+                    return None
+                self._cond.wait(0.1 if remain is None
+                                else min(0.1, remain))
+            return self._cell
+
+    def pending_gradients(self) -> int:
+        return self._sendq.qsize()
+
+    # the worker half never receives gradients or publishes params
+    def recv_gradient(self, timeout: Optional[float] = None):
+        raise NotImplementedError("worker-side endpoint")
+
+    def publish_params(self, msg: ParamsMsg) -> None:
+        raise NotImplementedError("worker-side endpoint")
+
+    # ------------------------------------------------------- lifecycle
+    def flush(self, timeout: float = 5.0) -> bool:
+        """Block until every accepted gradient is on the wire — clean
+        shutdown must not strand sent-but-unshipped gradients (the
+        ledger counts them as computed).  Note this waits on the sender
+        *thread*, not on :attr:`closed`: a hub half-close (EOF on the
+        params direction) sets ``closed`` while the gradient direction
+        is still perfectly writable, and bailing there would tear the
+        final frames."""
+        deadline = time.monotonic() + timeout
+        while self._sendq.unfinished_tasks:
+            if not self._sender.is_alive() \
+                    or time.monotonic() > deadline:
+                return self._sendq.unfinished_tasks == 0
+            time.sleep(0.01)
+        return True
+
+    def can_flush(self) -> bool:
+        """Whether unshipped frames can still make progress — the
+        sender thread is alive.  A dead sender means the connection is
+        gone and the remaining frames are lost; waiting on them is
+        pointless."""
+        return self._sender.is_alive()
+
+    def quiesce(self, timeout: Optional[float] = None) -> bool:
+        return self.flush(timeout if timeout is not None else 5.0)
+
+    def close(self) -> None:
+        with self._close_lock:
+            if self._closed_once:
+                return
+            self._closed_once = True
+        self._mark_closed()
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ================================================== process launcher
+
+
+@dataclasses.dataclass
+class ProcWorkerConfig:
+    """Everything a worker process needs to rebuild its world: the
+    experiment spec (to rebuild the workload via the ``SIM_WORKLOADS``
+    registry — code does not cross the process boundary, only this
+    picklable description does), its identity/shard, and the hub
+    address.  ``platform`` forces ``JAX_PLATFORMS`` in the child (set
+    to ``"cpu"`` when the parent holds an exclusive accelerator — two
+    processes cannot share one TPU)."""
+    spec: Dict[str, Any]
+    worker_id: int
+    generation: int
+    num_workers: int
+    mode: str
+    straggle_s: float
+    seed: int
+    batch: int
+    address: Any = None
+    family: str = "unix"
+    platform: Optional[str] = None
+
+
+def _proc_worker_main(cfg: ProcWorkerConfig) -> None:
+    """Child entry point: rebuild the workload, compile the slab
+    gradient executable, and only then connect (HELLO == ready), so the
+    parent's wall-clock budget measures contention — not XLA."""
+    if cfg.platform:
+        os.environ["JAX_PLATFORMS"] = cfg.platform
+    try:
+        import jax
+
+        from repro.api.spec import ExperimentSpec
+        from repro.api.trainers import SIM_WORKLOADS
+        from repro.cluster.worker import Worker
+        from repro.core.slab import slab_codec
+        from repro.data.pipeline import shard_iterator
+
+        spec = ExperimentSpec.from_dict(cfg.spec)
+        loss_fn, init_params, data, _ = SIM_WORKLOADS[spec.arch](spec)
+        x_tr, y_tr = data[0], data[1]
+        codec = slab_codec(init_params)
+        grad_fn = jax.grad(loss_fn)
+
+        def _grad_slab(p_slab, x, y):
+            return codec.encode(grad_fn(codec.decode(p_slab), x, y))
+
+        grad = jax.jit(_grad_slab)
+
+        def fresh_batches():
+            return shard_iterator(x_tr, y_tr, cfg.worker_id,
+                                  cfg.num_workers, cfg.batch,
+                                  seed=cfg.seed,
+                                  generation=cfg.generation)
+
+        # warm up on a throwaway iterator: the training stream must
+        # start at batch 0, exactly like an in-process worker's
+        wx, wy = next(fresh_batches())
+        jax.block_until_ready(grad(codec.encode(init_params), wx, wy))
+
+        client = SocketWorkerClient(cfg.address, cfg.worker_id,
+                                    generation=cfg.generation,
+                                    family=cfg.family)
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        sys.stderr.flush()
+        os._exit(2)
+
+    worker = Worker(cfg.worker_id, grad_fn=grad,
+                    batches=fresh_batches(), transport=client,
+                    mode=cfg.mode, straggle_s=cfg.straggle_s,
+                    generation=cfg.generation)
+    # server shutdown/death closes the connection -> closed is set ->
+    # the loop exits: a dead server can never leave this process alive
+    worker.stop_event = client.closed
+    worker.run()                            # inline, not as a thread
+    client.flush(5.0)
+    client.close()
+    code = 0
+    if worker.error:
+        print(worker.error, file=sys.stderr, flush=True)
+        code = 3
+    sys.stdout.flush()
+    sys.stderr.flush()
+    # skip interpreter finalization: tearing down a JAX runtime's C++
+    # thread pools from a fast-exiting spawned child intermittently
+    # aborts (std::terminate) after all real work is already flushed
+    os._exit(code)
+
+
+class ProcTransport(SocketTransport):
+    """The multi-process transport: a Unix-domain (or TCP) socket hub
+    plus a ``multiprocessing`` *spawn* launcher — each worker is a
+    fresh OS process with its own JAX runtime that connects back to the
+    hub once compiled.  ``FaultPlan`` kills are **SIGKILL**: worker
+    death is an OS fact, and the hub's torn-frame handling plus
+    received-side accounting keep the conservation ledger exact through
+    it.  Spawn (not fork) because forking a process with a live JAX
+    runtime is undefined behaviour."""
+
+    def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
+                 host: str = "127.0.0.1"):
+        super().__init__(grad_capacity, family=family, host=host)
+        import multiprocessing
+        self._ctx = multiprocessing.get_context("spawn")
+        self._procs: Dict[int, Any] = {}            # live, by worker id
+        self._all_procs: List[Tuple[int, int, Any]] = []
+        self._killed: Set[int] = set()              # pids we SIGKILLed
+
+    # -------------------------------------------------------- processes
+    def spawn_worker(self, cfg: ProcWorkerConfig):
+        cfg = dataclasses.replace(cfg, address=self.address,
+                                  family=self.family)
+        p = self._ctx.Process(
+            target=_proc_worker_main, args=(cfg,),
+            name=f"worker-{cfg.worker_id}.{cfg.generation}", daemon=True)
+        p.start()
+        self._procs[cfg.worker_id] = p
+        self._all_procs.append((cfg.worker_id, cfg.generation, p))
+        return p
+
+    def kill_worker(self, worker_id: int) -> bool:
+        """SIGKILL the worker's current process (no cooperation, no
+        cleanup — the fault the paper's cluster baseline worries
+        about).  Returns True if a live process was signalled."""
+        p = self._procs.get(worker_id)
+        if p is None or not p.is_alive():
+            return False
+        self._killed.add(p.pid)
+        p.kill()
+        return True
+
+    def procs_alive(self) -> bool:
+        """Any spawned worker process still running?"""
+        return any(p.is_alive() for _, _, p in self._all_procs)
+
+    def kill_unconnected(self) -> None:
+        """SIGKILL worker processes that never finished connecting —
+        e.g. a respawned worker still importing JAX / compiling when
+        the run ends.  They have sent nothing, so there is nothing to
+        flush or account; the EOF-based shutdown can't reach them (no
+        connection), and waiting out their startup would stall
+        teardown.  Planned kills, not errors."""
+        with self._conns_cond:
+            connected = {(c.worker_id, c.generation)
+                         for c in self._conns
+                         if c.worker_id is not None}
+        for wid, gen, p in self._all_procs:
+            if p.is_alive() and (wid, gen) not in connected:
+                self._killed.add(p.pid)
+                p.kill()
+
+    def dead_workers(self) -> List[str]:
+        """Processes that already exited abnormally (no planned SIGKILL)
+        — lets the fleet-ready barrier fail fast instead of waiting out
+        its timeout on a child that crashed during startup."""
+        out = []
+        for wid, gen, p in self._all_procs:
+            code = p.exitcode
+            if code is None or code == 0:
+                continue
+            if code < 0 and p.pid in self._killed:
+                continue
+            out.append(f"worker process {wid}.{gen} exited with code "
+                       f"{code} (see its stderr above)")
+        return out
+
+    def join_workers(self, timeout: float = 10.0) -> List[str]:
+        """Join every spawned process, escalating to SIGKILL past the
+        deadline.  Returns human-readable errors for processes that
+        failed (crashed with a traceback) rather than exited cleanly or
+        by a planned SIGKILL."""
+        errors: List[str] = []
+        deadline = time.monotonic() + timeout
+        for wid, gen, p in self._all_procs:
+            p.join(timeout=max(0.0, deadline - time.monotonic()))
+            if p.is_alive():
+                self._killed.add(p.pid)
+                p.kill()
+                p.join(timeout=2.0)
+                errors.append(f"worker process {wid}.{gen} did not stop "
+                              "within the join timeout (SIGKILLed)")
+                continue
+            code = p.exitcode
+            planned_kill = (code is not None and code < 0
+                            and p.pid in self._killed)
+            if code not in (0, None) and not planned_kill:
+                errors.append(f"worker process {wid}.{gen} exited with "
+                              f"code {code} (see its stderr above)")
+        return errors
+
+    def close(self) -> None:
+        for _, _, p in self._all_procs:
+            if p.is_alive():
+                self._killed.add(p.pid)
+                p.kill()
+        for _, _, p in self._all_procs:
+            if p.is_alive():
+                p.join(timeout=2.0)
+        super().close()

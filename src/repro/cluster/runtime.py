@@ -1,10 +1,24 @@
 """The wall-clock cluster runtime: server + workers + faults + metrics.
 
 :class:`ClusterRuntime` wires one :class:`~repro.cluster.server.
-ParameterServer`, a pool of :class:`~repro.cluster.worker.Worker`
-threads, a :class:`~repro.cluster.transport.InProcTransport`, and the
+ParameterServer`, a worker fleet, a transport, and the
 :class:`~repro.cluster.faults.FaultPlan` injector, then runs until a
 wall-clock budget elapses or an applied-gradient budget is hit.
+
+Three transports (``transport_kind``, = ``ExperimentSpec.transport``):
+
+  * ``inproc`` — worker *threads* + an in-process queue (default; the
+    parity baseline).  Gradient compute shares one GIL/JAX runtime;
+  * ``socket`` — worker threads, but every message crosses a real TCP
+    socket as a length-prefixed slab frame (the wire format is
+    physical; the address space is still shared);
+  * ``proc``   — one OS *process* per worker over Unix-domain sockets
+    (:mod:`repro.cluster.mptransport`): each worker has its own JAX
+    runtime, FaultPlan kills are SIGKILL, and the fleet-ready barrier
+    starts the clock only after every child has compiled and connected
+    (so the budget measures contention, not XLA).  Requires
+    ``spec_dict`` — worker processes rebuild the workload from the
+    experiment spec via the ``SIM_WORKLOADS`` registry.
 
 Pieces that run concurrently with training:
 
@@ -40,8 +54,10 @@ import numpy as np
 from repro.checkpoint import (latest_step, restore_checkpoint,
                               save_checkpoint)
 from repro.cluster.faults import FaultPlan
+from repro.cluster.mptransport import (ProcTransport, ProcWorkerConfig,
+                                       SocketTransport)
 from repro.cluster.server import ParameterServer
-from repro.cluster.transport import InProcTransport, Transport
+from repro.cluster.transport import TRANSPORTS, InProcTransport, Transport
 from repro.cluster.worker import Worker
 from repro.core.schedule import ThresholdSchedule, constant_schedule
 from repro.core.slab import slab_codec
@@ -79,10 +95,23 @@ class ClusterRuntime:
                  faults: FaultPlan = FaultPlan(),
                  accuracy_fn: Optional[Callable] = None,
                  transport: Optional[Transport] = None,
+                 transport_kind: str = "inproc",
+                 spec_dict: Optional[Dict[str, Any]] = None,
+                 proc_ready_timeout_s: float = 180.0,
+                 verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
-                 resume_from: Optional[str] = None,
-                 verbose: bool = False):
+                 resume_from: Optional[str] = None):
         assert mode in ("sync", "async", "hybrid")
+        if transport_kind not in TRANSPORTS:
+            raise ValueError(f"transport_kind must be one of {TRANSPORTS},"
+                             f" got {transport_kind!r}")
+        if transport_kind == "proc" and spec_dict is None:
+            raise ValueError(
+                'transport_kind="proc" needs spec_dict (an ExperimentSpec'
+                " dict): worker processes rebuild the workload from it "
+                "via the SIM_WORKLOADS registry — run through "
+                'ClusterTrainer / repro.api.run(spec) with '
+                'spec.transport="proc"')
         if mode == "async":
             schedule = constant_schedule(num_workers, 1)
         if mode == "hybrid":
@@ -126,10 +155,9 @@ class ClusterRuntime:
         self.max_gradients = max_gradients
         self.seed = seed
         self.faults = faults
-        # bounded queue = backpressure: a worker whose gradient the
-        # server can't take yet blocks, as on a real wire
-        self.transport = transport or InProcTransport(
-            grad_capacity=max(4, 2 * num_workers))
+        self.transport_kind = transport_kind
+        self.spec_dict = spec_dict
+        self.proc_ready_timeout_s = proc_ready_timeout_s
         self.ckpt_dir = ckpt_dir
         self.resume_from = resume_from
         self.verbose = verbose
@@ -148,6 +176,23 @@ class ClusterRuntime:
         self._grad = jax.jit(_grad_slab)
         self._loss = jax.jit(loss_fn)
         self._acc = accuracy_fn
+
+        # bounded gradient channel = backpressure: a worker whose
+        # gradient the server can't take yet blocks — on a queue for
+        # thread workers, on real socket flow control otherwise.
+        # Constructed LAST: everything above can raise (e.g. the codec
+        # rejecting a leaf dtype), and a socket transport created
+        # before a failed validation would leak its listener/threads
+        cap = max(4, 2 * num_workers)
+        self._own_transport = transport is None
+        if transport is not None:
+            self.transport = transport
+        elif transport_kind == "socket":
+            self.transport = SocketTransport(cap, family="tcp")
+        elif transport_kind == "proc":
+            self.transport = ProcTransport(cap, family="unix")
+        else:
+            self.transport = InProcTransport(grad_capacity=cap)
 
         self._stop = threading.Event()
         self._workers: Dict[int, Worker] = {}
@@ -184,18 +229,66 @@ class ClusterRuntime:
     def _spawn(self, wid: int) -> None:
         gen = self._generation.get(wid, -1) + 1
         self._generation[wid] = gen
+        if self.transport_kind == "proc":
+            # membership is driven by the connection, not the spawn:
+            # the hub's on_worker_ready hook registers this worker when
+            # its HELLO arrives (after its JAX runtime is warm).  A
+            # sync barrier must not wait ~seconds of child startup for
+            # a worker that cannot yet contribute — an inproc respawn
+            # is instant, and a real cluster's barrier also only counts
+            # nodes that have joined
+            self.transport.spawn_worker(ProcWorkerConfig(
+                spec=self.spec_dict, worker_id=wid, generation=gen,
+                num_workers=self.num_workers, mode=self.mode,
+                straggle_s=self.faults.straggle_s(wid), seed=self.seed,
+                batch=self.batch,
+                # two processes can't share one accelerator: children
+                # fall back to CPU unless the parent is CPU already
+                platform=None if jax.default_backend() == "cpu"
+                else "cpu"))
+            return
         batches = shard_iterator(self.x_tr, self.y_tr, wid,
                                  self.num_workers, self.batch,
                                  seed=self.seed, generation=gen)
+        wtrans: Any = self.transport
+        if self.transport_kind == "socket":
+            wtrans = self.transport.connect(wid, gen)
         w = Worker(wid, grad_fn=self._grad, batches=batches,
-                   transport=self.transport, mode=self.mode,
+                   transport=wtrans, mode=self.mode,
                    straggle_s=self.faults.straggle_s(wid), generation=gen)
+        if wtrans is not self.transport:
+            w.endpoint = wtrans     # flushed + closed at shutdown
+            # a dead connection must stop the worker (not leave it
+            # spinning on instant-False sends); conversely kill/
+            # shutdown setting the stop event wakes the endpoint waits
+            w.stop_event = wtrans.closed
         self._workers[wid] = w
         self._all_workers.append(w)
         self.server.register(wid)
         w.start()
 
+    def _on_proc_ready(self, wid: int, gen: int) -> None:
+        # hub reader thread: a worker process finished connecting.
+        # Guard on generation so an orphan HELLO from a superseded
+        # process cannot re-register a worker the injector killed
+        if self._generation.get(wid) == gen:
+            self.server.register(wid)
+
+    def _on_proc_gone(self, wid: int, gen: int) -> None:
+        # hub reader thread: a worker's connection died (kill, crash,
+        # shutdown).  Deregistering here (idempotent) closes the race
+        # where a HELLO lands between the injector's kill and the
+        # process actually dying — a registered-but-dead worker would
+        # stall every later sync round
+        if self._generation.get(wid) == gen:
+            self.server.deregister(wid)
+
     def _kill(self, wid: int) -> None:
+        if self.transport_kind == "proc":
+            sigkilled = self.transport.kill_worker(wid)   # SIGKILL
+            self.server.deregister(wid)
+            self._log_event("kill", worker=wid, sigkill=sigkilled)
+            return
         w = self._workers.get(wid)
         if w is not None:
             w.stop_event.set()
@@ -260,22 +353,94 @@ class ClusterRuntime:
             snaps.append((target, version, slab))
             i += 1
 
+    def _wind_down(self) -> "tuple[int, List[str]]":
+        """Fleet teardown with the gradient channel kept flowing.
+
+        Joins workers, flushes socket endpoints, joins worker
+        processes, and quiesces the transport — all while continuously
+        draining the gradient channel into the ``in_flight`` counter: a
+        backpressured sender can only finish its final frame if the
+        server side keeps making room (stalling here is what used to
+        tear the last frames of a clean shutdown).  After this returns,
+        every complete frame has been received and counted, so
+        ``pending_gradients()`` is exact (0) and the conservation
+        ledger can be asserted to the gradient.  Returns
+        ``(in_flight, proc_errors)``."""
+        in_flight = 0
+        deadline = time.monotonic() + 15.0
+
+        def drain() -> None:
+            nonlocal in_flight
+            while self.transport.recv_gradient(timeout=0) is not None:
+                in_flight += 1
+
+        for w in self._all_workers:     # prompt: all waits see stop
+            w.join(timeout=10.0)
+        if self.transport_kind == "proc":
+            while self.transport.procs_alive():
+                drain()
+                # a child still starting up (e.g. a respawn racing the
+                # end of the budget) has no connection to receive the
+                # shutdown EOF on — SIGKILL it; it has sent nothing
+                self.transport.kill_unconnected()
+                if time.monotonic() > deadline:
+                    break
+                time.sleep(0.02)
+        proc_errors: List[str] = []
+        if self.transport_kind == "proc":
+            proc_errors = self.transport.join_workers(timeout=5.0)
+        # socket endpoints: push out accepted-but-unshipped gradients
+        # (they are already counted as computed), then hang up so the
+        # hub reader sees EOF and can quiesce
+        endpoints = [ep for ep in (getattr(w, "endpoint", None)
+                                   for w in self._all_workers)
+                     if ep is not None]
+        unflushed = list(endpoints)
+        while unflushed and time.monotonic() < deadline:
+            drain()
+            # an endpoint whose sender thread died (connection error)
+            # can never flush its remainder — waiting out the deadline
+            # on it would stall every such teardown by ~15s
+            unflushed = [ep for ep in unflushed
+                         if not ep.flush(0.05) and ep.can_flush()]
+        for ep in endpoints:
+            ep.close()
+        while True:
+            drain()
+            if self.transport.quiesce(timeout=0.1):
+                break
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    "transport failed to quiesce within 15s — the "
+                    "conservation ledger would be approximate")
+        drain()
+        return in_flight, proc_errors
+
     # -------------------------------------------------------------- run
     def run(self) -> ClusterResult:
+        try:
+            return self._run()
+        finally:
+            if self._own_transport:
+                self.transport.close()
+
+    def _run(self) -> ClusterResult:
         start_version = 0
         start_params = self.init_params
         if self.resume_from:
             start_params, start_version = restore_checkpoint(
                 self.resume_from, like=self.init_params)
 
-        # compile the worker gradient before the clock starts, so the
-        # budget measures contention, not XLA (the metric fns are only
-        # evaluated after the run, so they need no warm-up)
-        wx, wy = next(shard_iterator(self.x_tr, self.y_tr, 0,
-                                     self.num_workers, self.batch,
-                                     seed=self.seed))
-        jax.block_until_ready(
-            self._grad(self.codec.encode(start_params), wx, wy))
+        if self.transport_kind != "proc":
+            # compile the worker gradient before the clock starts, so
+            # the budget measures contention, not XLA (process workers
+            # compile in their own runtime and connect once warm; the
+            # metric fns are only evaluated after the run)
+            wx, wy = next(shard_iterator(self.x_tr, self.y_tr, 0,
+                                         self.num_workers, self.batch,
+                                         seed=self.seed))
+            jax.block_until_ready(
+                self._grad(self.codec.encode(start_params), wx, wy))
 
         self.server = ParameterServer(
             start_params, lr=self.lr, mode=self.mode,
@@ -284,45 +449,90 @@ class ClusterRuntime:
             staleness_decay=self.staleness_decay,
             max_gradients=self.max_gradients, start_version=start_version)
 
-        self._t0 = time.monotonic()
-        if start_version:
-            self._log_event("resume", step=start_version,
-                            path=self.resume_from)
         snaps: List = []
-        threads = [self._guarded(lambda: self._sampler(snaps), "sampler")]
-        if self.faults.kill:
-            threads.append(self._guarded(self._injector, "injector"))
-        if self.ckpt_dir and self.faults.checkpoint_every_s > 0:
-            threads.append(self._guarded(self._checkpointer, "ckpt"))
-        if self.ckpt_dir and self.faults.restore_at_s > 0:
-            threads.append(self._guarded(self._restorer, "restore"))
-        for t in threads:
-            t.start()
-        for wid in range(self.num_workers):
-            self._spawn(wid)
+        threads: List[threading.Thread] = []
+        try:
+            if self.transport_kind == "proc":
+                # spawn the fleet, then hold the clock until every
+                # child has compiled and connected (HELLO == ready);
+                # fail fast on a child that crashed during startup.
+                # The params broadcast is withheld until the barrier
+                # passes, so early children idle in fetch_params
+                # instead of banking gradients before the clock starts
+                # (which would flatter the multi-process benchmark)
+                self.transport.on_worker_ready = self._on_proc_ready
+                self.transport.on_worker_gone = self._on_proc_gone
+                self.transport.hold_params()
+                for wid in range(self.num_workers):
+                    self._spawn(wid)
+                ready_deadline = (time.monotonic()
+                                  + self.proc_ready_timeout_s)
+                while not self.transport.wait_for_workers(
+                        self.num_workers, timeout=1.0):
+                    dead = self.transport.dead_workers()
+                    if dead:
+                        raise RuntimeError(
+                            "worker process(es) died before the fleet "
+                            "was ready:\n" + "\n".join(dead))
+                    if time.monotonic() > ready_deadline:
+                        raise RuntimeError(
+                            f"only "
+                            f"{sorted(self.transport.live_workers())} "
+                            f"of {self.num_workers} worker processes "
+                            "connected within "
+                            f"{self.proc_ready_timeout_s}s")
 
-        deadline = self._t0 + self.wall_budget_s
-        while time.monotonic() < deadline and not self.server.done.is_set():
-            msg = self.transport.recv_gradient(
-                timeout=min(0.02, max(1e-3, deadline - time.monotonic())))
-            if msg is not None:
-                self.server.ingest(msg)
-        wall_s = self._elapsed()
+            self._t0 = time.monotonic()
+            if self.transport_kind == "proc":
+                self.transport.release_params()     # the starting gun
+            if start_version:
+                self._log_event("resume", step=start_version,
+                                path=self.resume_from)
+            threads.append(self._guarded(lambda: self._sampler(snaps),
+                                         "sampler"))
+            if self.faults.kill:
+                threads.append(self._guarded(self._injector, "injector"))
+            if self.ckpt_dir and self.faults.checkpoint_every_s > 0:
+                threads.append(self._guarded(self._checkpointer, "ckpt"))
+            if self.ckpt_dir and self.faults.restore_at_s > 0:
+                threads.append(self._guarded(self._restorer, "restore"))
+            for t in threads:
+                t.start()
+            if self.transport_kind != "proc":
+                for wid in range(self.num_workers):
+                    self._spawn(wid)
 
-        # ------------------------------------------------------ shutdown
-        # control threads first: the injector must be fully stopped
-        # before worker stop events are set, or a respawn racing the
-        # shutdown would start a worker nobody stops (all its waits
-        # watch self._stop, so these joins return promptly)
-        self._stop.set()
-        for t in threads:
-            t.join(timeout=10.0)
-        for w in self._all_workers:
-            w.stop_event.set()
-        for w in self._all_workers:
-            w.join(timeout=10.0)
+            deadline = self._t0 + self.wall_budget_s
+            while time.monotonic() < deadline \
+                    and not self.server.done.is_set():
+                msg = self.transport.recv_gradient(timeout=min(
+                    0.02, max(1e-3, deadline - time.monotonic())))
+                if msg is not None:
+                    self.server.ingest(msg)
+            wall_s = self._elapsed()
+        finally:
+            # ---------------------------------------------- shutdown
+            # ALWAYS propagate shutdown to the workers — including when
+            # the server loop above died mid-run: a worker blocked on a
+            # bounded send retries until its stop event is set, so a
+            # crashed server must not strand a live worker (regression-
+            # tested).  Control threads stop first: the injector must
+            # not respawn a worker nobody stops (all its waits watch
+            # self._stop, so these joins return promptly).
+            self._stop.set()
+            for t in threads:
+                t.join(timeout=10.0)
+            if self.transport_kind == "proc":
+                # EOF on the params direction tells each child to stop;
+                # its in-flight gradient frames are still drained
+                self.transport.half_close_workers()
+            for w in self._all_workers:
+                w.stop_event.set()
+
+        in_flight, proc_errors = self._wind_down()
         errors = [f"worker {w.worker_id}.{w.generation}:\n{w.error}"
                   for w in self._all_workers if w.error]
+        errors += proc_errors
         errors += self._control_errors
         # a thread that outlived its join would keep mutating transport/
         # server state under the accounting we are about to report
@@ -330,20 +540,38 @@ class ClusterRuntime:
                    for t in (*self._all_workers, *threads)
                    if t.is_alive()]
         if errors:
-            raise RuntimeError("cluster thread(s) crashed or hung:\n"
-                               + "\n".join(errors))
+            raise RuntimeError("cluster thread(s)/process(es) crashed "
+                               "or hung:\n" + "\n".join(errors))
 
-        in_flight = 0
-        while self.transport.recv_gradient(timeout=0) is not None:
-            in_flight += 1
+        leftover = self.transport.pending_gradients()
+        if leftover:
+            raise RuntimeError(
+                f"{leftover} gradients appeared after the post-quiesce "
+                "drain — a producer outlived shutdown")
+
         accounting = self.server.accounting()
         accounting["in_flight"] = in_flight
-        accounting["computed"] = sum(w.sent for w in self._all_workers)
-        per_worker: Dict[str, int] = {}
-        for w in self._all_workers:     # all generations of each id
-            key = str(w.worker_id)
-            per_worker[key] = per_worker.get(key, 0) + w.sent
-        accounting["computed_per_worker"] = per_worker
+        if self.transport_kind in ("proc", "socket"):
+            # "computed" on the socket transports = complete frames
+            # that physically reached the hub (exact under every
+            # failure mode: whatever a killed worker or dying
+            # connection had not finished sending died with it, like a
+            # thread worker killed before send; the conformance suite
+            # separately asserts nothing is lost on a healthy wire)
+            received = self.transport.received_counts()
+            accounting["computed"] = sum(received.values())
+            accounting["computed_per_worker"] = {
+                str(wid): received.get(wid, 0)
+                for wid in range(self.num_workers)}
+            accounting["torn_frames"] = self.transport.torn_frames
+        else:
+            accounting["computed"] = sum(w.sent
+                                         for w in self._all_workers)
+            per_worker: Dict[str, int] = {}
+            for w in self._all_workers:     # all generations of each id
+                key = str(w.worker_id)
+                per_worker[key] = per_worker.get(key, 0) + w.sent
+            accounting["computed_per_worker"] = per_worker
 
         # ---------------------------------- evaluate the metric snapshots
         times, tr, te, acc = [], [], [], []

@@ -95,6 +95,10 @@ class ParameterServer:
         self.dropped = 0                    # stale / discarded gradients
         self.updates_applied = 0            # _apply calls (never rolled
         #                                     back, unlike version)
+        self.restore_epoch = 0              # bumped per restore(); rides
+        #                                     on ParamsMsg so workers can
+        #                                     tell a restore from a slow
+        #                                     round (see ParamsMsg.epoch)
         # membership starts empty: workers register as they spawn
         # (num_workers is the fleet size = the staging buffer's K_max)
         self.live: Set[int] = set()
@@ -171,7 +175,8 @@ class ParameterServer:
         self.version += 1
         self.updates_applied += 1
         self.applied += len(weights)
-        self.transport.publish_params(ParamsMsg(self.version, pub))
+        self.transport.publish_params(
+            ParamsMsg(self.version, pub, epoch=self.restore_epoch))
         if self.max_gradients and self.applied >= self.max_gradients:
             self.done.set()
 
@@ -211,8 +216,13 @@ class ParameterServer:
             self._round = {}
             self.agg.reset_params(params)
             self.version = int(step)
+            # the epoch bump is what tells a sync worker "this is a
+            # restore, recontribute" — the version alone can look like
+            # an ordinary not-yet-finished round
+            self.restore_epoch += 1
             self.transport.publish_params(
-                ParamsMsg(self.version, self.agg.params_slab))
+                ParamsMsg(self.version, self.agg.params_slab,
+                          epoch=self.restore_epoch))
 
     def accounting(self) -> Dict[str, int]:
         with self.lock:

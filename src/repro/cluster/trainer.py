@@ -5,6 +5,10 @@ simulator workloads (``mlp``, ``cnn-mnist``, ``cnn-cifar``, anything
 added via ``register_sim_workload``) — the point of the third backend is
 that one spec re-targets simulator → SPMD → real concurrent cluster.
 
+``spec.transport`` selects the wire (``inproc`` threads+queue,
+``socket`` threads over TCP slab frames, ``proc`` one OS process per
+worker over Unix-domain sockets — see :mod:`repro.cluster.mptransport`).
+
 The reported ``num_gradients`` is the server's applied-gradient counter,
 exactly; ``extra["accounting"]`` carries the full conservation ledger
 (computed == applied + dropped + buffered + pending + in-flight) and
@@ -76,6 +80,11 @@ class ClusterTrainer:
             staleness_decay=spec.staleness_decay,
             max_gradients=spec.max_gradients, seed=spec.seed,
             faults=spec.faults, accuracy_fn=accuracy_fn,
+            transport_kind=spec.transport,
+            # worker processes rebuild the workload from the spec (the
+            # registry is the contract; code never crosses the boundary)
+            spec_dict=spec.to_dict() if spec.transport == "proc"
+            else None,
             ckpt_dir=ckpt_dir, resume_from=self.resume_from,
             verbose=self.verbose)
         if ckpt_dir is not None and self.ckpt_dir is None:

@@ -20,9 +20,17 @@ Policy differences live entirely in *when* a worker blocks:
 
 Fault hooks: ``straggle_s`` adds a sleep per gradient (a slow node /
 link); ``stop_event`` is the cooperative kill switch the fault injector
-and the runtime's shutdown both use.  A killed worker's in-flight
-gradient is lost *before* send, so the accounting invariant
+and the runtime's shutdown both use — the runtime *always* sets it on
+the way out (even when the server died mid-run), and a worker process
+wires it to its socket client's ``closed`` event, so neither a crashed
+server nor a closed connection can leave a worker spinning in the
+bounded-send retry loop.  A killed worker's in-flight gradient is lost
+*before* send, so the accounting invariant
 (sent == applied + dropped + buffered + pending + in-flight) holds.
+
+Every transport wait here is a short *positive* timeout (never ``None``
+= block forever, never ``<= 0`` = spin): each iteration re-checks
+``stop_event``, which is what keeps the loop killable from outside.
 """
 from __future__ import annotations
 
@@ -61,6 +69,7 @@ class Worker(threading.Thread):
 
     def _loop(self) -> None:
         next_version = 0        # sync: the round we haven't contributed to
+        epoch = 0               # restore epoch of the params last used
         while not self.stop_event.is_set():
             min_v = next_version if self.mode == "sync" else 0
             msg = self.transport.fetch_params(min_version=min_v,
@@ -68,13 +77,21 @@ class Worker(threading.Thread):
             if msg is None:
                 if self.mode == "sync" and min_v > 0:
                     # a checkpoint restore moves the server's version
-                    # *backwards*; waiting for the old round would stall
-                    # the barrier until the budget expires — resync
+                    # *backwards* (and wipes the in-progress round);
+                    # waiting for the old round would stall the barrier
+                    # until the budget expires — resync.  The restore
+                    # EPOCH is the signal: a merely-lower version is
+                    # indistinguishable from "my round has not finished
+                    # yet" on a slow fleet, and re-contributing on that
+                    # false positive would double-draw from the batch
+                    # stream and break sync determinism
                     cur = self.transport.fetch_params(timeout=0)
-                    if cur is not None and cur.version < min_v:
+                    if cur is not None \
+                            and getattr(cur, "epoch", 0) != epoch:
                         msg = cur
                 if msg is None:
                     continue
+            epoch = getattr(msg, "epoch", 0)
             x, y = next(self.batches)
             grad = self.grad_fn(msg.params, x, y)
             jax.block_until_ready(grad)

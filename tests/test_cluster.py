@@ -11,6 +11,8 @@ import json
 import os
 import subprocess
 import sys
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -32,8 +34,11 @@ def _cluster_spec(**kw):
 
 
 def _check_conservation(res):
-    """Every computed gradient is accounted for, and num_gradients is
-    the server's applied counter, exactly."""
+    """The conservation ledger holds EXACTLY — computed == applied +
+    dropped + buffered + pending_round + in_flight, to the gradient —
+    and num_gradients is the server's applied counter.  The runtime
+    guarantees exactness by snapshotting only after the transport has
+    quiesced (no approximate mid-run qsize() feeds the ledger)."""
     a = res.extra["accounting"]
     assert a["computed"] == (a["applied"] + a["dropped"] + a["buffered"]
                              + a["pending_round"] + a["in_flight"]), a
@@ -98,6 +103,67 @@ def test_inproc_transport_semantics():
     assert t.recv_gradient(timeout=0).worker_id == 0  # FIFO
     assert t.recv_gradient(timeout=0).worker_id == 1
     assert t.recv_gradient(timeout=0) is None
+
+
+def test_inproc_timeout_none_blocks_both_sides():
+    """The timeout contract is uniform: ``None`` means block on BOTH
+    sides (recv_gradient(None) used to mean get_nowait — the opposite
+    of the send side), ``<= 0`` polls."""
+    t = InProcTransport(grad_capacity=1)
+    # send side: None blocks until the queue has room
+    assert t.send_gradient(GradientMsg(0, "g0", 0, 1))
+    done = []
+    th = threading.Thread(
+        target=lambda: done.append(
+            t.send_gradient(GradientMsg(0, "g1", 0, 2))),  # timeout=None
+        daemon=True)
+    th.start()
+    th.join(0.2)
+    assert th.is_alive(), "send_gradient(timeout=None) must block"
+    assert t.recv_gradient(timeout=0).seq == 1     # make room
+    th.join(2.0)
+    assert not th.is_alive() and done == [True]
+    # recv side: None blocks until a gradient arrives
+    out = []
+    th = threading.Thread(target=lambda: out.append(t.recv_gradient()),
+                          daemon=True)
+    th.start()
+    th.join(0.2)
+    assert not th.is_alive() and out[0].seq == 2   # g1 was waiting
+    th = threading.Thread(target=lambda: out.append(t.recv_gradient()),
+                          daemon=True)
+    th.start()
+    th.join(0.2)
+    assert th.is_alive(), "recv_gradient(timeout=None) must block"
+    t.send_gradient(GradientMsg(0, "g2", 0, 3))
+    th.join(2.0)
+    assert not th.is_alive() and out[1].seq == 3
+    # <= 0 always polls
+    assert t.recv_gradient(timeout=0) is None
+    assert t.recv_gradient(timeout=-1) is None
+
+
+def test_server_death_never_strands_workers(monkeypatch):
+    """Regression (worker hang on server death): if the server dies
+    mid-run, the runtime must still propagate shutdown to every worker
+    stop event — a worker blocked in the bounded-send retry loop would
+    otherwise spin forever."""
+    from repro.cluster.server import ParameterServer
+
+    def boom(self, msg):
+        raise RuntimeError("server died mid-ingest")
+
+    monkeypatch.setattr(ParameterServer, "ingest", boom)
+    with pytest.raises(RuntimeError, match="server died mid-ingest"):
+        run(_cluster_spec(wall_budget_s=5.0))
+    deadline = time.time() + 5.0
+    while time.time() < deadline:
+        alive = [t.name for t in threading.enumerate()
+                 if t.name.startswith("worker-") and t.is_alive()]
+        if not alive:
+            break
+        time.sleep(0.05)
+    assert not alive, f"workers outlived the dead server: {alive}"
 
 
 # ------------------------------------------------- the three policies
