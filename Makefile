@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test quickstart smoke-sim smoke-train smoke-cluster smoke-proc \
-	examples bench-server
+	smoke-host examples bench-server
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +41,25 @@ smoke-proc:
 	    --transport proc --cluster-workers 2 --wall-budget 8 \
 	    --wall-sample-every 2 --mode hybrid --schedule step:40 \
 	    --max-gradients 400 --quiet --out /tmp/repro_proc_smoke.json
+
+# multi-host transport: a leader bound to a real TCP host:port plus two
+# separately-launched `repro join` worker process groups — the
+# two-terminal quickstart, scripted (the joins retry until the leader
+# is up).  Ends on the gradient budget; the hard timeout turns a lost
+# leader or a worker that never joined into a fast failure
+smoke-host:
+	timeout 240 sh -c ' \
+	  $(PY) -m repro serve --listen 127.0.0.1:7781 --arch mlp --smoke \
+	      --cluster-workers 2 --wall-budget 8 --wall-sample-every 2 \
+	      --mode hybrid --schedule step:40 --max-gradients 400 --quiet \
+	      --out /tmp/repro_host_smoke.json & LEADER=$$!; \
+	  $(PY) -m repro join 127.0.0.1:7781 --workers 1 --quiet \
+	      --connect-timeout 120 & J1=$$!; \
+	  $(PY) -m repro join 127.0.0.1:7781 --workers 1 --quiet \
+	      --connect-timeout 120 & J2=$$!; \
+	  wait $$LEADER; RC=$$?; \
+	  wait $$J1; R1=$$?; wait $$J2; R2=$$?; \
+	  [ $$RC -eq 0 ] && [ $$R1 -eq 0 ] && [ $$R2 -eq 0 ]'
 
 # server aggregation hot path (slab vs pre-PR pytree) plus the
 # end-to-end transport grid (in-proc threads vs multi-proc workers),

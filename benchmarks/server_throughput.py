@@ -32,20 +32,24 @@ Reported per (fleet, K) cell:
 **Transport grid** — the same server driven end-to-end through the
 cluster runtime under each transport (``--transport``): ``inproc``
 worker threads vs ``proc`` worker processes (own JAX runtimes, socket
-slab frames).  Each (fleet, K, transport) cell runs a real hybrid
-training burst with ``const:K`` and reports gradients/sec over the
-serving window (the clock starts only once the fleet is ready, so
-worker-process startup is excluded and the numbers are comparable).
-This is where "does contention actually cost us" gets a number: thread
-workers share one GIL/runtime, process workers genuinely contend on
-the server alone.
+slab frames) vs ``host`` — the multi-host path, where the leader binds
+a real TCP port and every worker is a separately-launched
+``repro join`` process group that rebuilds the workload from spec JSON
+fetched in the leader handshake.  Each (fleet, K, transport) cell runs
+a real hybrid training burst with ``const:K`` and reports
+gradients/sec over the serving window (the clock starts only once the
+fleet is ready, so worker-process startup is excluded and the numbers
+are comparable).  This is where "does contention actually cost us"
+gets a number: thread workers share one GIL/runtime, process workers
+genuinely contend on the server alone, and host workers add the full
+join/lease/TCP layer the multi-host deployment pays.
 
 Emits ``BENCH_server.json`` with a stable schema
 (``repro.bench.server/v2``) so future PRs can diff the perf trajectory:
 
   PYTHONPATH=src python -m benchmarks.server_throughput --quick
   PYTHONPATH=src python -m benchmarks.server_throughput \\
-      --transport inproc proc     # transport grid selection
+      --transport inproc proc host    # transport grid selection
   # or: make bench-server   /   python -m repro bench
 """
 from __future__ import annotations
@@ -149,7 +153,12 @@ def bench_transport_cell(fleet: int, K: int, transport: str,
     """One (fleet, K, transport) cell: a real cluster training burst
     (hybrid, ``const:K``) through the full runtime.  gradients/sec is
     applied gradients over the *serving* window — the fleet-ready
-    barrier keeps worker-process startup out of the denominator."""
+    barrier keeps worker-process startup out of the denominator.
+
+    The ``host`` cell is the full multi-host path: the leader binds a
+    real TCP port and each worker is a separately-launched
+    ``python -m repro join`` process group that rebuilds the workload
+    from spec JSON fetched in the leader handshake."""
     from repro.api import ExperimentSpec
     from repro.cluster.trainer import ClusterTrainer
 
@@ -158,8 +167,37 @@ def bench_transport_cell(fleet: int, K: int, transport: str,
         schedule=f"const:{K}", cluster_workers=fleet,
         wall_budget_s=budget_s, wall_sample_every_s=budget_s,
         batch=32, smoke=True, transport=transport,
-        max_gradients=max_gradients)
-    res = ClusterTrainer().run(spec)
+        max_gradients=max_gradients, listen="127.0.0.1:0")
+    trainer = ClusterTrainer()
+    if transport == "host":
+        from repro.cluster.hostlink import spawn_join_process
+        platform = None if jax.default_backend() == "cpu" else "cpu"
+        runtime = trainer.build_runtime(spec)
+        # the trainer's 10-minute interactive join window is wrong for
+        # a scripted bench: a join group that dies at startup should
+        # fail the cell in ~2 minutes, not stall the whole grid
+        runtime.proc_ready_timeout_s = 120.0
+        joins = [spawn_join_process(runtime.listen_address, workers=1,
+                                    platform=platform)
+                 for _ in range(fleet)]
+        try:
+            res = trainer.finish(runtime, spec)
+        finally:
+            codes = []
+            for p in joins:
+                try:
+                    codes.append(p.wait(timeout=60))
+                except Exception:
+                    p.kill()
+                    codes.append(p.wait())
+        if any(codes):
+            # a dead join group means the cell was measured with a
+            # smaller fleet than its label claims — refuse to record it
+            raise RuntimeError(
+                f"host bench cell fleet={fleet} K={K}: join process "
+                f"exit codes {codes} — the measured fleet was degraded")
+    else:
+        res = trainer.run(spec)
     a = res.extra["accounting"]
     serve_s = res.extra["serve_wall_s"]
     return {"transport": transport, "fleet": fleet, "K": K,
@@ -290,11 +328,12 @@ def main(argv=None):
                          "short-lived servers, so the count is sized "
                          "like a smoke run's update budget)")
     ap.add_argument("--transport", nargs="*", default=None,
-                    choices=["inproc", "socket", "proc", "none"],
+                    choices=["inproc", "socket", "proc", "host", "none"],
                     help="transports for the end-to-end grid (default: "
-                         "inproc proc — the in-proc vs multi-proc "
-                         "comparison; 'none' skips the section, e.g. "
-                         "for flush-path-only iteration)")
+                         "inproc proc host — in-proc vs multi-proc vs "
+                         "multi-host joined process groups; 'none' "
+                         "skips the section, e.g. for flush-path-only "
+                         "iteration)")
     ap.add_argument("--out", default="BENCH_server.json")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero when the acceptance criterion "
@@ -320,7 +359,7 @@ def main(argv=None):
     t_fleets = args.fleets if args.fleets else t_fleets
     t_ks = args.ks if args.ks else t_ks
     transports = args.transport if args.transport is not None \
-        else ["inproc", "proc"]
+        else ["inproc", "proc", "host"]
     if "none" in transports:
         transports = []
 

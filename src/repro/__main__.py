@@ -1,4 +1,10 @@
-"""``python -m repro`` — dispatching CLI (see repro.api.cli)."""
+"""``python -m repro`` — dispatching CLI (see repro.api.cli).
+
+Multi-host quickstart: ``python -m repro serve --listen HOST:PORT``
+starts a cluster leader; ``python -m repro join HOST:PORT`` joins it as
+a worker from any machine with this package installed (the experiment
+spec travels over the wire — see repro.cluster.hostlink).
+"""
 import sys
 
 if __name__ == "__main__":

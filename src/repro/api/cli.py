@@ -5,7 +5,13 @@ Subcommands:
             any backend (sim | spmd | cluster) and emit a RunResult JSON
   simulate  alias for ``run --backend sim`` (paper-faithful simulator);
             ``--smoke`` picks a seconds-scale CI configuration
-  serve     batched prefill+decode demo (repro.launch.serve)
+  serve     batched prefill+decode demo (repro.launch.serve) — unless
+            ``--listen HOST:PORT`` is given, which starts a multi-host
+            cluster *leader* (= ``run --backend cluster --transport
+            host``) that remote workers ``join``
+  join      join a cluster leader as one or more workers: the spec
+            arrives over the wire, the workload is rebuilt locally
+            (repro.cluster.hostlink)
   dryrun    multi-pod lower/compile analysis (repro.launch.dryrun, with
             the 512 forced host devices set up before jax imports)
   bench     paper tables + kernel microbenches (benchmarks.run)
@@ -19,6 +25,10 @@ Examples:
       --wall-budget 10 --straggler 0:0.1 --kill 1:4 --respawn-after 1
   python -m repro run --backend cluster --arch mlp --transport proc \
       --cluster-workers 2 --wall-budget 8 --max-gradients 100
+  # terminal 1 (leader), terminal 2+ (workers, possibly other machines):
+  python -m repro serve --listen 0.0.0.0:5555 --arch mlp \
+      --cluster-workers 2 --wall-budget 30
+  python -m repro join LEADER_HOST:5555 --workers 2
   python -m repro run --spec experiment.json
 """
 from __future__ import annotations
@@ -59,7 +69,12 @@ _SPEC_FLAGS = [
     ("--transport", "transport", str,
      "cluster: worker wire — inproc (threads+queue, default), socket "
      "(threads over TCP slab frames), proc (one OS process per worker "
-     "over Unix-domain sockets)"),
+     "over Unix-domain sockets), host (bind --listen and wait for "
+     "`repro join` workers, possibly from other machines)"),
+    ("--listen", "listen", str,
+     "cluster host transport: leader bind address HOST:PORT (port 0 = "
+     "pick one; the resolved address is printed and recorded in the "
+     "run's events)"),
     ("--wall-budget", "wall_budget_s", float,
      "cluster: wall-clock training budget (real seconds)"),
     ("--wall-sample-every", "wall_sample_every_s", float,
@@ -205,8 +220,73 @@ def _forward(module_main, argv: List[str]) -> int:
     return int(rc) if rc else 0
 
 
+def _cmd_join(rest: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro join",
+        description="join a repro cluster leader as one or more workers"
+                    " — the experiment spec arrives over the wire in "
+                    "the leader handshake, so this host only needs the "
+                    "repro package (repro.cluster.hostlink)")
+    ap.add_argument("address", metavar="HOST:PORT",
+                    help="the leader's listen address "
+                         "(repro serve --listen HOST:PORT)")
+    ap.add_argument("--worker-id", type=int, default=None,
+                    help="request a specific worker id / data shard "
+                         "(default: the leader leases the lowest free "
+                         "one)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="join this many workers, one OS process each "
+                         "(default 1)")
+    ap.add_argument("--connect-timeout", type=float, default=60.0,
+                    help="keep retrying the leader for this many "
+                         "seconds (the leader may not be up yet)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress join progress logs")
+    args = ap.parse_args(rest)
+    from repro.cluster.hostlink import join_main
+    code = join_main(args.address, worker_id=args.worker_id,
+                     workers=args.workers,
+                     connect_timeout=args.connect_timeout,
+                     verbose=not args.quiet)
+    sys.stdout.flush()
+    sys.stderr.flush()
+    # skip interpreter finalization: this process ran a JAX runtime and
+    # fast exits intermittently abort in C++ teardown (see
+    # repro.cluster.mptransport._proc_worker_main)
+    os._exit(code)
+
+
+def _cmd_serve_leader(rest: List[str]) -> int:
+    """``repro serve --listen HOST:PORT`` — the multi-host leader: sugar
+    for ``run --backend cluster --transport host --listen ...``."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro serve --listen HOST:PORT",
+        description="multi-host cluster leader: bind HOST:PORT, wait "
+                    "for `repro join` workers, train, report")
+    _add_spec_flags(ap, backend_flag=False)
+    args = ap.parse_args(rest)
+    if args.transport not in (None, "host"):
+        # --listen only means something on the host transport; silently
+        # training locally while remote joins dial a port nobody bound
+        # would be the worst possible failure mode
+        print(f"error: --listen is the host transport's bind address "
+              f"and cannot be combined with --transport "
+              f"{args.transport} (drop --transport, or use "
+              f"`repro run --backend cluster`)", file=sys.stderr)
+        return 2
+    args.transport = "host"
+    try:
+        return _cmd_run(args, forced_backend="cluster")
+    except (ValueError, FileNotFoundError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
 def _cmd_passthrough(name: str, rest: List[str]) -> int:
     if name == "serve":
+        if any(a == "--listen" or a.startswith("--listen=")
+               for a in rest):
+            return _cmd_serve_leader(rest)
         from repro.launch.serve import main as serve_main
         return _forward(serve_main, rest)
     if name == "dryrun":
@@ -243,7 +323,8 @@ def _cmd_passthrough(name: str, rest: List[str]) -> int:
 # (dispatched before the main parse: argparse.REMAINDER cannot capture
 # leading options)
 _PASSTHROUGH = {
-    "serve": "serving demo (repro.launch.serve args)",
+    "serve": "serving demo (repro.launch.serve args), or the multi-host "
+             "cluster leader with --listen HOST:PORT",
     "dryrun": "compile-only analysis (repro.launch.dryrun args)",
     "bench": "benchmark suite (benchmarks.run args)",
 }
@@ -251,6 +332,9 @@ _PASSTHROUGH = {
 
 def main(argv: Optional[List[str]] = None) -> int:
     argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "join":
+        # dispatched before the main parse (positional HOST:PORT)
+        return _cmd_join(argv[1:])
     if argv and argv[0] in _PASSTHROUGH:
         return _cmd_passthrough(argv[0], argv[1:])
 
@@ -266,6 +350,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_spec_flags(p_sim, backend_flag=False)
     for name, hlp in _PASSTHROUGH.items():
         sub.add_parser(name, help=hlp, add_help=False)
+    sub.add_parser("join", help="join a cluster leader as one or more "
+                                "workers (join HOST:PORT --workers N)",
+                   add_help=False)
     sub.add_parser("schedules", help="list threshold-schedule families")
 
     args = ap.parse_args(argv)

@@ -69,7 +69,11 @@ class ExperimentSpec:
     wall_sample_every_s: float = 0.25   # metric-grid spacing (real s)
     max_gradients: Optional[int] = None  # stop after N applied gradients
     faults: FaultPlan = FaultPlan()      # stragglers / kills / checkpoints
-    transport: str = "inproc"      # worker wire: inproc | socket | proc
+    transport: str = "inproc"  # worker wire: inproc | socket | proc | host
+    listen: str = "127.0.0.1:0"    # host transport: leader bind address
+    #                                HOST:PORT (port 0 = pick; the
+    #                                resolved address is printed and
+    #                                recorded in the run's events)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -84,6 +88,10 @@ class ExperimentSpec:
         if self.transport not in TRANSPORTS:
             raise ValueError(f"transport must be one of {TRANSPORTS}, "
                              f"got {self.transport!r}")
+        if self.transport == "host":
+            # fail at spec construction, not as a hub that can't bind
+            from repro.cluster.hostlink import parse_hostport
+            parse_hostport(self.listen)
         if isinstance(self.pool, dict):   # from_json convenience
             object.__setattr__(self, "pool", WorkerPool(**self.pool))
         if isinstance(self.faults, dict):  # from_json convenience

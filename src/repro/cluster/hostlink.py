@@ -1,0 +1,511 @@
+"""Multi-host slab transport: host:port addressing + leader discovery.
+
+:class:`HostTransport` is the multi-host mode of the slab hub
+(:class:`~repro.cluster.mptransport.SocketTransport`): the server binds
+a user-chosen ``HOST:PORT`` (``--listen``), and remote workers
+*self-launch* — ``python -m repro join HOST:PORT`` from any machine
+that has the ``repro`` package — instead of being spawned by the
+leader.  Code never crosses the machine boundary: the experiment spec
+travels over the wire in the leader handshake, and the join side
+rebuilds the workload from that JSON via the ``SIM_WORKLOADS``
+registry, exactly like a ``proc`` worker process does.
+
+**Leader handshake** (one extra round-trip before the normal
+HELLO/GRAD/PARAMS protocol; frames defined in :mod:`repro.cluster.
+mptransport`)::
+
+    joiner                          leader (hub)
+      | -- JOIN(magic, v, want_id) -->|   lease a worker id
+      | <-- WELCOME{spec, worker_id,  |   (or REJECT + readable reason)
+      |      generation, num_workers}-|
+      |   ... rebuild workload, compile the slab gradient ...
+      | -- HELLO(magic, v, id, gen) ->|   ready: joins the fleet barrier
+      | <==== PARAMS / GRAD ... =====>|   normal training protocol
+
+**Worker-id leases with generation fencing** — the worker id IS the
+deterministic data-shard assignment (``shard_iterator`` is keyed on
+it), so the leader negotiates ids centrally: ``JOIN(-1)`` leases the
+lowest free id, ``JOIN(w)`` requests a specific one, and a *rejoining*
+host is re-leased its old id with the generation bumped — it resumes
+its shard with a fresh batch stream (like a ``proc`` respawn), never a
+duplicate.  Every lease grant monotonically advances the id's
+generation, and a HELLO carrying a generation older than the current
+lease is fenced out: a superseded worker that limps back cannot
+double-feed a shard the fleet already re-assigned.
+
+The leader cannot respawn a remote worker (it does not own the remote
+machine) — a kill fault on this transport cuts the worker's connection
+(a network fault; the remote process exits cleanly on EOF), and
+replacement capacity rejoins from its own host.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+from repro.cluster.mptransport import (_CTRL, _F_PARAMS, _F_REJECT,
+                                       _F_WELCOME, _HDR, _MAX_FRAME,
+                                       _join_frame, _peer_error,
+                                       _recv_exact, _welcome_frame,
+                                       SocketTransport, SocketWorkerClient,
+                                       WireProtocolError)
+
+_log = logging.getLogger("repro.cluster.hostlink")
+
+# Machine-readable marker on lease rejections that resolve themselves
+# as the fleet churns (a dead predecessor's connection the hub has not
+# reaped yet, a slot about to free up).  The marker travels inside the
+# REJECT frame's reason, and :func:`negotiate_join` retries exactly the
+# marked rejections within its deadline — producer and consumer share
+# this one constant, so rewording the prose can never flip the retry
+# policy.  Protocol errors (bad magic / version / out-of-range id) are
+# never marked: they cannot change and fail fast.
+BUSY_MARKER = "[busy]"
+
+
+def parse_hostport(s: str, default_host: str = "127.0.0.1"
+                   ) -> Tuple[str, int]:
+    """``"HOST:PORT"`` / ``":PORT"`` / ``"PORT"`` -> ``(host, port)``.
+    Port 0 means "pick an ephemeral port" (the resolved one is on
+    ``transport.address``)."""
+    s = str(s).strip()
+    host, sep, port_s = s.rpartition(":")
+    if not sep:
+        host, port_s = "", s
+    host = host or default_host
+    try:
+        port = int(port_s)
+    except ValueError:
+        raise ValueError(f"invalid listen address {s!r}: expected "
+                         "HOST:PORT (e.g. 0.0.0.0:5555, :0)") from None
+    if not 0 <= port < 65536:
+        raise ValueError(f"invalid port {port} in listen address {s!r}")
+    return host, port
+
+
+def _addr_str(address: Any) -> str:
+    if isinstance(address, str):
+        return address
+    host, port = tuple(address)[:2]
+    return f"{host}:{port}"
+
+
+# ========================================================== leader side
+
+
+class HostTransport(SocketTransport):
+    """The multi-host hub: a TCP slab hub at a real ``host:port`` that
+    *admits* remote workers instead of launching them.
+
+    ``welcome_config`` (JSON-able; typically ``{"spec": spec.to_dict()}``)
+    is what every joiner receives in WELCOME, extended per-join with its
+    ``worker_id`` lease, ``generation``, and ``num_workers`` — the whole
+    contract a remote host needs to rebuild the workload and claim its
+    data shard.
+    """
+
+    def __init__(self, grad_capacity: int = 0, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 num_workers: int, welcome_config:
+                 Optional[Dict[str, Any]] = None):
+        super().__init__(grad_capacity, family="tcp", host=host,
+                         port=port)
+        self.num_workers = int(num_workers)
+        self.welcome_config = dict(welcome_config or {})
+        self._leases: Dict[int, int] = {}       # worker_id -> generation
+        self._lease_lock = threading.Lock()
+
+    # ------------------------------------------------------------ leases
+    def _taken_ids(self) -> set:
+        """Worker ids currently held by a live connection — HELLO'd
+        (serving) or leased-but-compiling (a JOIN whose HELLO is still
+        pending)."""
+        with self._conns_cond:
+            taken = set()
+            for c in self._conns:
+                if c.closed.is_set():
+                    continue
+                if c.worker_id is not None:
+                    taken.add(c.worker_id)
+                elif c.leased_wid is not None:
+                    taken.add(c.leased_wid)
+        return taken
+
+    def _on_join(self, conn, requested_id: int) -> Optional[str]:
+        with self._lease_lock:
+            taken = self._taken_ids()
+            if requested_id < 0:
+                free = [w for w in range(self.num_workers)
+                        if w not in taken]
+                if not free:
+                    return (f"{BUSY_MARKER} fleet is full: all "
+                            f"{self.num_workers} worker ids are joined")
+                wid = free[0]
+            else:
+                if requested_id >= self.num_workers:
+                    return (f"worker id {requested_id} out of range "
+                            f"(fleet size {self.num_workers})")
+                if requested_id in taken:
+                    return (f"{BUSY_MARKER} worker id {requested_id} "
+                            "is already joined")
+                wid = requested_id
+            generation = self._leases.get(wid, -1) + 1
+            self._leases[wid] = generation
+            conn.leased_wid = wid
+        cfg = dict(self.welcome_config)
+        cfg.update(worker_id=wid, generation=generation,
+                   num_workers=self.num_workers)
+        conn.send_frame(_welcome_frame(cfg))
+        _log.info("leased worker id %d (generation %d)", wid, generation)
+        return None
+
+    def _admit_hello(self, conn, worker_id: int,
+                     generation: int) -> Optional[str]:
+        if not 0 <= worker_id < self.num_workers:
+            # an out-of-range id would count toward the fleet barrier
+            # while its data shard doesn't exist — never admit it
+            return (f"worker id {worker_id} out of range (fleet size "
+                    f"{self.num_workers})")
+        with self._lease_lock, self._conns_cond:
+            for c in self._conns:
+                # a leased-but-still-compiling joiner holds its id too
+                # (worker_id is None until its HELLO): a direct HELLO
+                # must not steal the shard out from under it
+                if c is not conn and not c.closed.is_set() \
+                        and worker_id in (c.worker_id, c.leased_wid):
+                    return (f"worker id {worker_id} already has a "
+                            "live connection")
+            cur = self._leases.get(worker_id)
+            if cur is not None and generation < cur:
+                return (f"generation fence: worker {worker_id} HELLO "
+                        f"carries generation {generation} but the "
+                        f"current lease is {cur} (superseded peer)")
+            if cur is None or generation > cur:
+                # direct HELLO without a JOIN (e.g. a local endpoint):
+                # record it so later joins/rejoins fence correctly
+                self._leases[worker_id] = generation
+            # claim the id INSIDE the admission critical section: a
+            # racing admission or join for the same id must see this
+            # connection as its holder (no duplicate-shard TOCTOU)
+            conn.worker_id, conn.generation = worker_id, generation
+            return None
+
+    # ------------------------------------------------------------ faults
+    def kill_worker(self, worker_id: int) -> bool:
+        """Cut the worker's connection — the network fault a leader can
+        actually inflict on a remote host.  The remote process sees EOF
+        and exits cleanly; True if a live connection was cut."""
+        with self._conns_cond:
+            conns = [c for c in self._conns
+                     if c.worker_id == worker_id
+                     and not c.closed.is_set()]
+        for c in conns:
+            c.close()
+        return bool(conns)
+
+
+# =========================================================== join side
+
+
+def _connect_retry(host: str, port: int,
+                   timeout: float) -> socket.socket:
+    """Dial the leader, retrying until it is up (the two-terminal
+    quickstart and scripted smoke tests start both sides concurrently)."""
+    deadline = time.monotonic() + max(0.0, timeout)
+    while True:
+        try:
+            return socket.create_connection((host, port), timeout=5.0)
+        except OSError as e:
+            if time.monotonic() > deadline:
+                raise WireProtocolError(
+                    f"could not reach the leader at {host}:{port} "
+                    f"within {timeout:.0f}s: {e}") from None
+            time.sleep(0.2)
+
+
+
+
+def negotiate_join(address: Any, *, worker_id: Optional[int] = None,
+                   connect_timeout: float = 30.0
+                   ) -> Tuple[socket.socket, Dict[str, Any]]:
+    """The JOIN handshake: connect, request a worker-id lease, return
+    ``(connected socket, welcome config)``.  ``connect_timeout`` covers
+    the whole negotiation — an unreachable leader AND transient lease
+    contention (e.g. a rejoin racing the teardown of its dead
+    predecessor's connection) are retried until the deadline.  Raises
+    :class:`WireProtocolError` with the leader's readable reason when
+    the rejection is permanent or the deadline expires."""
+    host, port = parse_hostport(address) if isinstance(address, str) \
+        else tuple(address)[:2]
+    deadline = time.monotonic() + max(0.0, connect_timeout)
+    last_busy: Optional[WireProtocolError] = None
+    while True:
+        sock = None
+        try:
+            sock = _connect_retry(host, int(port),
+                                  max(0.0, deadline - time.monotonic()))
+            return sock, _join_handshake(sock, worker_id, deadline)
+        except WireProtocolError as e:
+            if sock is not None:
+                sock.close()    # idempotent (handshake closes on fail)
+            if BUSY_MARKER in str(e):
+                last_busy = e
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.2)
+                continue
+            if last_busy is not None \
+                    and time.monotonic() > deadline:
+                # the deadline ran out while retrying a busy lease —
+                # the actionable error is the lease rejection, not the
+                # generic timeout.  (A *permanent* rejection arriving
+                # before the deadline — e.g. the leader restarted with
+                # an incompatible build — wins over the stale busy.)
+                raise last_busy
+            raise
+
+
+def _join_handshake(sock: socket.socket, worker_id: Optional[int],
+                    deadline: float) -> Dict[str, Any]:
+    ok = False
+    try:
+        # re-armed per frame: the deadline covers the WHOLE negotiation
+        # — a half-broken leader that keeps emitting frames (e.g.
+        # PARAMS broadcasts) without ever sending WELCOME must not keep
+        # the joiner looping past it (floor keeps a zero/negative
+        # remainder from meaning "no timeout")
+        sock.settimeout(max(0.1, deadline - time.monotonic()))
+        sock.sendall(_join_frame(-1 if worker_id is None
+                                 else int(worker_id)))
+        while True:
+            if time.monotonic() > deadline:
+                raise WireProtocolError(
+                    "leader did not complete the join handshake "
+                    "within the deadline")
+            sock.settimeout(max(0.1, deadline - time.monotonic()))
+            hdr, _ = _recv_exact(sock, _HDR.size)
+            if hdr is None:
+                raise WireProtocolError(
+                    "leader hung up during the join handshake")
+            ftype, n = _HDR.unpack(hdr)
+            if n > _MAX_FRAME:
+                raise WireProtocolError(
+                    f"malformed handshake frame (type {ftype}, "
+                    f"length {n})")
+            payload, _ = _recv_exact(sock, n)
+            if payload is None:
+                raise WireProtocolError(
+                    "leader hung up mid-frame during the join handshake")
+            if ftype == _F_PARAMS:
+                continue        # a broadcast racing the handshake; the
+                #                 hub re-pushes current params on HELLO
+            if n < _CTRL.size:
+                raise WireProtocolError(
+                    f"malformed handshake frame (type {ftype}, "
+                    f"length {n})")
+            magic, proto = _CTRL.unpack(payload[:_CTRL.size])
+            err = _peer_error(magic, proto)
+            if err is not None:
+                raise WireProtocolError(f"leader handshake failed: {err}")
+            body = payload[_CTRL.size:]
+            if ftype == _F_REJECT:
+                raise WireProtocolError(
+                    "leader rejected the join: "
+                    + body.decode("utf-8", "replace"))
+            if ftype != _F_WELCOME:
+                raise WireProtocolError(
+                    f"expected WELCOME, got frame type {ftype}")
+            cfg = json.loads(body.decode("utf-8"))
+            sock.settimeout(None)
+            ok = True
+            return cfg
+    finally:
+        if not ok:
+            sock.close()
+
+
+def build_slab_worker_fn(spec, worker_id: int, num_workers: int,
+                         generation: int, *, batch: int, seed: int):
+    """Rebuild one worker's world from an ``ExperimentSpec``: the
+    jitted slab-in/slab-out gradient executable (compiled and warm) and
+    a factory for its deterministic shard iterator.  Shared by ``proc``
+    worker processes and ``host`` joiners — the spec is the whole
+    cross-boundary contract."""
+    import jax
+
+    from repro.api.trainers import SIM_WORKLOADS
+    from repro.core.slab import slab_codec
+    from repro.data.pipeline import shard_iterator
+
+    loss_fn, init_params, data, _ = SIM_WORKLOADS[spec.arch](spec)
+    x_tr, y_tr = data[0], data[1]
+    codec = slab_codec(init_params)
+    grad_fn = jax.grad(loss_fn)
+
+    def _grad_slab(p_slab, x, y):
+        return codec.encode(grad_fn(codec.decode(p_slab), x, y))
+
+    grad = jax.jit(_grad_slab)
+
+    def fresh_batches():
+        return shard_iterator(x_tr, y_tr, worker_id, num_workers,
+                              batch, seed=seed, generation=generation)
+
+    # warm up on a throwaway iterator: the training stream must start
+    # at batch 0, exactly like an in-process worker's
+    wx, wy = next(fresh_batches())
+    jax.block_until_ready(grad(codec.encode(init_params), wx, wy))
+    return grad, fresh_batches
+
+
+def run_joined_worker(address: Any, *,
+                      worker_id: Optional[int] = None,
+                      connect_timeout: float = 30.0,
+                      verbose: bool = True) -> int:
+    """One joined worker, end to end: JOIN -> WELCOME -> rebuild the
+    workload from the wire spec -> compile -> HELLO (ready) -> train
+    until the leader hangs up (EOF) or the run ends.  Returns a process
+    exit code; raises :class:`WireProtocolError` when the leader turns
+    the join away."""
+    sock, cfg = negotiate_join(address, worker_id=worker_id,
+                               connect_timeout=connect_timeout)
+    wid, generation = int(cfg["worker_id"]), int(cfg["generation"])
+    num_workers = int(cfg["num_workers"])
+    if verbose:
+        print(f"[join] leased worker {wid}.{generation} of "
+              f"{num_workers} from {_addr_str(address)}; rebuilding "
+              f"workload", flush=True)
+    try:
+        from repro.api.spec import ExperimentSpec
+        from repro.cluster.worker import Worker
+
+        spec = ExperimentSpec.from_dict(cfg["spec"])
+        grad, fresh_batches = build_slab_worker_fn(
+            spec, wid, num_workers, generation,
+            batch=spec.batch, seed=spec.seed)
+        # HELLO == ready: connect into the fleet barrier only now, so
+        # the leader's serving clock never measures our compile time
+        client = SocketWorkerClient(None, wid, generation=generation,
+                                    sock=sock)
+    except Exception:
+        traceback.print_exc()
+        sys.stderr.flush()
+        try:
+            sock.close()
+        except OSError:
+            pass
+        return 2
+
+    worker = Worker(wid, grad_fn=grad, batches=fresh_batches(),
+                    transport=client, mode=spec.mode,
+                    straggle_s=spec.faults.straggle_s(wid),
+                    generation=generation)
+    # leader shutdown/death closes the connection -> closed is set ->
+    # the loop exits: a dead leader can never strand this worker
+    worker.stop_event = client.closed
+    if verbose:
+        print(f"[join] worker {wid}.{generation} ready (compiled); "
+              "training", flush=True)
+    worker.run()                            # inline, not as a thread
+    client.flush(5.0)
+    client.close()
+    if worker.error:
+        print(worker.error, file=sys.stderr, flush=True)
+        return 3
+    if client.reject_reason:
+        print(f"[join] worker {wid}.{generation} was rejected: "
+              f"{client.reject_reason}", file=sys.stderr, flush=True)
+        return 4
+    if verbose:
+        print(f"[join] worker {wid}.{generation} done: {worker.sent} "
+              "gradients sent", flush=True)
+    return 0
+
+
+def _join_child(address: str, connect_timeout: float,
+                verbose: bool) -> None:
+    """Child entry point for ``repro join --workers K`` (spawned, one
+    JAX runtime each).  ``os._exit`` skips interpreter finalization —
+    see ``mptransport._proc_worker_main`` for why."""
+    code = 1
+    try:
+        code = run_joined_worker(address, connect_timeout=connect_timeout,
+                                 verbose=verbose)
+    except WireProtocolError as e:
+        print(f"join failed: {e}", file=sys.stderr, flush=True)
+        code = 4
+    except Exception:
+        traceback.print_exc()
+        code = 2
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os._exit(code)
+
+
+def join_main(address: str, *, worker_id: Optional[int] = None,
+              workers: int = 1, connect_timeout: float = 60.0,
+              verbose: bool = True) -> int:
+    """``python -m repro join`` body.  ``workers > 1`` spawns one OS
+    process per worker (each with its own JAX runtime), mirroring a
+    multi-worker host joining the fleet."""
+    if workers < 1:
+        print("error: --workers must be >= 1", file=sys.stderr)
+        return 2
+    if workers > 1 and worker_id is not None:
+        print("error: --worker-id and --workers > 1 are mutually "
+              "exclusive (the leader assigns ids per worker)",
+              file=sys.stderr)
+        return 2
+    if workers == 1:
+        try:
+            return run_joined_worker(address, worker_id=worker_id,
+                                     connect_timeout=connect_timeout,
+                                     verbose=verbose)
+        except WireProtocolError as e:
+            print(f"join failed: {e}", file=sys.stderr, flush=True)
+            return 4
+    import multiprocessing
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_join_child,
+                         args=(address, connect_timeout, verbose),
+                         name=f"join-{i}") for i in range(workers)]
+    for p in procs:
+        p.start()
+    code = 0
+    for p in procs:
+        p.join()
+        if p.exitcode:
+            code = max(code, abs(int(p.exitcode)))
+    return code
+
+
+def spawn_join_process(address: Any, *, workers: int = 1,
+                       worker_id: Optional[int] = None,
+                       connect_timeout: float = 120.0,
+                       platform: Optional[str] = None
+                       ) -> "subprocess.Popen":
+    """Launch ``python -m repro join`` as a separate OS process group —
+    the test/bench harness's stand-in for a second machine (distinct
+    interpreter, distinct spec-JSON rebuild, TCP the only link).
+    ``platform`` forces ``JAX_PLATFORMS`` in the group (pass ``"cpu"``
+    when the caller holds an exclusive accelerator)."""
+    cmd = [sys.executable, "-m", "repro", "join", _addr_str(address),
+           "--workers", str(workers),
+           "--connect-timeout", str(connect_timeout), "--quiet"]
+    if worker_id is not None:
+        cmd += ["--worker-id", str(worker_id)]
+    env = dict(os.environ)
+    import repro
+    pkg_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = pkg_root + os.pathsep + env.get("PYTHONPATH", "")
+    if platform:
+        env["JAX_PLATFORMS"] = platform
+    return subprocess.Popen(cmd, env=env)

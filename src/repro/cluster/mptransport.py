@@ -14,18 +14,33 @@ spaces.
 
 **Wire format** — the slab layout (:mod:`repro.core.slab`) is the
 schema on both ends, so every message is ONE length-prefixed frame with
-no per-leaf serialization::
+no per-leaf serialization.  The format is **versioned and pinned**::
 
     frame   := header payload
     header  := !BI            (type: u8, payload length: u32)
-    HELLO   := !Ii            worker_id, generation     (worker -> hub)
-    GRAD    := !IiQ raw-slab  worker_id, version, seq   (worker -> hub)
-    PARAMS  := !ii  raw-slab  version, restore-epoch    (hub -> worker)
+    HELLO   := !IHIi          magic, proto, worker_id, generation
+    JOIN    := !IHi           magic, proto, requested worker id (-1=auto)
+    WELCOME := !IH json       magic, proto, lease + spec JSON (hub ->)
+    REJECT  := !IH utf-8      magic, proto, readable reason   (hub ->)
+    GRAD    := !IiQ raw-slab  worker_id, version, seq
+    PARAMS  := !ii  raw-slab  version, restore-epoch          (hub ->)
 
-``raw-slab`` is the ``(P_pad,)`` float32 slab's native byte image —
-f32 round-trips bitwise, which is what makes the cross-process parity
-test exact.  (Frame headers are network order; slab bytes are native
-order — a true multi-host transport would pin them, see ROADMAP.)
+``raw-slab`` is the ``(P_pad,)`` slab as **little-endian ``<f4``** —
+pinned on both encode and decode (a big-endian host byteswaps at the
+boundary, a little-endian host pays nothing), so f32 payloads
+round-trip bitwise across any pair of hosts, which is what makes the
+cross-process and cross-host parity tests exact.  The first frame on
+every accepted connection must be a HELLO or JOIN carrying the protocol
+magic and version: a stray TCP client, or a peer from an incompatible
+build, is rejected with a logged, readable error (and a best-effort
+REJECT frame) instead of being misparsed as a worker —
+:attr:`SocketTransport.rejected_peers` counts them, and a rejected
+connection never enters the fleet barrier.  Every frame length is
+validated against ``_MAX_FRAME`` (and HELLO/JOIN against their exact
+struct sizes) before any payload is read, so a peer that lost frame
+sync cannot wedge a reader on a garbage multi-gigabyte length.
+JOIN/WELCOME implement the multi-host leader handshake — worker-id
+leases with generation fencing — in :mod:`repro.cluster.hostlink`.
 
 **Channel semantics** match :class:`~repro.cluster.transport.
 InProcTransport` exactly (the conformance suite in
@@ -62,6 +77,8 @@ starting gun: until release, connected workers idle in
 from __future__ import annotations
 
 import dataclasses
+import json
+import logging
 import os
 import queue
 import socket
@@ -76,16 +93,36 @@ import numpy as np
 
 from repro.cluster.transport import GradientMsg, ParamsMsg
 
+_log = logging.getLogger("repro.cluster.transport")
+
+# protocol identity: the first frame of every connection must carry both
+# (HELLO or JOIN), or the peer is rejected before it can touch the fleet
+_MAGIC = 0x534C4142                  # "SLAB"
+_PROTO_VERSION = 1
+
 _HDR = struct.Struct("!BI")          # frame type, payload length
-_HELLO = struct.Struct("!Ii")        # worker_id, generation
+_HELLO = struct.Struct("!IHIi")      # magic, proto, worker_id, generation
+_JOIN = struct.Struct("!IHi")        # magic, proto, requested id (-1=auto)
+_CTRL = struct.Struct("!IH")         # magic, proto (WELCOME/REJECT prefix)
 _GRAD = struct.Struct("!IiQ")        # worker_id, version, seq
 _PARAMS = struct.Struct("!ii")       # version, restore epoch
 
-_F_HELLO, _F_GRAD, _F_PARAMS = 1, 2, 3
+_F_HELLO, _F_GRAD, _F_PARAMS, _F_JOIN, _F_WELCOME, _F_REJECT = \
+    1, 2, 3, 4, 5, 6
 
 # one frame must fit in memory several times over; anything bigger is a
 # corrupted header (e.g. a reader that lost frame sync), not a real slab
-_MAX_FRAME = 1 << 31
+_MAX_FRAME = 1 << 30
+
+# the pinned slab byte order: little-endian f32 on the wire, always.
+# On a little-endian host (every CI/dev machine) this is the native
+# layout and costs nothing; a big-endian host byteswaps at the boundary
+_SLAB_DTYPE = np.dtype("<f4")
+
+
+class WireProtocolError(RuntimeError):
+    """A peer violated the slab wire protocol (bad magic, version
+    mismatch, malformed handshake, rejected join)."""
 
 
 def _recv_exact(sock: socket.socket, n: int
@@ -109,18 +146,66 @@ def _recv_exact(sock: socket.socket, n: int
     return bytes(buf), False
 
 
+def _slab_to_bytes(arr) -> bytes:
+    """The slab's wire image: contiguous little-endian ``<f4`` bytes —
+    the pinned byte order, regardless of the producing host's own."""
+    a = np.ascontiguousarray(np.asarray(arr, dtype=np.float32))
+    return a.astype(_SLAB_DTYPE, copy=False).tobytes()
+
+
+def _slab_from_payload(payload: bytes, offset: int) -> np.ndarray:
+    """Decode a wire slab: explicit ``<f4``, normalized to the native
+    float32 so downstream jnp/staging code never sees a swapped view."""
+    slab = np.frombuffer(payload, _SLAB_DTYPE, offset=offset)
+    if slab.dtype != np.float32:        # big-endian host: byteswap once
+        slab = slab.astype(np.float32)
+    return slab
+
+
 def _grad_frame(msg: GradientMsg) -> bytes:
-    slab = np.ascontiguousarray(np.asarray(msg.grad, dtype=np.float32))
-    payload_len = _GRAD.size + slab.nbytes
-    return (_HDR.pack(_F_GRAD, payload_len)
-            + _GRAD.pack(msg.worker_id, msg.version, msg.seq)
-            + slab.tobytes())
+    slab = _slab_to_bytes(msg.grad)
+    return (_HDR.pack(_F_GRAD, _GRAD.size + len(slab))
+            + _GRAD.pack(msg.worker_id, msg.version, msg.seq) + slab)
 
 
 def _params_frame(msg: ParamsMsg) -> bytes:
-    slab = np.ascontiguousarray(np.asarray(msg.params, dtype=np.float32))
-    return (_HDR.pack(_F_PARAMS, _PARAMS.size + slab.nbytes)
-            + _PARAMS.pack(msg.version, msg.epoch) + slab.tobytes())
+    slab = _slab_to_bytes(msg.params)
+    return (_HDR.pack(_F_PARAMS, _PARAMS.size + len(slab))
+            + _PARAMS.pack(msg.version, msg.epoch) + slab)
+
+
+def _hello_frame(worker_id: int, generation: int) -> bytes:
+    return (_HDR.pack(_F_HELLO, _HELLO.size)
+            + _HELLO.pack(_MAGIC, _PROTO_VERSION, worker_id, generation))
+
+
+def _join_frame(requested_id: int) -> bytes:
+    return (_HDR.pack(_F_JOIN, _JOIN.size)
+            + _JOIN.pack(_MAGIC, _PROTO_VERSION, requested_id))
+
+
+def _ctrl_frame(ftype: int, body: bytes) -> bytes:
+    return (_HDR.pack(ftype, _CTRL.size + len(body))
+            + _CTRL.pack(_MAGIC, _PROTO_VERSION) + body)
+
+
+def _welcome_frame(cfg: Dict[str, Any]) -> bytes:
+    return _ctrl_frame(_F_WELCOME, json.dumps(cfg).encode("utf-8"))
+
+
+def _reject_frame(reason: str) -> bytes:
+    return _ctrl_frame(_F_REJECT, reason.encode("utf-8"))
+
+
+def _peer_error(magic: int, proto: int) -> Optional[str]:
+    """Reject reason for a bad protocol identity, or None when valid."""
+    if magic != _MAGIC:
+        return (f"bad magic 0x{magic:08X} (expected 0x{_MAGIC:08X}) — "
+                "peer is not a repro slab endpoint")
+    if proto != _PROTO_VERSION:
+        return (f"protocol version mismatch: peer speaks v{proto}, this "
+                f"hub speaks v{_PROTO_VERSION}")
+    return None
 
 
 def _configure(sock: socket.socket) -> None:
@@ -141,10 +226,15 @@ class _Conn:
         self.sock = sock
         self.worker_id: Optional[int] = None
         self.generation = 0
+        self.authenticated = False          # valid HELLO or JOIN seen
+        self.leased_wid: Optional[int] = None   # set by a JOIN lease
         self.closed = threading.Event()
         self._params_ev = threading.Event()
         self._last_sent: Optional[bytes] = None
         self._lock = threading.Lock()       # close() idempotence
+        self._wlock = threading.Lock()      # whole frames only: the
+        #                                     writer thread and control
+        #                                     replies share one socket
         _configure(sock)
         self.reader = threading.Thread(target=self._read_loop,
                                        name="hub-reader", daemon=True)
@@ -155,6 +245,38 @@ class _Conn:
         self.writer.start()
 
     # ------------------------------------------------------- gradients in
+    def _frame_error(self, ftype: int, n: int) -> Optional[str]:
+        """Header-level validation, BEFORE the payload is read — a
+        garbage header must never commit the reader to a garbage-sized
+        read."""
+        if ftype == _F_HELLO:
+            if self.worker_id is not None:
+                return ("repeated HELLO on one connection — a peer "
+                        "identifies itself exactly once (a re-HELLO "
+                        "under another id would ghost-register the "
+                        "first one in the sync barrier)")
+            return None if n == _HELLO.size else \
+                f"HELLO frame has length {n}, expected {_HELLO.size}"
+        if ftype == _F_JOIN:
+            if self.authenticated:
+                return ("JOIN on an already-authenticated connection — "
+                        "one connection holds at most one lease")
+            return None if n == _JOIN.size else \
+                f"JOIN frame has length {n}, expected {_JOIN.size}"
+        if not self.authenticated:
+            return (f"first frame has type {ftype}, not HELLO/JOIN — "
+                    "peer is not speaking the repro slab protocol")
+        if n > _MAX_FRAME:
+            return (f"frame length {n} exceeds the {_MAX_FRAME}-byte "
+                    "maximum — peer lost frame sync")
+        if ftype == _F_GRAD and (n < _GRAD.size or
+                                 (n - _GRAD.size)
+                                 % _SLAB_DTYPE.itemsize):
+            return (f"malformed GRAD frame: payload length {n} is not "
+                    f"header + whole {_SLAB_DTYPE} slab elements — "
+                    "peer lost frame sync")
+        return None
+
     def _read_loop(self) -> None:
         try:
             while not self.closed.is_set():
@@ -164,26 +286,47 @@ class _Conn:
                         self.hub._note_torn()   # died mid-header
                     break                       # else: clean EOF
                 ftype, n = _HDR.unpack(hdr)
-                if n > _MAX_FRAME:
-                    self.hub._note_torn()
+                err = self._frame_error(ftype, n)
+                if err is not None:
+                    self.hub._reject(self, err)
                     break
                 payload, _ = _recv_exact(self.sock, n)
                 if payload is None:
                     self.hub._note_torn()       # died mid-frame: discard
                     break
                 if ftype == _F_HELLO:
-                    wid, gen = _HELLO.unpack(payload)
-                    self.worker_id, self.generation = wid, gen
+                    magic, proto, wid, gen = _HELLO.unpack(payload)
+                    # _admit_hello claims conn.worker_id inside the
+                    # hub's admission lock — concurrent admissions for
+                    # one id must see each other (duplicate fencing)
+                    err = _peer_error(magic, proto) \
+                        or self.hub._admit_hello(self, wid, gen)
+                    if err is not None:
+                        self.hub._reject(self, err)
+                        break
+                    self.authenticated = True
                     self.hub._on_hello(self)
+                elif ftype == _F_JOIN:
+                    magic, proto, req = _JOIN.unpack(payload)
+                    err = _peer_error(magic, proto) \
+                        or self.hub._on_join(self, req)
+                    if err is not None:
+                        self.hub._reject(self, err)
+                        break
+                    self.authenticated = True
                 elif ftype == _F_GRAD:
+                    if self.worker_id is None:
+                        self.hub._reject(
+                            self, "GRAD frame before HELLO — the peer "
+                                  "never identified itself")
+                        break
                     wid, version, seq = _GRAD.unpack(
                         payload[:_GRAD.size])
-                    grad = np.frombuffer(payload, np.float32,
-                                         offset=_GRAD.size)
+                    grad = _slab_from_payload(payload, _GRAD.size)
                     msg = GradientMsg(wid, grad, version, seq)
                     if self.hub._enqueue(msg):  # blocks: backpressure
                         self.hub._count_received(wid)
-                # unknown frame types are ignored (forward compat)
+                # other frame types are ignored (forward compat)
         finally:
             self.close()
             self.hub._conn_closed(self)
@@ -192,17 +335,40 @@ class _Conn:
     def notify_params(self) -> None:
         self._params_ev.set()
 
+    def send_frame(self, frame: bytes,
+                   lock_timeout: Optional[float] = None) -> bool:
+        """Write one whole frame (serialized against the params writer
+        thread).  False when the connection is gone — or, with
+        ``lock_timeout``, when the write lock stayed contended that
+        long (a writer wedged in ``sendall`` against a stalled peer
+        must not be able to wedge the *reader* too)."""
+        if lock_timeout is None:
+            acquired = self._wlock.acquire()
+        else:
+            acquired = self._wlock.acquire(timeout=lock_timeout)
+        if not acquired:
+            return False
+        try:
+            self.sock.sendall(frame)
+            return True
+        except OSError:
+            return False
+        finally:
+            self._wlock.release()
+
     def _write_loop(self) -> None:
         while not self.closed.is_set():
             if not self._params_ev.wait(0.2):
                 continue
             self._params_ev.clear()
             frame = self.hub._pub_frame     # latest only: coalesced
-            if frame is None or frame is self._last_sent:
+            # never broadcast parameters to a connection that has not
+            # authenticated: a silent stray peer must not receive the
+            # model (the HELLO handler re-arms the push on admission)
+            if frame is None or frame is self._last_sent \
+                    or not self.authenticated:
                 continue
-            try:
-                self.sock.sendall(frame)
-            except OSError:
+            if not self.send_frame(frame):
                 break
             self._last_sent = frame
 
@@ -244,10 +410,17 @@ class SocketTransport:
     ``grad_capacity`` bounds the hub gradient queue exactly like
     :class:`InProcTransport` (0 = unbounded); the bound propagates to
     workers through socket flow control (see module docstring).
+
+    TCP mode binds ``(host, port)`` — ``port=0`` (the default) picks an
+    ephemeral port, an explicit port makes the address advertisable
+    ahead of time (the multi-host leader's requirement); either way the
+    *resolved* address is :attr:`address`.  ``SO_REUSEADDR`` is set so a
+    fast restart can rebind the same port while the previous hub's
+    connections sit in TIME_WAIT.
     """
 
     def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
-                 host: str = "127.0.0.1"):
+                 host: str = "127.0.0.1", port: int = 0):
         assert family in ("unix", "tcp"), family
         self.family = family
         self._sockdir: Optional[str] = None
@@ -259,7 +432,7 @@ class SocketTransport:
         else:
             lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
             lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-            lsock.bind((host, 0))
+            lsock.bind((host, port))
             self.address = lsock.getsockname()
         lsock.listen(128)
         lsock.settimeout(0.2)               # close() unblocks accept
@@ -272,6 +445,7 @@ class SocketTransport:
         self._received: Dict[int, int] = {}
         self._recv_lock = threading.Lock()
         self._torn = 0
+        self._rejected = 0
         self._pub_frame: Optional[bytes] = None
         self._pub_msg: Optional[ParamsMsg] = None
         self._pub_cond = threading.Condition()
@@ -308,9 +482,51 @@ class SocketTransport:
                 # so it stops instead of training against a dead run
                 conn.half_close()
 
+    def _admit_hello(self, conn: _Conn, worker_id: int,
+                     generation: int) -> Optional[str]:
+        """Membership policy hook: a reject reason, or None to admit.
+        On admit the hook MUST claim ``conn.worker_id``/``generation``
+        inside its own critical section, so concurrent admissions for
+        the same id observe each other.  The base hub admits every
+        well-formed HELLO; the multi-host :class:`~repro.cluster.
+        hostlink.HostTransport` fences stale generations and duplicate
+        worker ids here."""
+        with self._conns_cond:
+            conn.worker_id, conn.generation = worker_id, generation
+        return None
+
+    def _on_join(self, conn: _Conn, requested_id: int) -> Optional[str]:
+        """JOIN (lease negotiation) hook — only the multi-host hub
+        implements it; anything else tells the peer to HELLO directly."""
+        return ("this hub does not negotiate worker-id leases (not a "
+                "host transport) — connect with HELLO")
+
+    def _reject(self, conn: _Conn, reason: str) -> None:
+        """Turn away a peer with a readable error: logged, counted,
+        best-effort REJECT frame (a stray client that can't parse it
+        just sees the connection close).  The caller breaks its read
+        loop, so the conn closes without ever entering the barrier."""
+        try:
+            peer = conn.sock.getpeername()
+        except OSError:
+            peer = "?"
+        _log.warning("rejecting peer %s: %s", peer, reason)
+        with self._recv_lock:
+            self._rejected += 1
+        # best-effort only, and never at the cost of the reader: if the
+        # write lock is held by a writer wedged against a stalled peer,
+        # skip the frame — the close right after this unblocks everyone
+        conn.send_frame(_reject_frame(reason), lock_timeout=1.0)
+
     def _on_hello(self, conn: _Conn) -> None:
         with self._conns_cond:
             self._conns_cond.notify_all()
+        # re-arm the params push for this connection: a JOIN handshake
+        # may have consumed the pre-HELLO push on the client side (the
+        # negotiator reads frames until WELCOME), and a coalesced writer
+        # would otherwise never resend the current version
+        conn._last_sent = None
+        conn.notify_params()
         if self.on_worker_ready is not None:
             self.on_worker_ready(conn.worker_id, conn.generation)
 
@@ -357,8 +573,8 @@ class SocketTransport:
             # unconditional replace — a restore publishes an OLDER
             # version and workers must resync to it (see Transport)
             self._pub_msg = ParamsMsg(
-                msg.version, np.frombuffer(frame, np.float32,
-                                           offset=_HDR.size + _PARAMS.size),
+                msg.version,
+                _slab_from_payload(frame, _HDR.size + _PARAMS.size),
                 epoch=msg.epoch)
             if self._hold:
                 self._held_frame = frame
@@ -448,6 +664,15 @@ class SocketTransport:
             return {c.worker_id for c in self._conns
                     if c.worker_id is not None and not c.closed.is_set()}
 
+    def connected_workers(self) -> Dict[int, int]:
+        """{worker_id: generation} of every live, HELLO'd connection —
+        the runtime sweeps this after installing its membership hooks,
+        catching externally-joined workers whose HELLO landed first."""
+        with self._conns_cond:
+            return {c.worker_id: c.generation for c in self._conns
+                    if c.worker_id is not None
+                    and not c.closed.is_set()}
+
     def received_counts(self) -> Dict[int, int]:
         """Complete gradient frames received, per worker id — the exact
         "computed" ledger column for process workers.  Read only after
@@ -460,6 +685,13 @@ class SocketTransport:
         """Frames discarded because the sender died mid-write."""
         with self._recv_lock:
             return self._torn
+
+    @property
+    def rejected_peers(self) -> int:
+        """Connections turned away for violating the wire protocol
+        (bad magic, version mismatch, malformed first frame)."""
+        with self._recv_lock:
+            return self._rejected
 
     def half_close_workers(self) -> None:
         """Send EOF to every worker (params direction) while still
@@ -534,16 +766,21 @@ class SocketWorkerClient:
 
     def __init__(self, address: Any, worker_id: int, *,
                  generation: int = 0, family: str = "unix",
-                 send_capacity: int = 2, connect_timeout: float = 10.0):
+                 send_capacity: int = 2, connect_timeout: float = 10.0,
+                 sock: Optional[socket.socket] = None):
         self.worker_id = worker_id
         self.generation = generation
-        if family == "unix":
-            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            sock.settimeout(connect_timeout)
-            sock.connect(address)
-        else:
-            sock = socket.create_connection(tuple(address),
-                                            timeout=connect_timeout)
+        self.reject_reason: Optional[str] = None
+        if sock is None:
+            if family == "unix":
+                sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                sock.settimeout(connect_timeout)
+                sock.connect(address)
+            else:
+                sock = socket.create_connection(tuple(address),
+                                                timeout=connect_timeout)
+        # else: adopt an already-connected socket (e.g. the one a JOIN
+        # handshake negotiated the worker-id lease on — see hostlink)
         sock.settimeout(None)
         _configure(sock)
         self.sock = sock
@@ -554,8 +791,7 @@ class SocketWorkerClient:
             queue.Queue(maxsize=max(1, send_capacity))
         self._close_lock = threading.Lock()
         self._closed_once = False
-        self.sock.sendall(_HDR.pack(_F_HELLO, _HELLO.size)
-                          + _HELLO.pack(worker_id, generation))
+        self.sock.sendall(_hello_frame(worker_id, generation))
         self._reader = threading.Thread(
             target=self._read_loop, name=f"client-reader-{worker_id}",
             daemon=True)
@@ -578,15 +814,24 @@ class SocketWorkerClient:
                 payload, _ = _recv_exact(self.sock, n)
                 if payload is None:
                     break
-                if ftype == _F_PARAMS:
+                if ftype == _F_PARAMS and n >= _PARAMS.size \
+                        and (n - _PARAMS.size) % _SLAB_DTYPE.itemsize \
+                        == 0:
                     version, epoch = _PARAMS.unpack(
                         payload[:_PARAMS.size])
-                    slab = np.frombuffer(payload, np.float32,
-                                         offset=_PARAMS.size)
+                    slab = _slab_from_payload(payload, _PARAMS.size)
                     with self._cond:
                         self._cell = ParamsMsg(version, slab,
                                                epoch=epoch)
                         self._cond.notify_all()
+                elif ftype == _F_REJECT:
+                    reason = payload[_CTRL.size:].decode(
+                        "utf-8", "replace") if n >= _CTRL.size else ""
+                    self.reject_reason = reason or "rejected by hub"
+                    _log.warning("hub rejected worker %d.%d: %s",
+                                 self.worker_id, self.generation,
+                                 self.reject_reason)
+                    break
         finally:
             self._mark_closed()
 
@@ -745,36 +990,14 @@ def _proc_worker_main(cfg: ProcWorkerConfig) -> None:
     if cfg.platform:
         os.environ["JAX_PLATFORMS"] = cfg.platform
     try:
-        import jax
-
         from repro.api.spec import ExperimentSpec
-        from repro.api.trainers import SIM_WORKLOADS
+        from repro.cluster.hostlink import build_slab_worker_fn
         from repro.cluster.worker import Worker
-        from repro.core.slab import slab_codec
-        from repro.data.pipeline import shard_iterator
 
         spec = ExperimentSpec.from_dict(cfg.spec)
-        loss_fn, init_params, data, _ = SIM_WORKLOADS[spec.arch](spec)
-        x_tr, y_tr = data[0], data[1]
-        codec = slab_codec(init_params)
-        grad_fn = jax.grad(loss_fn)
-
-        def _grad_slab(p_slab, x, y):
-            return codec.encode(grad_fn(codec.decode(p_slab), x, y))
-
-        grad = jax.jit(_grad_slab)
-
-        def fresh_batches():
-            return shard_iterator(x_tr, y_tr, cfg.worker_id,
-                                  cfg.num_workers, cfg.batch,
-                                  seed=cfg.seed,
-                                  generation=cfg.generation)
-
-        # warm up on a throwaway iterator: the training stream must
-        # start at batch 0, exactly like an in-process worker's
-        wx, wy = next(fresh_batches())
-        jax.block_until_ready(grad(codec.encode(init_params), wx, wy))
-
+        grad, fresh_batches = build_slab_worker_fn(
+            spec, cfg.worker_id, cfg.num_workers, cfg.generation,
+            batch=cfg.batch, seed=cfg.seed)
         client = SocketWorkerClient(cfg.address, cfg.worker_id,
                                     generation=cfg.generation,
                                     family=cfg.family)

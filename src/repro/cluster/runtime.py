@@ -5,7 +5,7 @@ ParameterServer`, a worker fleet, a transport, and the
 :class:`~repro.cluster.faults.FaultPlan` injector, then runs until a
 wall-clock budget elapses or an applied-gradient budget is hit.
 
-Three transports (``transport_kind``, = ``ExperimentSpec.transport``):
+Four transports (``transport_kind``, = ``ExperimentSpec.transport``):
 
   * ``inproc`` — worker *threads* + an in-process queue (default; the
     parity baseline).  Gradient compute shares one GIL/JAX runtime;
@@ -18,7 +18,15 @@ Three transports (``transport_kind``, = ``ExperimentSpec.transport``):
     starts the clock only after every child has compiled and connected
     (so the budget measures contention, not XLA).  Requires
     ``spec_dict`` — worker processes rebuild the workload from the
-    experiment spec via the ``SIM_WORKLOADS`` registry.
+    experiment spec via the ``SIM_WORKLOADS`` registry;
+  * ``host``   — the multi-host mode (:mod:`repro.cluster.hostlink`):
+    the server binds ``listen`` (``HOST:PORT``) and *waits* for remote
+    workers to join via ``python -m repro join HOST:PORT`` — the spec
+    travels to them in the leader handshake, worker ids are leased
+    (with generation fencing), and the fleet-ready barrier is "every
+    expected worker has joined".  Kill faults cut the worker's
+    connection (the leader cannot SIGKILL a remote process); respawns
+    are rejected — replacement capacity rejoins from its own host.
 
 Pieces that run concurrently with training:
 
@@ -44,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import sys
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -97,6 +106,7 @@ class ClusterRuntime:
                  transport: Optional[Transport] = None,
                  transport_kind: str = "inproc",
                  spec_dict: Optional[Dict[str, Any]] = None,
+                 listen: Optional[str] = None,
                  proc_ready_timeout_s: float = 180.0,
                  verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
@@ -112,6 +122,20 @@ class ClusterRuntime:
                 "via the SIM_WORKLOADS registry — run through "
                 'ClusterTrainer / repro.api.run(spec) with '
                 'spec.transport="proc"')
+        if transport_kind == "host" and spec_dict is None \
+                and transport is None:
+            raise ValueError(
+                'transport_kind="host" needs spec_dict (an ExperimentSpec'
+                " dict): it is what joining hosts receive in the leader "
+                "handshake and rebuild their workload from — run through "
+                'ClusterTrainer / repro.api.run(spec) with '
+                'spec.transport="host"')
+        if transport_kind == "host" and faults.respawn_after_s > 0:
+            raise ValueError(
+                "the host transport cannot respawn remote workers (the "
+                "leader does not own the remote machine) — drop "
+                "respawn_after_s and rejoin replacement capacity with "
+                "`python -m repro join` instead")
         if mode == "async":
             schedule = constant_schedule(num_workers, 1)
         if mode == "hybrid":
@@ -191,8 +215,22 @@ class ClusterRuntime:
             self.transport = SocketTransport(cap, family="tcp")
         elif transport_kind == "proc":
             self.transport = ProcTransport(cap, family="unix")
+        elif transport_kind == "host":
+            from repro.cluster.hostlink import (HostTransport,
+                                                parse_hostport)
+            bind_host, bind_port = parse_hostport(listen
+                                                  or "127.0.0.1:0")
+            self.transport = HostTransport(
+                cap, host=bind_host, port=bind_port,
+                num_workers=num_workers,
+                welcome_config={"spec": spec_dict})
         else:
             self.transport = InProcTransport(grad_capacity=cap)
+        # the resolved bind address (host transport): port 0 in `listen`
+        # has been replaced by the real ephemeral port by now
+        self.listen_address: Optional[Any] = \
+            tuple(self.transport.address) \
+            if transport_kind == "host" else None
 
         self._stop = threading.Event()
         self._workers: Dict[int, Worker] = {}
@@ -267,14 +305,22 @@ class ClusterRuntime:
         self.server.register(wid)
         w.start()
 
-    def _on_proc_ready(self, wid: int, gen: int) -> None:
-        # hub reader thread: a worker process finished connecting.
-        # Guard on generation so an orphan HELLO from a superseded
-        # process cannot re-register a worker the injector killed
+    def _on_remote_ready(self, wid: int, gen: int) -> None:
+        # hub reader thread: a worker finished connecting.  For spawned
+        # (proc) workers, guard on the exact generation so an orphan
+        # HELLO from a superseded process cannot re-register a worker
+        # the injector killed.  For joined (host) workers the transport
+        # leases generations itself — any *newer* generation is the
+        # legitimate holder of the worker id's shard
+        if self.transport_kind == "host":
+            if gen >= self._generation.get(wid, -1):
+                self._generation[wid] = gen
+                self.server.register(wid)
+            return
         if self._generation.get(wid) == gen:
             self.server.register(wid)
 
-    def _on_proc_gone(self, wid: int, gen: int) -> None:
+    def _on_remote_gone(self, wid: int, gen: int) -> None:
         # hub reader thread: a worker's connection died (kill, crash,
         # shutdown).  Deregistering here (idempotent) closes the race
         # where a HELLO lands between the injector's kill and the
@@ -288,6 +334,13 @@ class ClusterRuntime:
             sigkilled = self.transport.kill_worker(wid)   # SIGKILL
             self.server.deregister(wid)
             self._log_event("kill", worker=wid, sigkill=sigkilled)
+            return
+        if self.transport_kind == "host":
+            # the one fault a leader can inflict on a remote host: cut
+            # the connection (the worker exits cleanly on EOF)
+            cut = self.transport.kill_worker(wid)
+            self.server.deregister(wid)
+            self._log_event("kill", worker=wid, connection_cut=cut)
             return
         w = self._workers.get(wid)
         if w is not None:
@@ -425,23 +478,32 @@ class ClusterRuntime:
                 self.transport.close()
 
     def _run(self) -> ClusterResult:
+        self._t0 = time.monotonic()     # provisional: pre-barrier events
+        #                                 (listening, ...) get small ts;
+        #                                 reset when the clock starts
         start_version = 0
         start_params = self.init_params
         if self.resume_from:
             start_params, start_version = restore_checkpoint(
                 self.resume_from, like=self.init_params)
 
-        if self.transport_kind != "proc":
+        if self.transport_kind not in ("proc", "host"):
             # compile the worker gradient before the clock starts, so
             # the budget measures contention, not XLA (process workers
-            # compile in their own runtime and connect once warm; the
-            # metric fns are only evaluated after the run)
+            # and joined hosts compile in their own runtime and connect
+            # once warm; the metric fns are only evaluated after the run)
             wx, wy = next(shard_iterator(self.x_tr, self.y_tr, 0,
                                          self.num_workers, self.batch,
                                          seed=self.seed))
             jax.block_until_ready(
                 self._grad(self.codec.encode(start_params), wx, wy))
 
+        if self.transport_kind in ("proc", "host"):
+            # hold BEFORE the server's construction-time publish: a
+            # remote worker that joined while the leader was still
+            # setting up must idle in fetch_params, not bank gradients
+            # before the serving clock starts
+            self.transport.hold_params()
         self.server = ParameterServer(
             start_params, lr=self.lr, mode=self.mode,
             transport=self.transport, num_workers=self.num_workers,
@@ -452,38 +514,61 @@ class ClusterRuntime:
         snaps: List = []
         threads: List[threading.Thread] = []
         try:
-            if self.transport_kind == "proc":
-                # spawn the fleet, then hold the clock until every
-                # child has compiled and connected (HELLO == ready);
-                # fail fast on a child that crashed during startup.
+            if self.transport_kind in ("proc", "host"):
+                # assemble the fleet (spawn it, or advertise and wait
+                # for joins), then hold the clock until every worker
+                # has compiled and connected (HELLO == ready); fail
+                # fast on a spawned child that crashed during startup.
                 # The params broadcast is withheld until the barrier
-                # passes, so early children idle in fetch_params
+                # passes, so early workers idle in fetch_params
                 # instead of banking gradients before the clock starts
                 # (which would flatter the multi-process benchmark)
-                self.transport.on_worker_ready = self._on_proc_ready
-                self.transport.on_worker_gone = self._on_proc_gone
-                self.transport.hold_params()
-                for wid in range(self.num_workers):
-                    self._spawn(wid)
+                self.transport.on_worker_ready = self._on_remote_ready
+                self.transport.on_worker_gone = self._on_remote_gone
+                if self.transport_kind == "proc":
+                    for wid in range(self.num_workers):
+                        self._spawn(wid)
+                else:
+                    # externally-joined workers may have said HELLO
+                    # before the hooks existed — register them now
+                    for wid, gen in \
+                            self.transport.connected_workers().items():
+                        self._on_remote_ready(wid, gen)
+                    bind_host, bind_port = self.listen_address
+                    self._log_event("listening", host=bind_host,
+                                    port=int(bind_port),
+                                    expected_workers=self.num_workers)
+                    # a wildcard bind is not a dialable address — the
+                    # copy-paste hint must name a host the workers can
+                    # actually reach
+                    adv_host = bind_host if bind_host not in \
+                        ("0.0.0.0", "::", "") else "<LEADER_HOST>"
+                    print(f"[cluster] leader listening on {bind_host}:"
+                          f"{bind_port} — waiting for "
+                          f"{self.num_workers} worker(s) to join "
+                          f"(python -m repro join "
+                          f"{adv_host}:{bind_port})",
+                          file=sys.stderr, flush=True)
                 ready_deadline = (time.monotonic()
                                   + self.proc_ready_timeout_s)
                 while not self.transport.wait_for_workers(
                         self.num_workers, timeout=1.0):
-                    dead = self.transport.dead_workers()
-                    if dead:
-                        raise RuntimeError(
-                            "worker process(es) died before the fleet "
-                            "was ready:\n" + "\n".join(dead))
+                    if self.transport_kind == "proc":
+                        dead = self.transport.dead_workers()
+                        if dead:
+                            raise RuntimeError(
+                                "worker process(es) died before the "
+                                "fleet was ready:\n" + "\n".join(dead))
                     if time.monotonic() > ready_deadline:
                         raise RuntimeError(
                             f"only "
                             f"{sorted(self.transport.live_workers())} "
-                            f"of {self.num_workers} worker processes "
+                            f"of {self.num_workers} workers "
                             "connected within "
                             f"{self.proc_ready_timeout_s}s")
 
             self._t0 = time.monotonic()
-            if self.transport_kind == "proc":
+            if self.transport_kind in ("proc", "host"):
                 self.transport.release_params()     # the starting gun
             if start_version:
                 self._log_event("resume", step=start_version,
@@ -498,7 +583,9 @@ class ClusterRuntime:
                 threads.append(self._guarded(self._restorer, "restore"))
             for t in threads:
                 t.start()
-            if self.transport_kind != "proc":
+            if self.transport_kind not in ("proc", "host"):
+                # local thread workers; proc spawned its fleet at the
+                # barrier, and host workers joined from outside
                 for wid in range(self.num_workers):
                     self._spawn(wid)
 
@@ -522,9 +609,10 @@ class ClusterRuntime:
             self._stop.set()
             for t in threads:
                 t.join(timeout=10.0)
-            if self.transport_kind == "proc":
-                # EOF on the params direction tells each child to stop;
-                # its in-flight gradient frames are still drained
+            if self.transport_kind in ("proc", "host"):
+                # EOF on the params direction tells each worker process
+                # (spawned or remotely joined) to stop; its in-flight
+                # gradient frames are still drained
                 self.transport.half_close_workers()
             for w in self._all_workers:
                 w.stop_event.set()
@@ -551,7 +639,7 @@ class ClusterRuntime:
 
         accounting = self.server.accounting()
         accounting["in_flight"] = in_flight
-        if self.transport_kind in ("proc", "socket"):
+        if self.transport_kind in ("proc", "socket", "host"):
             # "computed" on the socket transports = complete frames
             # that physically reached the hub (exact under every
             # failure mode: whatever a killed worker or dying

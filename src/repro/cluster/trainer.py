@@ -7,7 +7,9 @@ that one spec re-targets simulator → SPMD → real concurrent cluster.
 
 ``spec.transport`` selects the wire (``inproc`` threads+queue,
 ``socket`` threads over TCP slab frames, ``proc`` one OS process per
-worker over Unix-domain sockets — see :mod:`repro.cluster.mptransport`).
+worker over Unix-domain sockets — see :mod:`repro.cluster.mptransport` —
+and ``host``, the multi-host leader that binds ``spec.listen`` and
+admits `repro join` workers — see :mod:`repro.cluster.hostlink`).
 
 The reported ``num_gradients`` is the server's applied-gradient counter,
 exactly; ``extra["accounting"]`` carries the full conservation ledger
@@ -49,8 +51,13 @@ class ClusterTrainer:
         self.verbose = verbose
         self.last_params = None
 
-    def run(self, spec: "ExperimentSpec") -> "RunResult":
-        from repro.api.result import RunResult
+    def build_runtime(self, spec: "ExperimentSpec") -> ClusterRuntime:
+        """Construct (but do not run) the runtime for ``spec``.  For
+        the ``host`` transport the hub is bound by the time this
+        returns, so ``runtime.listen_address`` carries the *resolved*
+        ``(host, port)`` — callers that script both terminals of the
+        multi-host quickstart (tests, benchmarks) read it here and
+        launch their ``repro join`` groups before :meth:`finish`."""
         from repro.api.schedules import parse_schedule
         from repro.api.trainers import SIM_WORKLOADS
 
@@ -81,18 +88,42 @@ class ClusterTrainer:
             max_gradients=spec.max_gradients, seed=spec.seed,
             faults=spec.faults, accuracy_fn=accuracy_fn,
             transport_kind=spec.transport,
-            # worker processes rebuild the workload from the spec (the
-            # registry is the contract; code never crosses the boundary)
-            spec_dict=spec.to_dict() if spec.transport == "proc"
+            # worker processes / joining hosts rebuild the workload from
+            # the spec (the registry is the contract; code never crosses
+            # the boundary)
+            spec_dict=spec.to_dict() if spec.transport in ("proc",
+                                                           "host")
             else None,
+            listen=spec.listen,
+            # proc children connect as fast as JAX compiles (180s
+            # default is plenty); host workers are started by a human
+            # in another terminal, possibly on other machines — give
+            # the documented two-terminal quickstart a 10-minute
+            # window (scripted runs bound it with a hard timeout)
+            proc_ready_timeout_s=600.0 if spec.transport == "host"
+            else 180.0,
             ckpt_dir=ckpt_dir, resume_from=self.resume_from,
             verbose=self.verbose)
         if ckpt_dir is not None and self.ckpt_dir is None:
             runtime.events.append({"t": 0.0,
                                    "event": "ckpt_dir_provisioned",
                                    "path": ckpt_dir})
+        return runtime
+
+    def finish(self, runtime: ClusterRuntime,
+               spec: "ExperimentSpec") -> "RunResult":
+        """Run a runtime built by :meth:`build_runtime` and adapt the
+        result."""
+        from repro.api.result import RunResult
         t0 = time.time()
         cres = runtime.run()
         self.last_params = cres.final_params
-        return RunResult.from_cluster(cres, spec=spec,
-                                      wall_s=time.time() - t0)
+        result = RunResult.from_cluster(cres, spec=spec,
+                                        wall_s=time.time() - t0)
+        if runtime.listen_address is not None:
+            bind_host, bind_port = runtime.listen_address
+            result.extra["listen"] = f"{bind_host}:{bind_port}"
+        return result
+
+    def run(self, spec: "ExperimentSpec") -> "RunResult":
+        return self.finish(self.build_runtime(spec), spec)

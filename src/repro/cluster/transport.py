@@ -46,7 +46,10 @@ from typing import Any, Optional, Protocol
 #            (length-prefixed slab frames): the wire format is physical
 #   proc   — one OS process per worker over Unix-domain sockets: stale
 #            reads, stragglers, and SIGKILL worker death are physical
-TRANSPORTS = ("inproc", "socket", "proc")
+#   host   — the leader binds a routable --listen HOST:PORT and remote
+#            workers join it themselves (`python -m repro join`): the
+#            address, the discovery, and the machine boundary are real
+TRANSPORTS = ("inproc", "socket", "proc", "host")
 
 
 @dataclasses.dataclass

@@ -2,17 +2,20 @@
 
 One parametrized battery run against every :class:`repro.cluster.
 transport.Transport` implementation — ``InProcTransport``,
-``SocketTransport`` (TCP and Unix-domain), and ``ProcTransport`` —
-pinning the semantics the cluster runtime relies on: per-worker FIFO
-gradient delivery with bitwise payload integrity, end-to-end
-backpressure on a full channel (with exact conservation through it),
-the ``fetch_params(min_version=...)`` sync barrier, the
-version-goes-*backwards* broadcast a checkpoint restore produces, and
-the uniform timeout contract (``None`` blocks, ``<= 0`` polls).
+``SocketTransport`` (TCP and Unix-domain), ``ProcTransport``, and the
+multi-host ``HostTransport`` — pinning the semantics the cluster
+runtime relies on: per-worker FIFO gradient delivery with bitwise
+payload integrity, end-to-end backpressure on a full channel (with
+exact conservation through it), the ``fetch_params(min_version=...)``
+sync barrier, the version-goes-*backwards* broadcast a checkpoint
+restore produces, and the uniform timeout contract (``None`` blocks,
+``<= 0`` polls).
 
 The socket transports are exercised hub + worker-endpoint in one
 process here (the frames still cross a real socket); the end-to-end
-multi-process runs live in ``tests/test_mpcluster.py``.
+multi-process runs live in ``tests/test_mpcluster.py`` and the
+multi-host (leader + joined process groups) runs in
+``tests/test_hostlink.py``.
 """
 import threading
 import time
@@ -20,11 +23,12 @@ import time
 import numpy as np
 import pytest
 
+from repro.cluster.hostlink import HostTransport
 from repro.cluster.mptransport import ProcTransport, SocketTransport
 from repro.cluster.transport import (GradientMsg, InProcTransport,
                                      ParamsMsg)
 
-KINDS = ["inproc", "socket-tcp", "socket-unix", "proc"]
+KINDS = ["inproc", "socket-tcp", "socket-unix", "proc", "host"]
 
 
 def make_pair(kind: str, cap: int):
@@ -38,6 +42,9 @@ def make_pair(kind: str, cap: int):
         return t, t, t.close
     if kind == "proc":
         hub = ProcTransport(cap, family="unix")
+    elif kind == "host":
+        hub = HostTransport(cap, host="127.0.0.1", port=0,
+                            num_workers=4, welcome_config={})
     else:
         hub = SocketTransport(
             cap, family="tcp" if kind == "socket-tcp" else "unix")
