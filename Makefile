@@ -4,7 +4,18 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test quickstart smoke-sim smoke-train smoke-cluster smoke-proc \
-	smoke-host examples bench-server
+	smoke-host examples bench-server bench-serve perf-gate
+
+# Benchmark env tuning (standard JAX-on-CPU serving practice): force a
+# small multi-device host topology so device placement is exercised,
+# and preload tcmalloc when the box has it — glibc malloc contends
+# visibly under the slab churn.  Empty when absent; never a dependency.
+TCMALLOC := $(firstword $(wildcard /usr/lib/x86_64-linux-gnu/libtcmalloc*.so*))
+BENCH_DEVICES ?= 2
+BENCH_ENV := XLA_FLAGS=--xla_force_host_platform_device_count=$(BENCH_DEVICES)
+ifneq ($(TCMALLOC),)
+BENCH_ENV += LD_PRELOAD=$(TCMALLOC)
+endif
 
 test:
 	$(PY) -m pytest -x -q
@@ -69,8 +80,21 @@ smoke-host:
 # runners are too noisy for a hard >= 2x gate — pass --check locally
 # for the strict version).
 bench-server:
-	timeout 900 $(PY) -m benchmarks.server_throughput --quick \
-	    --out BENCH_server.json
+	timeout 900 env $(BENCH_ENV) $(PY) -m benchmarks.server_throughput \
+	    --quick --out BENCH_server.json
+
+# serving-plane load: the same training run under {0,2} serve clients
+# (CI-sized grid), emitting BENCH_serve.json — training grads/sec,
+# per-client QPS, and p50/p99 params staleness per cell
+bench-serve:
+	timeout 900 env $(BENCH_ENV) $(PY) -m benchmarks.serve_load \
+	    --quick --out BENCH_serve.json
+
+# perf-regression gate: fresh BENCH_server.json flush cells must reach
+# tolerance x the committed baseline (structural cliffs, not CI noise)
+perf-gate:
+	$(PY) -m benchmarks.perf_gate --fresh BENCH_server.json \
+	    --baseline benchmarks/BENCH_server.baseline.json
 
 examples:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,106 @@
+"""Perf-regression gate: diff a fresh BENCH_server.json vs the baseline.
+
+The flush grid's ``slab.grads_per_s`` is the repo's headline server
+number; this gate keeps PRs from silently walking it backwards.  CI
+runs ``make bench-server`` (fresh ``BENCH_server.json``) and then:
+
+  PYTHONPATH=src python -m benchmarks.perf_gate \\
+      --fresh BENCH_server.json \\
+      --baseline benchmarks/BENCH_server.baseline.json
+
+Every (fleet, K) cell present in the baseline must exist in the fresh
+report and reach ``--tolerance`` (default 0.35) of the baseline's slab
+grads/sec.  The tolerance is deliberately loose: CI machines are
+shared and noisy, and the gate exists to catch structural regressions
+(a lost donation, a re-compile per flush — integer-factor cliffs), not
+single-digit-percent jitter.  Missing cells and a missing/partial
+baseline FAIL rather than skip: a gate that silently waves through a
+shrunken grid is not a gate.
+
+Refreshing the baseline after an intentional perf change::
+
+  make bench-server && cp BENCH_server.json \\
+      benchmarks/BENCH_server.baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _flush_cells(report):
+    cells = {}
+    for c in report.get("grid", []):
+        cells[(int(c["fleet"]), int(c["K"]))] = \
+            float(c["slab"]["grads_per_s"])
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="fail when fresh slab grads/sec falls below "
+                    "tolerance x baseline on any flush-grid cell")
+    ap.add_argument("--fresh", default="BENCH_server.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/BENCH_server.baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.35,
+                    help="fresh must reach this fraction of baseline "
+                         "per cell (default 0.35 — catches structural "
+                         "cliffs, ignores CI noise)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate FAIL: cannot read baseline "
+              f"{args.baseline}: {e}", file=sys.stderr)
+        return 1
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate FAIL: cannot read fresh report "
+              f"{args.fresh}: {e}", file=sys.stderr)
+        return 1
+
+    base_cells = _flush_cells(baseline)
+    fresh_cells = _flush_cells(fresh)
+    if not base_cells:
+        print(f"perf gate FAIL: baseline {args.baseline} has no "
+              "flush-grid cells", file=sys.stderr)
+        return 1
+
+    failures = []
+    for key in sorted(base_cells):
+        fleet, k = key
+        base = base_cells[key]
+        got = fresh_cells.get(key)
+        floor = args.tolerance * base
+        if got is None:
+            failures.append(f"fleet={fleet} K={k}: cell missing from "
+                            f"fresh report (baseline {base:.1f} g/s)")
+            continue
+        status = "ok" if got >= floor else "REGRESSED"
+        print(f"fleet={fleet:3d} K={k:3d}: slab {got:9.1f} g/s vs "
+              f"baseline {base:9.1f} (floor {floor:9.1f}) {status}")
+        if got < floor:
+            failures.append(
+                f"fleet={fleet} K={k}: {got:.1f} g/s < "
+                f"{args.tolerance} x baseline {base:.1f}")
+    if failures:
+        print("\nperf gate FAIL:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        print("(intentional change? refresh the baseline: "
+              "make bench-server && cp BENCH_server.json "
+              "benchmarks/BENCH_server.baseline.json)", file=sys.stderr)
+        return 1
+    print(f"perf gate PASS ({len(base_cells)} cells, tolerance "
+          f"{args.tolerance})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,13 @@ def main(argv=None):
 
     print()
     print("#" * 70)
+    print("# Serving-plane load: training throughput + staleness under readers")
+    print("#" * 70)
+    from benchmarks import serve_load
+    serve_load.main(["--quick"] if args.quick else [])
+
+    print()
+    print("#" * 70)
     print("# Kernel microbenchmarks (jnp reference wall-time + TPU roofline)")
     print("#" * 70)
     from benchmarks import kernels

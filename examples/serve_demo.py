@@ -3,8 +3,18 @@ for three different cache families — ring-buffer SWA (danube), MLA latent
 (deepseek), and recurrent SSM state (xlstm).
 
   PYTHONPATH=src python examples/serve_demo.py
+
+``--live`` runs the whole serving plane in one process instead: an
+``lm-tiny`` training leader bound to a loopback port, one joined worker
+training against it, and a read-only :class:`repro.serve.ServeClient`
+that greedy-decodes the same prompt against three *successive* pushed
+params versions — the tokens change under the reader's feet as the
+fleet trains, which is the point.
+
+  PYTHONPATH=src python examples/serve_demo.py --live
 """
 import dataclasses
+import sys
 import time
 
 import jax
@@ -13,6 +23,63 @@ import numpy as np
 from repro.configs.registry import get_config, smoke_variant
 from repro.launch.serve import greedy_generate
 from repro.models import model as M
+
+
+def live_main():
+    import threading
+
+    from repro.api import ExperimentSpec
+    from repro.cluster.hostlink import run_joined_worker
+    from repro.cluster.trainer import ClusterTrainer
+    from repro.serve.client import ServeClient
+    from repro.serve.workload import build_infer_adapter
+
+    spec = ExperimentSpec(
+        arch="lm-tiny", backend="cluster", mode="async", smoke=True,
+        cluster_workers=1, wall_budget_s=45.0, wall_sample_every_s=45.0,
+        batch=16, transport="host", listen="127.0.0.1:0")
+    trainer = ClusterTrainer()
+    runtime = trainer.build_runtime(spec)
+    addr = runtime.listen_address
+    print(f"[demo] leader on {addr[0]}:{addr[1]} — one worker joining, "
+          "one read-only serve client subscribing")
+
+    result = {}
+    leader = threading.Thread(
+        target=lambda: result.update(
+            res=trainer.finish(runtime, spec)), daemon=True)
+    leader.start()
+    worker = threading.Thread(
+        target=run_joined_worker, args=(addr,),
+        kwargs={"connect_timeout": 60.0, "verbose": False}, daemon=True)
+    worker.start()
+
+    client = ServeClient(addr)
+    adapter = build_infer_adapter(spec, batch=1, prompt_len=6, gen_len=8)
+    try:
+        last = -1
+        for i in range(3):
+            msg = client.wait_params(min_version=last + 1, timeout=30.0)
+            if msg is None:
+                print("[demo] no fresh params within 30s — leader gone?")
+                return 1
+            last = msg.version
+            params = adapter.decode(msg.params)
+            out = adapter.run(params, i)
+            print(f"[demo] generation {i + 1}: params v{msg.version} — "
+                  f"{adapter.summary(out)}")
+            time.sleep(1.0)      # let training move the params
+    finally:
+        client.close()
+    print("[demo] the same prompt, three params versions, three "
+          "different continuations: serving reads a live training run.")
+    runtime.server.done.set()    # demo over — wrap the run up early
+    leader.join(timeout=90.0)
+    res = result.get("res")
+    if res is not None:
+        print(f"[demo] training report: {res.num_gradients} gradients "
+              f"applied, serving {res.extra.get('serving')}")
+    return 0
 
 
 def main():
@@ -32,4 +99,6 @@ def main():
 
 
 if __name__ == "__main__":
+    if "--live" in sys.argv[1:]:
+        sys.exit(live_main())
     main()

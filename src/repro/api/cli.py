@@ -12,6 +12,9 @@ Subcommands:
   join      join a cluster leader as one or more workers: the spec
             arrives over the wire, the workload is rebuilt locally
             (repro.cluster.hostlink)
+  infer     connect to a training leader as a read-only serve client:
+            stream fresh params and run inference on every pushed
+            version (repro.serve)
   dryrun    multi-pod lower/compile analysis (repro.launch.dryrun, with
             the 512 forced host devices set up before jax imports)
   bench     paper tables + kernel microbenches (benchmarks.run)
@@ -29,6 +32,7 @@ Examples:
   python -m repro serve --listen 0.0.0.0:5555 --arch mlp \
       --cluster-workers 2 --wall-budget 30
   python -m repro join LEADER_HOST:5555 --workers 2
+  python -m repro infer LEADER_HOST:5555 --requests 8
   python -m repro run --spec experiment.json
 """
 from __future__ import annotations
@@ -81,6 +85,13 @@ _SPEC_FLAGS = [
      "cluster: metric grid spacing (real seconds)"),
     ("--max-gradients", "max_gradients", int,
      "cluster: stop after N applied gradients"),
+    ("--heartbeat", "heartbeat_s", float,
+     "cluster host transport: leader-liveness PING cadence in seconds "
+     "(0 disables; workers and serve clients size their hung-leader "
+     "watchdog from it)"),
+    ("--serve-every", "serve_every", int,
+     "serving plane: push every Nth params version to serve clients "
+     "(staleness-vs-bandwidth knob; default 1 = every version)"),
 ]
 # fault-plan flags (cluster backend): merged into spec.faults
 _FAULT_FLAGS = [
@@ -256,6 +267,47 @@ def _cmd_join(rest: List[str]) -> int:
     os._exit(code)
 
 
+def _cmd_infer(rest: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro infer",
+        description="read-only serve client: subscribe to a training "
+                    "leader's params broadcast and run inference on "
+                    "every pushed version (repro.serve) — the leader's "
+                    "WELCOME carries the spec, so this host only needs "
+                    "the repro package")
+    ap.add_argument("address", metavar="HOST:PORT",
+                    help="the leader's listen address "
+                         "(repro serve --listen HOST:PORT)")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="run this many inference requests (default 8)")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="stop after this many seconds even if "
+                         "--requests has not been reached")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="inference batch size (prompts per request)")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="prompt length in tokens (lm archs)")
+    ap.add_argument("--gen-len", type=int, default=8,
+                    help="tokens to generate per request (lm archs)")
+    ap.add_argument("--connect-timeout", type=float, default=60.0,
+                    help="keep retrying the leader for this many "
+                         "seconds (the leader may not be up yet)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-request logs")
+    args = ap.parse_args(rest)
+    from repro.serve.client import infer_main
+    code = infer_main(args.address, requests=args.requests,
+                      duration_s=args.duration, batch=args.batch,
+                      prompt_len=args.prompt_len, gen_len=args.gen_len,
+                      connect_timeout=args.connect_timeout,
+                      verbose=not args.quiet)
+    sys.stdout.flush()
+    sys.stderr.flush()
+    # skip interpreter finalization: this process ran a JAX runtime (see
+    # _cmd_join)
+    os._exit(code)
+
+
 def _cmd_serve_leader(rest: List[str]) -> int:
     """``repro serve --listen HOST:PORT`` — the multi-host leader: sugar
     for ``run --backend cluster --transport host --listen ...``."""
@@ -335,6 +387,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     if argv and argv[0] == "join":
         # dispatched before the main parse (positional HOST:PORT)
         return _cmd_join(argv[1:])
+    if argv and argv[0] == "infer":
+        return _cmd_infer(argv[1:])
     if argv and argv[0] in _PASSTHROUGH:
         return _cmd_passthrough(argv[0], argv[1:])
 
@@ -352,6 +406,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         sub.add_parser(name, help=hlp, add_help=False)
     sub.add_parser("join", help="join a cluster leader as one or more "
                                 "workers (join HOST:PORT --workers N)",
+                   add_help=False)
+    sub.add_parser("infer", help="read-only serve client: stream fresh "
+                                 "params from a training leader and run "
+                                 "inference (infer HOST:PORT)",
                    add_help=False)
     sub.add_parser("schedules", help="list threshold-schedule families")
 

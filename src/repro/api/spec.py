@@ -74,6 +74,14 @@ class ExperimentSpec:
     #                                HOST:PORT (port 0 = pick; the
     #                                resolved address is printed and
     #                                recorded in the run's events)
+    heartbeat_s: float = 2.0       # host transport: leader-liveness PING
+    #                                cadence (0 disables; workers and
+    #                                serve clients size their hung-leader
+    #                                watchdog from it)
+    serve_every: int = 1           # serving plane: push every Nth params
+    #                                version to serve clients (the
+    #                                staleness-vs-bandwidth knob; 1 =
+    #                                every version)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -112,6 +120,12 @@ class ExperimentSpec:
         if self.max_gradients is not None and self.max_gradients <= 0:
             raise ValueError(f"max_gradients must be None or > 0, "
                              f"got {self.max_gradients!r}")
+        if self.heartbeat_s < 0:
+            raise ValueError(f"heartbeat_s must be >= 0 (0 disables), "
+                             f"got {self.heartbeat_s!r}")
+        if self.serve_every < 1:
+            raise ValueError(f"serve_every must be >= 1, "
+                             f"got {self.serve_every!r}")
 
     # --------------------------------------------------------- derivation
     def with_(self, **changes) -> "ExperimentSpec":

@@ -91,10 +91,18 @@ def _cnn_workload(dataset_name: str, image_shape):
     return build
 
 
+def _lm_tiny_workload(spec: ExperimentSpec):
+    # lazy import: the serving-plane workload pulls in the full model
+    # stack, which classifier-only runs never need
+    from repro.serve.workload import lm_tiny_workload
+    return lm_tiny_workload(spec)
+
+
 register_sim_workload("mlp", _mlp_workload)
 register_sim_workload("cnn-mnist", _cnn_workload("mnist_like", (28, 28, 1)))
 register_sim_workload("cnn-cifar", _cnn_workload("cifar10_like",
                                                  (32, 32, 3)))
+register_sim_workload("lm-tiny", _lm_tiny_workload)
 
 
 # ------------------------------------------------------------- adapters

@@ -37,6 +37,18 @@ The leader cannot respawn a remote worker (it does not own the remote
 machine) — a kill fault on this transport cuts the worker's connection
 (a network fault; the remote process exits cleanly on EOF), and
 replacement capacity rejoins from its own host.
+
+**Serve handshake** — same shape, no lease::
+
+    serve client                    leader (hub)
+      | -- SERVE(magic, v) -------->|   admit read-only
+      | <-- WELCOME{spec, serve_id, |   (or REJECT + readable reason)
+      |      heartbeat_s, ...} -----|
+      | <==== PARAMS ... PING ======|   coalesced params + liveness
+      | ----- PONG ... ------------>|
+
+``python -m repro infer HOST:PORT`` (see :mod:`repro.serve.client`)
+drives this to run inference against live training params.
 """
 from __future__ import annotations
 
@@ -51,10 +63,11 @@ import time
 import traceback
 from typing import Any, Dict, Optional, Tuple
 
-from repro.cluster.mptransport import (_CTRL, _F_PARAMS, _F_REJECT,
-                                       _F_WELCOME, _HDR, _MAX_FRAME,
-                                       _join_frame, _peer_error,
-                                       _recv_exact, _welcome_frame,
+from repro.cluster.mptransport import (_CTRL, _F_PARAMS, _F_PING,
+                                       _F_PONG, _F_REJECT, _F_WELCOME,
+                                       _HDR, _MAX_FRAME, _join_frame,
+                                       _peer_error, _recv_exact,
+                                       _serve_frame, _welcome_frame,
                                        SocketTransport, SocketWorkerClient,
                                        WireProtocolError)
 
@@ -110,14 +123,25 @@ class HostTransport(SocketTransport):
     ``worker_id`` lease, ``generation``, and ``num_workers`` — the whole
     contract a remote host needs to rebuild the workload and claim its
     data shard.
+
+    The host hub is also the one that admits **serve clients** (read-only
+    SERVE peers — ``python -m repro infer``): they get a WELCOME carrying
+    the spec (to rebuild the model for inference) plus a ``serve_id``,
+    and then just receive the coalesced params broadcast.  They hold no
+    worker-id lease and never enter the fleet barrier or the ledger.
+    ``heartbeat_s`` is the leader-liveness PING cadence (workers and
+    serve clients size their hung-leader watchdog from it via WELCOME);
+    ``serve_every`` down-samples the serve-plane push stream.
     """
 
     def __init__(self, grad_capacity: int = 0, *,
                  host: str = "127.0.0.1", port: int = 0,
                  num_workers: int, welcome_config:
-                 Optional[Dict[str, Any]] = None):
+                 Optional[Dict[str, Any]] = None,
+                 heartbeat_s: float = 2.0, serve_every: int = 1):
         super().__init__(grad_capacity, family="tcp", host=host,
-                         port=port)
+                         port=port, heartbeat_s=heartbeat_s,
+                         serve_every=serve_every)
         self.num_workers = int(num_workers)
         self.welcome_config = dict(welcome_config or {})
         self._leases: Dict[int, int] = {}       # worker_id -> generation
@@ -162,9 +186,27 @@ class HostTransport(SocketTransport):
             conn.leased_wid = wid
         cfg = dict(self.welcome_config)
         cfg.update(worker_id=wid, generation=generation,
-                   num_workers=self.num_workers)
+                   num_workers=self.num_workers,
+                   heartbeat_s=self.heartbeat_s)
         conn.send_frame(_welcome_frame(cfg))
         _log.info("leased worker id %d (generation %d)", wid, generation)
+        return None
+
+    def _on_serve(self, conn) -> Optional[str]:
+        """Admit a read-only serve client: no lease, no shard, no
+        barrier seat — just a serve_id for the stats and a WELCOME
+        carrying the spec so the client can rebuild the model."""
+        with self._lease_lock:
+            sid = self._serve_seq
+            self._serve_seq += 1
+        conn.is_serve = True
+        conn.serve_id = sid
+        cfg = dict(self.welcome_config)
+        cfg.update(role="serve", serve_id=sid,
+                   heartbeat_s=self.heartbeat_s,
+                   serve_every=self.serve_every)
+        conn.send_frame(_welcome_frame(cfg))
+        _log.info("admitted serve client %d (read-only)", sid)
         return None
 
     def _admit_hello(self, conn, worker_id: int,
@@ -252,7 +294,10 @@ def negotiate_join(address: Any, *, worker_id: Optional[int] = None,
         try:
             sock = _connect_retry(host, int(port),
                                   max(0.0, deadline - time.monotonic()))
-            return sock, _join_handshake(sock, worker_id, deadline)
+            frame = _join_frame(-1 if worker_id is None
+                                else int(worker_id))
+            return sock, _leader_handshake(sock, frame, deadline,
+                                           what="join")
         except WireProtocolError as e:
             if sock is not None:
                 sock.close()    # idempotent (handshake closes on fail)
@@ -273,8 +318,28 @@ def negotiate_join(address: Any, *, worker_id: Optional[int] = None,
             raise
 
 
-def _join_handshake(sock: socket.socket, worker_id: Optional[int],
-                    deadline: float) -> Dict[str, Any]:
+def negotiate_serve(address: Any, *, connect_timeout: float = 30.0
+                    ) -> Tuple[socket.socket, Dict[str, Any]]:
+    """The SERVE handshake: connect read-only, return ``(connected
+    socket, welcome config)``.  No lease, so no busy-retry loop — a
+    rejection is always permanent (wrong hub kind, incompatible
+    build) and raises :class:`WireProtocolError` with the leader's
+    readable reason."""
+    host, port = parse_hostport(address) if isinstance(address, str) \
+        else tuple(address)[:2]
+    deadline = time.monotonic() + max(0.0, connect_timeout)
+    sock = _connect_retry(host, int(port),
+                          max(0.0, connect_timeout))
+    return sock, _leader_handshake(sock, _serve_frame(), deadline,
+                                   what="serve")
+
+
+def _leader_handshake(sock: socket.socket, request: bytes,
+                      deadline: float, what: str = "join"
+                      ) -> Dict[str, Any]:
+    """Send one request frame (JOIN or SERVE) and read frames until the
+    leader answers WELCOME (returned as the parsed config) or REJECT
+    (raised with the leader's reason)."""
     ok = False
     try:
         # re-armed per frame: the deadline covers the WHOLE negotiation
@@ -283,18 +348,17 @@ def _join_handshake(sock: socket.socket, worker_id: Optional[int],
         # the joiner looping past it (floor keeps a zero/negative
         # remainder from meaning "no timeout")
         sock.settimeout(max(0.1, deadline - time.monotonic()))
-        sock.sendall(_join_frame(-1 if worker_id is None
-                                 else int(worker_id)))
+        sock.sendall(request)
         while True:
             if time.monotonic() > deadline:
                 raise WireProtocolError(
-                    "leader did not complete the join handshake "
+                    f"leader did not complete the {what} handshake "
                     "within the deadline")
             sock.settimeout(max(0.1, deadline - time.monotonic()))
             hdr, _ = _recv_exact(sock, _HDR.size)
             if hdr is None:
                 raise WireProtocolError(
-                    "leader hung up during the join handshake")
+                    f"leader hung up during the {what} handshake")
             ftype, n = _HDR.unpack(hdr)
             if n > _MAX_FRAME:
                 raise WireProtocolError(
@@ -303,10 +367,12 @@ def _join_handshake(sock: socket.socket, worker_id: Optional[int],
             payload, _ = _recv_exact(sock, n)
             if payload is None:
                 raise WireProtocolError(
-                    "leader hung up mid-frame during the join handshake")
-            if ftype == _F_PARAMS:
-                continue        # a broadcast racing the handshake; the
-                #                 hub re-pushes current params on HELLO
+                    f"leader hung up mid-frame during the {what} "
+                    "handshake")
+            if ftype in (_F_PARAMS, _F_PING, _F_PONG):
+                continue        # broadcasts/liveness racing the
+                #                 handshake; the hub re-pushes current
+                #                 params once the peer authenticates
             if n < _CTRL.size:
                 raise WireProtocolError(
                     f"malformed handshake frame (type {ftype}, "
@@ -318,7 +384,7 @@ def _join_handshake(sock: socket.socket, worker_id: Optional[int],
             body = payload[_CTRL.size:]
             if ftype == _F_REJECT:
                 raise WireProtocolError(
-                    "leader rejected the join: "
+                    f"leader rejected the {what}: "
                     + body.decode("utf-8", "replace"))
             if ftype != _F_WELCOME:
                 raise WireProtocolError(
@@ -391,9 +457,15 @@ def run_joined_worker(address: Any, *,
         grad, fresh_batches = build_slab_worker_fn(
             spec, wid, num_workers, generation,
             batch=spec.batch, seed=spec.seed)
+        # hung-leader watchdog, sized from the leader's own PING
+        # cadence (announced in WELCOME): generous multiple, so a GC
+        # pause or one slow flush never false-positives
+        hb = float(cfg.get("heartbeat_s") or 0.0)
+        stall_timeout = max(10.0, 5.0 * hb) if hb > 0 else 0.0
         # HELLO == ready: connect into the fleet barrier only now, so
         # the leader's serving clock never measures our compile time
         client = SocketWorkerClient(None, wid, generation=generation,
+                                    heartbeat_timeout_s=stall_timeout,
                                     sock=sock)
     except Exception:
         traceback.print_exc()
@@ -424,6 +496,10 @@ def run_joined_worker(address: Any, *,
         print(f"[join] worker {wid}.{generation} was rejected: "
               f"{client.reject_reason}", file=sys.stderr, flush=True)
         return 4
+    if client.stall_reason:
+        print(f"[join] worker {wid}.{generation} gave up: "
+              f"{client.stall_reason}", file=sys.stderr, flush=True)
+        return 5
     if verbose:
         print(f"[join] worker {wid}.{generation} done: {worker.sent} "
               "gradients sent", flush=True)

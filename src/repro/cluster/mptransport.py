@@ -24,6 +24,9 @@ no per-leaf serialization.  The format is **versioned and pinned**::
     REJECT  := !IH utf-8      magic, proto, readable reason   (hub ->)
     GRAD    := !IiQ raw-slab  worker_id, version, seq
     PARAMS  := !ii  raw-slab  version, restore-epoch          (hub ->)
+    SERVE   := !IH            magic, proto — read-only subscribe
+    PING    := !IH            magic, proto — leader liveness  (hub ->)
+    PONG    := !IH            magic, proto — liveness reply
 
 ``raw-slab`` is the ``(P_pad,)`` slab as **little-endian ``<f4``** —
 pinned on both encode and decode (a big-endian host byteswaps at the
@@ -73,6 +76,29 @@ importing JAX must not stall a sync barrier it cannot contribute to.
 ``hold_params``/``release_params`` implement the fleet-ready barrier's
 starting gun: until release, connected workers idle in
 ``fetch_params`` instead of banking gradients before the clock starts.
+
+**Serving plane**: a peer whose first frame is SERVE (instead of
+HELLO/JOIN) becomes a *read-only* subscriber to the params broadcast.
+Serve connections never claim a ``worker_id``, so every membership
+surface — the fleet barrier, ``live_workers``, ``received_counts`` and
+with it the conservation ledger — excludes them for free, and a SERVE
+peer that tries to send a GRAD frame is rejected like any
+unidentified sender.  The publish path is already slow-reader-safe for
+them: ``publish_params`` only swaps a frame pointer under a lock
+(never writes a socket), each connection has its own writer thread,
+and coalescing means a stalled reader costs the hub exactly one wedged
+writer — never a torn or delayed flush.  ``serve_every`` down-samples
+the push stream per serve connection (every Nth version), trading
+client-visible staleness for broadcast bandwidth; ``serve_stats``
+reports per-client push/version/skip counters.
+
+**Liveness**: with ``heartbeat_s > 0`` the hub PINGs every
+authenticated connection on that cadence (never a silent stray — the
+model-withholding rule extends to control frames).  Clients reply PONG
+(ignored beyond updating receive timestamps) and treat *any* frame as
+proof of life, so a worker or serve client can distinguish a hung
+leader — process alive, event loop wedged — from a merely quiet one,
+and exit with a readable error instead of waiting forever.
 """
 from __future__ import annotations
 
@@ -109,6 +135,7 @@ _PARAMS = struct.Struct("!ii")       # version, restore epoch
 
 _F_HELLO, _F_GRAD, _F_PARAMS, _F_JOIN, _F_WELCOME, _F_REJECT = \
     1, 2, 3, 4, 5, 6
+_F_SERVE, _F_PING, _F_PONG = 7, 8, 9
 
 # one frame must fit in memory several times over; anything bigger is a
 # corrupted header (e.g. a reader that lost frame sync), not a real slab
@@ -197,6 +224,19 @@ def _reject_frame(reason: str) -> bytes:
     return _ctrl_frame(_F_REJECT, reason.encode("utf-8"))
 
 
+def _serve_frame() -> bytes:
+    """Read-only subscribe request (client -> hub, first frame)."""
+    return _ctrl_frame(_F_SERVE, b"")
+
+
+def _ping_frame() -> bytes:
+    return _ctrl_frame(_F_PING, b"")
+
+
+def _pong_frame() -> bytes:
+    return _ctrl_frame(_F_PONG, b"")
+
+
 def _peer_error(magic: int, proto: int) -> Optional[str]:
     """Reject reason for a bad protocol identity, or None when valid."""
     if magic != _MAGIC:
@@ -226,8 +266,16 @@ class _Conn:
         self.sock = sock
         self.worker_id: Optional[int] = None
         self.generation = 0
-        self.authenticated = False          # valid HELLO or JOIN seen
+        self.authenticated = False          # valid HELLO/JOIN/SERVE seen
         self.leased_wid: Optional[int] = None   # set by a JOIN lease
+        # serving plane: read-only params subscribers.  worker_id stays
+        # None for them, which is what keeps every membership surface
+        # (barrier, ledger, live_workers) worker-only with no new code
+        self.is_serve = False
+        self.serve_id: Optional[int] = None
+        self.pushes = 0                     # params frames shipped
+        self.last_pushed_version: Optional[int] = None
+        self.skipped_pushes = 0             # down-sampled by serve_every
         self.closed = threading.Event()
         self._params_ev = threading.Event()
         self._last_sent: Optional[bytes] = None
@@ -263,9 +311,17 @@ class _Conn:
                         "one connection holds at most one lease")
             return None if n == _JOIN.size else \
                 f"JOIN frame has length {n}, expected {_JOIN.size}"
+        if ftype == _F_SERVE:
+            if self.authenticated:
+                return ("SERVE on an already-authenticated connection "
+                        "— a trainer cannot demote itself to a reader "
+                        "mid-stream")
+            return None if n == _CTRL.size else \
+                f"SERVE frame has length {n}, expected {_CTRL.size}"
         if not self.authenticated:
-            return (f"first frame has type {ftype}, not HELLO/JOIN — "
-                    "peer is not speaking the repro slab protocol")
+            return (f"first frame has type {ftype}, not "
+                    "HELLO/JOIN/SERVE — peer is not speaking the repro "
+                    "slab protocol")
         if n > _MAX_FRAME:
             return (f"frame length {n} exceeds the {_MAX_FRAME}-byte "
                     "maximum — peer lost frame sync")
@@ -314,10 +370,24 @@ class _Conn:
                         self.hub._reject(self, err)
                         break
                     self.authenticated = True
+                elif ftype == _F_SERVE:
+                    magic, proto = _CTRL.unpack(payload)
+                    err = _peer_error(magic, proto) \
+                        or self.hub._on_serve(self)
+                    if err is not None:
+                        self.hub._reject(self, err)
+                        break
+                    self.authenticated = True
+                    self.hub._on_serve_ready(self)
+                elif ftype == _F_PONG:
+                    pass                    # liveness reply; receipt
+                    #                         alone is the signal
                 elif ftype == _F_GRAD:
                     if self.worker_id is None:
                         self.hub._reject(
-                            self, "GRAD frame before HELLO — the peer "
+                            self, "GRAD frame from a read-only serve "
+                                  "client" if self.is_serve else
+                                  "GRAD frame before HELLO — the peer "
                                   "never identified itself")
                         break
                     wid, version, seq = _GRAD.unpack(
@@ -368,9 +438,24 @@ class _Conn:
             if frame is None or frame is self._last_sent \
                     or not self.authenticated:
                 continue
+            if self.is_serve:
+                version, = _PARAMS.unpack_from(frame, _HDR.size)[:1]
+                every = max(1, self.hub.serve_every)
+                if every > 1 and version % every and version != 0:
+                    # the staleness-vs-throughput knob: serve clients
+                    # only get every Nth version (version 0 — the
+                    # initial model — always ships), so a reader can
+                    # run up to N-1 versions stale in exchange for
+                    # 1/N of the broadcast bandwidth
+                    self._last_sent = frame
+                    self.skipped_pushes += 1
+                    continue
             if not self.send_frame(frame):
                 break
             self._last_sent = frame
+            if self.is_serve:
+                self.pushes += 1
+                self.last_pushed_version = version
 
     # ------------------------------------------------------------- misc
     def half_close(self) -> None:
@@ -420,9 +505,12 @@ class SocketTransport:
     """
 
     def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0,
+                 heartbeat_s: float = 0.0, serve_every: int = 1):
         assert family in ("unix", "tcp"), family
         self.family = family
+        self.heartbeat_s = float(heartbeat_s)   # 0 = no PINGs
+        self.serve_every = max(1, int(serve_every))
         self._sockdir: Optional[str] = None
         if family == "unix":
             self._sockdir = tempfile.mkdtemp(prefix="repro-slab-hub-")
@@ -460,9 +548,19 @@ class SocketTransport:
         # barrier it cannot yet contribute to
         self.on_worker_ready: Optional[Any] = None
         self.on_worker_gone: Optional[Any] = None
+        # serving-plane hook + admission counter (see _on_serve)
+        self.on_serve_ready: Optional[Any] = None
+        self._serve_seq = 0
+        self._serve_conns: List[_Conn] = []     # every admitted, ever
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="hub-accept", daemon=True)
         self._accept_thread.start()
+        self._hb_thread: Optional[threading.Thread] = None
+        if self.heartbeat_s > 0:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, name="hub-heartbeat",
+                daemon=True)
+            self._hb_thread.start()
 
     # ------------------------------------------------------- accept side
     def _accept_loop(self) -> None:
@@ -500,6 +598,56 @@ class SocketTransport:
         implements it; anything else tells the peer to HELLO directly."""
         return ("this hub does not negotiate worker-id leases (not a "
                 "host transport) — connect with HELLO")
+
+    def _on_serve(self, conn: _Conn) -> Optional[str]:
+        """SERVE (read-only subscribe) hook — only the multi-host hub
+        admits serve clients; the plain hub has no spec to hand them
+        and no serving story."""
+        return ("this hub does not admit serve clients (not a host "
+                "transport) — point `repro infer` at a training leader")
+
+    def _on_serve_ready(self, conn: _Conn) -> None:
+        """An admitted serve connection just authenticated: arm its
+        params push (same re-arm as HELLO — a negotiated handshake may
+        have consumed the pre-auth push client-side) and surface it."""
+        with self._conns_cond:
+            self._serve_conns.append(conn)
+        conn._last_sent = None
+        conn.notify_params()
+        if self.on_serve_ready is not None:
+            self.on_serve_ready(conn.serve_id)
+
+    def _heartbeat_loop(self) -> None:
+        """PING every authenticated connection on the heartbeat cadence.
+        A short lock timeout keeps a writer wedged against one stalled
+        peer from delaying liveness for everyone else."""
+        frame = _ping_frame()
+        while not self._closed.wait(self.heartbeat_s):
+            with self._conns_cond:
+                conns = [c for c in self._conns
+                         if c.authenticated and not c.closed.is_set()]
+            for conn in conns:
+                conn.send_frame(frame, lock_timeout=0.2)
+
+    def serve_stats(self) -> Dict[str, Any]:
+        """Per-serve-client push accounting (the serving-plane half of
+        the run report): how many params versions each client was sent,
+        the last version it got, and how many pushes the ``serve_every``
+        down-sampling skipped."""
+        with self._conns_cond:
+            conns = list(self._serve_conns)
+        return {
+            "clients": len(conns),
+            "rejected_peers": self.rejected_peers,
+            "serve_every": self.serve_every,
+            "per_client": [
+                {"serve_id": c.serve_id,
+                 "pushes": c.pushes,
+                 "last_version": c.last_pushed_version,
+                 "skipped_pushes": c.skipped_pushes,
+                 "connected": not c.closed.is_set()}
+                for c in conns],
+        }
 
     def _reject(self, conn: _Conn, reason: str) -> None:
         """Turn away a peer with a readable error: logged, counted,
@@ -709,11 +857,14 @@ class SocketTransport:
         """True once every connection reader has drained to EOF (all
         producers must already be stopped/closed).  Interleave with
         ``recv_gradient(timeout=0)`` drains: a reader blocked on the
-        bounded queue needs the caller to make room."""
+        bounded queue needs the caller to make room.  Serve connections
+        are skipped: they produce no gradients, so the conservation
+        ledger owes them nothing — and a lingering read-only subscriber
+        must never hold up training shutdown."""
         deadline = None if timeout is None else \
             time.monotonic() + max(0.0, timeout)
         with self._conns_cond:
-            conns = list(self._conns)
+            conns = [c for c in self._conns if not c.is_serve]
         for conn in conns:
             remain = None if deadline is None else \
                 max(0.0, deadline - time.monotonic())
@@ -733,6 +884,8 @@ class SocketTransport:
         for conn in conns:
             conn.close()
         self._accept_thread.join(timeout=2.0)
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=2.0)
         if self.family == "unix":
             for path in (self.address,):
                 try:
@@ -762,15 +915,26 @@ class SocketWorkerClient:
     :attr:`closed` is set when the connection dies (server shutdown,
     kill, network error); runtimes wire it up as the worker's stop
     event so a dead server can never leave a live worker spinning.
+
+    ``heartbeat_timeout_s > 0`` arms a liveness watchdog: if *no* frame
+    (params, PING, anything) arrives for that long, the leader is
+    declared hung — a state EOF detection can never see, because a
+    wedged process holds its sockets open — :attr:`stall_reason` is set
+    with a readable error and the connection closes, which stops the
+    worker through the usual dead-server path.
     """
 
     def __init__(self, address: Any, worker_id: int, *,
                  generation: int = 0, family: str = "unix",
                  send_capacity: int = 2, connect_timeout: float = 10.0,
+                 heartbeat_timeout_s: float = 0.0,
                  sock: Optional[socket.socket] = None):
         self.worker_id = worker_id
         self.generation = generation
         self.reject_reason: Optional[str] = None
+        self.stall_reason: Optional[str] = None
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+        self._last_rx = time.monotonic()
         if sock is None:
             if family == "unix":
                 sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
@@ -791,6 +955,9 @@ class SocketWorkerClient:
             queue.Queue(maxsize=max(1, send_capacity))
         self._close_lock = threading.Lock()
         self._closed_once = False
+        self._wlock = threading.Lock()      # whole frames only: the
+        #                                     sender thread and PONG
+        #                                     replies share one socket
         self.sock.sendall(_hello_frame(worker_id, generation))
         self._reader = threading.Thread(
             target=self._read_loop, name=f"client-reader-{worker_id}",
@@ -800,6 +967,10 @@ class SocketWorkerClient:
             daemon=True)
         self._reader.start()
         self._sender.start()
+        if self.heartbeat_timeout_s > 0:
+            threading.Thread(target=self._watchdog_loop,
+                             name=f"client-watchdog-{worker_id}",
+                             daemon=True).start()
 
     # ------------------------------------------------------ wire threads
     def _read_loop(self) -> None:
@@ -814,7 +985,17 @@ class SocketWorkerClient:
                 payload, _ = _recv_exact(self.sock, n)
                 if payload is None:
                     break
-                if ftype == _F_PARAMS and n >= _PARAMS.size \
+                self._last_rx = time.monotonic()
+                if ftype == _F_PING:
+                    # reply best-effort; the hub only cares that bytes
+                    # flow back, and a send error surfaces on the next
+                    # gradient anyway
+                    with self._wlock:
+                        try:
+                            self.sock.sendall(_pong_frame())
+                        except OSError:
+                            break
+                elif ftype == _F_PARAMS and n >= _PARAMS.size \
                         and (n - _PARAMS.size) % _SLAB_DTYPE.itemsize \
                         == 0:
                     version, epoch = _PARAMS.unpack(
@@ -844,13 +1025,31 @@ class SocketWorkerClient:
                     return
                 continue
             try:
-                self.sock.sendall(_grad_frame(msg))
+                with self._wlock:
+                    self.sock.sendall(_grad_frame(msg))
             except OSError:
                 # the frame was accepted but never shipped: do NOT
                 # task_done() it — flush() must not claim it landed
                 self._mark_closed()
                 return
             self._sendq.task_done()
+
+    def _watchdog_loop(self) -> None:
+        """Declare the leader hung when no frame of any kind arrives
+        within ``heartbeat_timeout_s`` — then close, so every blocked
+        path (fetch_params, the worker loop) unwinds promptly."""
+        timeout = self.heartbeat_timeout_s
+        while not self.closed.wait(min(timeout / 4.0, 1.0)):
+            idle = time.monotonic() - self._last_rx
+            if idle > timeout:
+                self.stall_reason = (
+                    f"no frames from the hub for {idle:.1f}s (liveness "
+                    f"timeout {timeout:.1f}s) — the leader looks hung; "
+                    "giving up on this connection")
+                _log.warning("worker %d.%d: %s", self.worker_id,
+                             self.generation, self.stall_reason)
+                self.close()
+                return
 
     def _mark_closed(self) -> None:
         self.closed.set()

@@ -89,6 +89,8 @@ class ClusterResult:
     events: List[Dict[str, Any]]   # kills, respawns, checkpoints, restores
     final_params: Any
     wall_s: float
+    # serving plane (host transport only): per-serve-client push stats
+    serving: Optional[Dict[str, Any]] = None
 
 
 class ClusterRuntime:
@@ -107,6 +109,7 @@ class ClusterRuntime:
                  transport_kind: str = "inproc",
                  spec_dict: Optional[Dict[str, Any]] = None,
                  listen: Optional[str] = None,
+                 heartbeat_s: float = 2.0, serve_every: int = 1,
                  proc_ready_timeout_s: float = 180.0,
                  verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
@@ -223,7 +226,8 @@ class ClusterRuntime:
             self.transport = HostTransport(
                 cap, host=bind_host, port=bind_port,
                 num_workers=num_workers,
-                welcome_config={"spec": spec_dict})
+                welcome_config={"spec": spec_dict},
+                heartbeat_s=heartbeat_s, serve_every=serve_every)
         else:
             self.transport = InProcTransport(grad_capacity=cap)
         # the resolved bind address (host transport): port 0 in `listen`
@@ -525,6 +529,10 @@ class ClusterRuntime:
                 # (which would flatter the multi-process benchmark)
                 self.transport.on_worker_ready = self._on_remote_ready
                 self.transport.on_worker_gone = self._on_remote_gone
+                if self.transport_kind == "host":
+                    self.transport.on_serve_ready = \
+                        lambda sid: self._log_event("serve_client",
+                                                    serve_id=sid)
                 if self.transport_kind == "proc":
                     for wid in range(self.num_workers):
                         self._spawn(wid)
@@ -675,10 +683,12 @@ class ClusterRuntime:
         # snapshot() already returns a host copy (the donation rule:
         # nothing escaping the server may alias the donated slab)
         _, final_params, applied = self.server.snapshot()
+        serving = self.transport.serve_stats() \
+            if self.transport_kind == "host" else None
         return ClusterResult(
             times=np.asarray(times), train_loss=np.asarray(tr),
             test_loss=np.asarray(te), test_acc=np.asarray(acc),
             num_updates=accounting["updates"], num_gradients=applied,
             mode=self.mode, start_version=start_version,
             accounting=accounting, events=list(self.events),
-            final_params=final_params, wall_s=wall_s)
+            final_params=final_params, wall_s=wall_s, serving=serving)

@@ -95,6 +95,7 @@ class ClusterTrainer:
                                                            "host")
             else None,
             listen=spec.listen,
+            heartbeat_s=spec.heartbeat_s, serve_every=spec.serve_every,
             # proc children connect as fast as JAX compiles (180s
             # default is plenty); host workers are started by a human
             # in another terminal, possibly on other machines — give
@@ -123,6 +124,9 @@ class ClusterTrainer:
         if runtime.listen_address is not None:
             bind_host, bind_port = runtime.listen_address
             result.extra["listen"] = f"{bind_host}:{bind_port}"
+        if cres.serving is not None:
+            # serving-plane report: per-client params-push accounting
+            result.extra["serving"] = cres.serving
         return result
 
     def run(self, spec: "ExperimentSpec") -> "RunResult":

@@ -18,6 +18,22 @@ import numpy as np
 from repro.configs.registry import ARCH_NAMES, get_config, smoke_variant
 from repro.models import model as M
 
+# One jitted decode step per ModelConfig (frozen dataclass -> hashable
+# key).  Params are an *argument*, not a closure capture: capturing
+# them would bake each params pytree into the jaxpr as constants, so
+# every generation — and in the serve loop, every pushed params
+# version — would recompile.  With params as a tracer the executable
+# is shared across calls and across versions.
+_DECODE_CACHE: dict = {}
+
+
+def _decode_step_fn(cfg):
+    fn = _DECODE_CACHE.get(cfg)
+    if fn is None:
+        fn = jax.jit(lambda p, c, t, i: M.decode_step(p, c, t, i, cfg))
+        _DECODE_CACHE[cfg] = fn
+    return fn
+
 
 def greedy_generate(cfg, params, prompts: np.ndarray, gen_len: int,
                     max_seq: int = 0):
@@ -31,8 +47,10 @@ def greedy_generate(cfg, params, prompts: np.ndarray, gen_len: int,
     max_seq = max_seq or (P + gen_len)
     cache = M.init_cache(cfg, B, max_seq)
 
-    decode = jax.jit(
-        lambda c, t, i: M.decode_step(params, c, t, i, cfg))
+    step = _decode_step_fn(cfg)
+
+    def decode(c, t, i):
+        return step(params, c, t, i)
 
     # prefill by replaying the prompt through decode steps (cache-exact;
     # a fused prefill that bulk-writes the cache is the TPU fast path and

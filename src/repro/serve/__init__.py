@@ -1,0 +1,15 @@
+"""repro.serve — the live serving plane.
+
+Read-only SERVE peers that stream fresh params from a training leader
+over the slab wire and run inference on every pushed version — the
+user-visible half of the K(t) freshness/throughput trade.
+"""
+from repro.serve.client import ServeClient, infer_main
+from repro.serve.workload import (LMAdapter, ProbeAdapter,
+                                  build_infer_adapter, lm_tiny_config,
+                                  lm_tiny_workload)
+
+__all__ = [
+    "ServeClient", "infer_main", "LMAdapter", "ProbeAdapter",
+    "build_infer_adapter", "lm_tiny_config", "lm_tiny_workload",
+]

@@ -1,0 +1,155 @@
+"""Serving-plane workloads: a tiny trainable LM + inference adapters.
+
+Two pieces live here:
+
+* ``lm-tiny`` — a genuinely *generative* sim workload (registered in
+  :mod:`repro.api.trainers` under that name): a 2-layer attention+MLP
+  decoder from the shared model stack (:mod:`repro.models.model`) small
+  enough to train on CPU in seconds, with float32 params so it rides
+  the pinned ``<f4`` slab wire unchanged.  The synthetic task is
+  next-symbol succession (``label = (token + 1) mod V``): learnable by
+  the embedding/head alone, so the loss drops within a handful of
+  gradients and a serve client can watch generations improve across
+  param versions.
+
+* **Inference adapters** — what a serve client *does* with a decoded
+  params snapshot.  :func:`build_infer_adapter` returns an object with
+  the tiny contract the client loop needs: ``codec`` (the slab codec
+  matching the training leader's params layout), ``decode(slab)`` and
+  ``run(params, i) -> dict``.  ``lm-tiny`` gets real greedy generation
+  (:func:`repro.launch.serve.greedy_generate`, sharing its per-config
+  jitted decode cache); the classifier workloads (``mlp``/``cnn-*``)
+  get a forward-pass probe — a jitted loss on a fixed held-out batch —
+  so ``repro infer`` works against any registered arch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models.config import ATTN, MLP, ModelConfig, uniform_pattern
+
+LM_TINY_SEQ = 16
+
+
+def lm_tiny_config() -> ModelConfig:
+    """The serving demo's model: small enough that init + one forward
+    compile in seconds on CPU, float32 so the params round-trip the
+    slab wire bitwise."""
+    return ModelConfig(
+        name="lm-tiny", arch_type="dense", d_model=64, vocab_size=128,
+        block_pattern=uniform_pattern(ATTN, MLP, 2), num_groups=1,
+        num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
+        tie_embeddings=True, dtype="float32", param_dtype="float32",
+        remat="none", source="repro.serve")
+
+
+def _lm_tiny_data(seed: int, n: int, seq: int, vocab: int):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, vocab, (n, seq)).astype(np.int32)
+    y = ((x + 1) % vocab).astype(np.int32)
+    n_test = max(1, n // 8)
+    return (x[n_test:], y[n_test:], x[:n_test], y[:n_test])
+
+
+def lm_tiny_workload(spec):
+    """``SIM_WORKLOADS`` builder: ``(loss_fn, init_params, data,
+    accuracy_fn)`` with the shared registry contract — ``loss_fn(p, x,
+    y)`` scalar, data = ``(x_tr, y_tr, x_te, y_te)``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+
+    cfg = lm_tiny_config()
+    n = 512 if spec.smoke else 4_096
+    x_tr, y_tr, x_te, y_te = _lm_tiny_data(spec.seed, n, LM_TINY_SEQ,
+                                           cfg.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(spec.seed), cfg)
+
+    def loss(p, x, y):
+        return M.loss_fn(p, {"tokens": x, "labels": y}, cfg)[0]
+
+    def _acc(p, x, y):
+        logits, _ = M.forward(p, {"tokens": x}, cfg)
+        preds = jnp.argmax(logits, axis=-1)
+        return jnp.mean((preds == y).astype(jnp.float32))
+
+    return loss, params, (x_tr, y_tr, x_te, y_te), jax.jit(_acc)
+
+
+# ----------------------------------------------------------- adapters
+
+
+class LMAdapter:
+    """Greedy generation against pushed params (``lm-tiny``)."""
+
+    kind = "lm"
+
+    def __init__(self, spec, *, batch: int = 2, prompt_len: int = 8,
+                 gen_len: int = 8):
+        import jax
+
+        from repro.core.slab import slab_codec
+        from repro.models import model as M
+
+        self.cfg = lm_tiny_config()
+        template = M.init_params(jax.random.PRNGKey(spec.seed), self.cfg)
+        self.codec = slab_codec(template)
+        rng = np.random.default_rng(spec.seed)
+        self.prompts = rng.integers(
+            0, self.cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+        self.gen_len = int(gen_len)
+
+    def decode(self, slab):
+        return self.codec.decode(slab)
+
+    def run(self, params, i: int):
+        from repro.launch.serve import greedy_generate
+        out = greedy_generate(self.cfg, params, self.prompts,
+                              self.gen_len)
+        return {"tokens": out[0, -self.gen_len:].tolist(),
+                "n": int(self.prompts.shape[0]) * self.gen_len}
+
+    def summary(self, out) -> str:
+        return f"generated tokens {out['tokens']}"
+
+
+class ProbeAdapter:
+    """Forward-pass probe for the classifier workloads: a jitted loss
+    on one fixed held-out batch — the arch-agnostic 'inference' a serve
+    client can run against any registered sim workload."""
+
+    kind = "probe"
+
+    def __init__(self, spec, *, batch: int = 64):
+        import jax
+
+        from repro.api.trainers import SIM_WORKLOADS
+        from repro.core.slab import slab_codec
+
+        loss, template, data, _ = SIM_WORKLOADS[spec.arch](spec)
+        x_te, y_te = data[2], data[3]
+        self.codec = slab_codec(template)
+        self._probe = (x_te[:batch], y_te[:batch])
+        self._loss = jax.jit(loss)
+
+    def decode(self, slab):
+        return self.codec.decode(slab)
+
+    def run(self, params, i: int):
+        xb, yb = self._probe
+        return {"probe_loss": float(self._loss(params, xb, yb)),
+                "n": int(xb.shape[0])}
+
+    def summary(self, out) -> str:
+        return f"probe loss {out['probe_loss']:.4f}"
+
+
+def build_infer_adapter(spec, *, batch: int = 2, prompt_len: int = 8,
+                        gen_len: int = 8):
+    """The serve client's inference engine for ``spec.arch``:
+    generation for ``lm-tiny``, a forward-pass probe otherwise."""
+    if spec.arch == "lm-tiny":
+        return LMAdapter(spec, batch=batch, prompt_len=prompt_len,
+                         gen_len=gen_len)
+    return ProbeAdapter(spec, batch=max(batch, 64))

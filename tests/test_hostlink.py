@@ -407,7 +407,13 @@ def test_two_host_groups_bitwise_identical_to_inproc():
     the workload from spec JSON fetched over TCP).  Final parameters
     must be bitwise identical — the pinned ``<f4`` wire format, leased
     worker-id shards, and worker-id-ordered sync rounds leave no other
-    outcome."""
+    outcome.
+
+    Two read-only serve clients subscribe to the host run while it
+    trains: they must receive pushes, never claim a barrier seat, and
+    — the serving-plane acceptance bar — leave the training outcome
+    bitwise untouched."""
+    from repro.serve.client import ServeClient
     finals = {}
     trainer = ClusterTrainer()
     res = trainer.run(_host_spec(transport="inproc"))
@@ -422,6 +428,8 @@ def test_two_host_groups_bitwise_identical_to_inproc():
     procs = [spawn_join_process(runtime.listen_address, workers=1,
                                 platform=CHILD_PLATFORM)
              for _ in range(2)]
+    serve_clients = [ServeClient(runtime.listen_address)
+                     for _ in range(2)]
     try:
         res_h = trainer2.finish(runtime, spec)
     finally:
@@ -432,10 +440,19 @@ def test_two_host_groups_bitwise_identical_to_inproc():
             except Exception:
                 p.kill()
                 codes.append("killed")
+        for c in serve_clients:
+            c.close()
     assert codes == [0, 0], codes
     a = _check_conservation(res_h)
     assert a["applied"] == 12 and res_h.num_updates == 6
     finals["host"] = trainer2.last_params
+
+    # the serving plane saw the run but never entered it
+    serving = res_h.extra["serving"]
+    assert serving["clients"] == 2, serving
+    for c in serve_clients:
+        seen = list(c.versions_seen)
+        assert seen and seen == sorted(seen), seen
 
     # resolved address is exposed on the result
     assert res_h.extra["listen"].startswith("127.0.0.1:")

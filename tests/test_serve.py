@@ -1,0 +1,377 @@
+"""Serving-plane conformance tests (``repro.serve`` + SERVE/PING wire).
+
+Four layers:
+
+  * **admission** — SERVE peers are admitted read-only by the host hub
+    only: a plain hub turns them away with a readable reason,
+    version-mismatched serve clients are rejected and counted, and a
+    serve client that tries to send a GRAD frame is rejected before it
+    can touch the ledger.  Serve connections never appear in
+    ``live_workers`` or the fleet barrier;
+  * **publication** — params pushes are version-monotonic per client
+    (no restores in play), ``serve_every`` down-samples the stream, and
+    a stalled serve client (connected, never reading) cannot block
+    ``publish_params`` or a worker's delivery — the slow reader costs
+    exactly one wedged per-connection writer;
+  * **liveness** — the leader PINGs on ``heartbeat_s``; workers and
+    serve clients detect a *hung* (not just dead) leader via the
+    no-frames watchdog and report a readable ``stall_reason``, while a
+    healthy heartbeat keeps an otherwise-idle client alive.  A dead
+    leader (closed hub) strands nobody;
+  * **end to end** — a training leader serves two separately-launched
+    ``python -m repro infer`` processes while joined workers train.
+"""
+import json
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import ExperimentSpec
+from repro.cluster import mptransport as mpt
+from repro.cluster.hostlink import (HostTransport, negotiate_serve,
+                                    spawn_join_process)
+from repro.cluster.mptransport import (SocketTransport,
+                                       SocketWorkerClient,
+                                       WireProtocolError)
+from repro.cluster.trainer import ClusterTrainer
+from repro.cluster.transport import GradientMsg, ParamsMsg
+from repro.serve.client import ServeClient, spawn_infer_process
+
+CHILD_PLATFORM = None if jax.default_backend() == "cpu" else "cpu"
+
+
+def _poll(predicate, timeout_s: float = 5.0, what: str = "condition"):
+    deadline = time.monotonic() + timeout_s
+    while not predicate():
+        assert time.monotonic() < deadline, f"timed out waiting: {what}"
+        time.sleep(0.02)
+
+
+def _host_hub(**kw):
+    kw.setdefault("num_workers", 1)
+    kw.setdefault("welcome_config", {"spec": {"arch": "mlp"}})
+    return HostTransport(8, host="127.0.0.1", port=0, **kw)
+
+
+# ------------------------------------------------------------- admission
+
+
+def test_serve_rejected_on_non_host_hub():
+    hub = SocketTransport(family="tcp")
+    try:
+        with pytest.raises(WireProtocolError,
+                           match="not a host transport"):
+            negotiate_serve(hub.address, connect_timeout=5.0)
+        _poll(lambda: hub.rejected_peers == 1, what="rejected count")
+        assert hub.live_workers() == set()
+    finally:
+        hub.close()
+
+
+def test_version_mismatched_serve_peer_rejected():
+    hub = _host_hub()
+    try:
+        s = socket.create_connection(tuple(hub.address), timeout=5.0)
+        bad = (mpt._HDR.pack(mpt._F_SERVE, mpt._CTRL.size)
+               + mpt._CTRL.pack(mpt._MAGIC, 99))
+        s.sendall(bad)
+        # the hub answers with a readable REJECT frame, then closes
+        hdr = s.recv(mpt._HDR.size, socket.MSG_WAITALL)
+        ftype, n = mpt._HDR.unpack(hdr)
+        assert ftype == mpt._F_REJECT
+        payload = s.recv(n, socket.MSG_WAITALL)
+        reason = payload[mpt._CTRL.size:].decode("utf-8")
+        assert "version mismatch" in reason
+        _poll(lambda: hub.rejected_peers == 1, what="rejected count")
+        assert hub.serve_stats()["clients"] == 0
+        s.close()
+    finally:
+        hub.close()
+
+
+def test_serve_client_never_enters_membership():
+    hub = _host_hub()
+    try:
+        client = ServeClient(hub.address)
+        assert client.welcome["role"] == "serve"
+        assert client.welcome["spec"] == {"arch": "mlp"}
+        # not a worker anywhere: no barrier seat, no ledger row
+        assert hub.live_workers() == set()
+        assert hub.connected_workers() == {}
+        assert not hub.wait_for_workers(1, timeout=0.3)
+        assert hub.received_counts() == {}
+        assert hub.serve_stats()["clients"] == 1
+        client.close()
+    finally:
+        hub.close()
+
+
+def test_serve_client_sending_grad_is_rejected():
+    hub = _host_hub()
+    try:
+        client = ServeClient(hub.address)
+        grad = GradientMsg(0, np.zeros(4, np.float32), 0, 0)
+        client.sock.sendall(mpt._grad_frame(grad))
+        _poll(lambda: hub.rejected_peers == 1, what="rejected count")
+        assert client.closed.wait(5.0)
+        assert "read-only" in (client.reject_reason or "")
+        # nothing reached the gradient queue or the ledger
+        assert hub.recv_gradient(timeout=0) is None
+        assert hub.received_counts() == {}
+        client.close()
+    finally:
+        hub.close()
+
+
+# ----------------------------------------------------------- publication
+
+
+def test_params_pushes_version_monotonic_per_client():
+    hub = _host_hub()
+    try:
+        client = ServeClient(hub.address)
+        for v in range(6):
+            hub.publish_params(ParamsMsg(v, np.full(
+                16, float(v), np.float32)))
+            time.sleep(0.03)
+        msg = client.wait_params(min_version=5, timeout=5.0)
+        assert msg is not None and msg.version == 5
+        assert msg.params[0] == 5.0
+        seen = list(client.versions_seen)
+        assert seen == sorted(seen), seen       # monotonic, no re-push
+        assert len(seen) == len(set(seen)), seen
+        stats = hub.serve_stats()["per_client"][0]
+        assert stats["last_version"] == 5
+        assert stats["pushes"] == len(seen)
+        client.close()
+    finally:
+        hub.close()
+
+
+def test_serve_every_downsamples_the_push_stream():
+    hub = _host_hub(serve_every=3)
+    try:
+        client = ServeClient(hub.address)
+        assert client.welcome["serve_every"] == 3
+        for v in range(8):
+            hub.publish_params(ParamsMsg(v, np.full(
+                8, float(v), np.float32)))
+            time.sleep(0.05)
+        msg = client.wait_params(min_version=6, timeout=5.0)
+        assert msg is not None and msg.version == 6
+        assert all(v % 3 == 0 for v in client.versions_seen), \
+            client.versions_seen
+        stats = hub.serve_stats()["per_client"][0]
+        assert stats["skipped_pushes"] >= 1
+        client.close()
+    finally:
+        hub.close()
+
+
+def test_stalled_serve_client_never_blocks_publish_or_workers():
+    """A serve client that connects and then never reads again: the
+    coalescing writer wedges against its full socket buffer, but
+    ``publish_params`` stays O(1) and a real worker keeps receiving
+    fresh versions."""
+    hub = _host_hub()
+    try:
+        s = socket.create_connection(tuple(hub.address), timeout=5.0)
+        s.sendall(mpt._serve_frame())
+        hdr = s.recv(mpt._HDR.size, socket.MSG_WAITALL)
+        _, n = mpt._HDR.unpack(hdr)
+        s.recv(n, socket.MSG_WAITALL)           # WELCOME — last read ever
+        _poll(lambda: hub.serve_stats()["clients"] == 1,
+              what="serve admission")
+
+        worker = hub.connect(0)
+        _poll(lambda: hub.live_workers() == {0}, what="worker hello")
+
+        slab = np.arange(256 * 1024, dtype=np.float32)   # 1 MiB frames
+        t0 = time.monotonic()
+        for v in range(30):
+            hub.publish_params(ParamsMsg(v, slab + v))
+        publish_s = time.monotonic() - t0
+        assert publish_s < 2.0, f"publish_params stalled: {publish_s:.2f}s"
+
+        msg = worker.fetch_params(min_version=29, timeout=10.0)
+        assert msg is not None and msg.version == 29
+        assert msg.params[1] == 30.0
+        worker.close()
+        s.close()
+    finally:
+        hub.close()                             # must not hang either
+
+
+# -------------------------------------------------------------- liveness
+
+
+def test_worker_watchdog_detects_hung_leader():
+    """A leader that accepts and then goes silent (process alive, event
+    loop wedged — no EOF to detect): the worker's no-frames watchdog
+    must close the connection with a readable reason."""
+    ls = socket.socket()
+    ls.bind(("127.0.0.1", 0))
+    ls.listen(1)
+    held = []
+    threading.Thread(target=lambda: held.append(ls.accept()),
+                     daemon=True).start()
+    client = SocketWorkerClient(ls.getsockname(), 0, family="tcp",
+                                heartbeat_timeout_s=1.0)
+    try:
+        assert client.closed.wait(6.0), "watchdog never fired"
+        assert client.stall_reason is not None
+        assert "hung" in client.stall_reason
+    finally:
+        client.close()
+        ls.close()
+
+
+def test_serve_watchdog_detects_hung_leader():
+    hub = _host_hub(heartbeat_s=0.0)            # silent leader
+    try:
+        client = ServeClient(hub.address, heartbeat_timeout_s=1.0)
+        assert client.closed.wait(6.0), "watchdog never fired"
+        assert client.stall_reason is not None
+        assert "hung" in client.stall_reason
+    finally:
+        hub.close()
+
+
+def test_heartbeat_keeps_idle_client_alive():
+    """Same watchdog, but a healthy leader PINGing on a short cadence:
+    no params ever published, yet the client must stay connected —
+    PINGs are proof of life."""
+    hub = _host_hub(heartbeat_s=0.2)
+    try:
+        client = ServeClient(hub.address, heartbeat_timeout_s=1.0)
+        assert not client.closed.wait(2.5), \
+            f"client died despite heartbeats: {client.stall_reason}"
+        assert client.stall_reason is None
+        client.close()
+    finally:
+        hub.close()
+
+
+def test_serve_handshake_skips_ping_frames():
+    """A PING racing the SERVE handshake (short cadence leaders) must
+    be skipped by the negotiator, not misparsed as the WELCOME."""
+    ls = socket.socket()
+    ls.bind(("127.0.0.1", 0))
+    ls.listen(1)
+
+    def leader():
+        conn, _ = ls.accept()
+        conn.recv(mpt._HDR.size + mpt._CTRL.size, socket.MSG_WAITALL)
+        conn.sendall(mpt._ping_frame()
+                     + mpt._welcome_frame({"serve_id": 7, "spec": None,
+                                           "heartbeat_s": 0.0}))
+        time.sleep(1.0)
+        conn.close()
+
+    t = threading.Thread(target=leader, daemon=True)
+    t.start()
+    sock, cfg = negotiate_serve(ls.getsockname(), connect_timeout=5.0)
+    assert cfg["serve_id"] == 7
+    sock.close()
+    ls.close()
+
+
+def test_dead_leader_strands_no_serve_client():
+    hub = _host_hub()
+    client = ServeClient(hub.address)
+    assert hub.serve_stats()["clients"] == 1
+    hub.close()
+    assert client.closed.wait(5.0), "client stranded after leader death"
+    assert client.stall_reason is None          # EOF, not a hang
+    client.close()
+
+
+# ------------------------------------------------------------ inference
+
+
+def test_greedy_generate_decode_step_is_cached():
+    from repro.launch import serve as launch_serve
+    from repro.serve.workload import lm_tiny_config
+
+    cfg = lm_tiny_config()
+    f1 = launch_serve._decode_step_fn(cfg)
+    f2 = launch_serve._decode_step_fn(cfg)
+    assert f1 is f2                             # one executable per cfg
+    # params are an argument, not a baked-in constant: two different
+    # params pytrees generate through the same cached callable
+    import repro.models.model as M
+    p1 = M.init_params(jax.random.PRNGKey(0), cfg)
+    p2 = M.init_params(jax.random.PRNGKey(1), cfg)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 4)).astype(np.int32)
+    o1 = launch_serve.greedy_generate(cfg, p1, prompts, 4)
+    o2 = launch_serve.greedy_generate(cfg, p2, prompts, 4)
+    assert o1.shape == o2.shape == (2, 8)
+    assert np.array_equal(o1[:, :4], prompts)
+
+
+def test_probe_adapter_decodes_pushed_slab():
+    from repro.api.trainers import SIM_WORKLOADS
+    from repro.core.slab import slab_codec
+    from repro.serve.workload import build_infer_adapter
+
+    spec = ExperimentSpec(arch="mlp", smoke=True)
+    _, params, _, _ = SIM_WORKLOADS["mlp"](spec)
+    adapter = build_infer_adapter(spec)
+    slab = slab_codec(params).encode(params)
+    decoded = adapter.decode(np.asarray(slab))
+    out = adapter.run(decoded, 0)
+    assert np.isfinite(out["probe_loss"])
+
+
+# ----------------------------------------------------------- end to end
+
+
+def _host_spec(**kw):
+    base = dict(arch="mlp", backend="cluster", mode="async",
+                schedule=None, cluster_workers=1, wall_budget_s=25.0,
+                wall_sample_every_s=10.0, batch=16, smoke=True,
+                transport="host", listen="127.0.0.1:0")
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+def test_leader_serves_two_infer_clients_while_training():
+    """The acceptance scenario: a training leader with ``--listen``
+    concurrently serves two separately-launched ``repro infer``
+    processes (each rebuilds the inference workload from the wire
+    spec) while a joined worker trains.  Both clients must exit 0 and
+    the run report must account for both."""
+    spec = _host_spec()
+    trainer = ClusterTrainer()
+    runtime = trainer.build_runtime(spec)
+    runtime.proc_ready_timeout_s = 120.0
+    addr = runtime.listen_address
+    join = spawn_join_process(addr, workers=1, platform=CHILD_PLATFORM)
+    clients = [spawn_infer_process(addr, requests=2,
+                                   platform=CHILD_PLATFORM)
+               for _ in range(2)]
+    try:
+        res = trainer.finish(runtime, spec)
+    finally:
+        codes = []
+        for p in (join, *clients):
+            try:
+                codes.append(p.wait(timeout=90))
+            except Exception:
+                p.kill()
+                codes.append("killed")
+    assert codes == [0, 0, 0], codes
+    serving = res.extra["serving"]
+    assert serving["clients"] == 2
+    for c in serving["per_client"]:
+        assert c["pushes"] >= 1, serving
+    assert [e for e in res.extra["events"]
+            if e["event"] == "serve_client"]
+    assert res.num_gradients > 0
