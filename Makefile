@@ -91,10 +91,14 @@ bench-serve:
 	    --quick --out BENCH_serve.json
 
 # perf-regression gate: fresh BENCH_server.json flush cells must reach
-# tolerance x the committed baseline (structural cliffs, not CI noise)
+# tolerance x the committed baseline (structural cliffs, not CI noise);
+# fresh BENCH_serve.json cells are gated too — training grads/sec under
+# serving load plus client-observed staleness p99 per clients cell
 perf-gate:
 	$(PY) -m benchmarks.perf_gate --fresh BENCH_server.json \
-	    --baseline benchmarks/BENCH_server.baseline.json
+	    --baseline benchmarks/BENCH_server.baseline.json \
+	    --serve-fresh BENCH_serve.json \
+	    --serve-baseline benchmarks/BENCH_serve.baseline.json
 
 examples:
 	$(PY) examples/quickstart.py

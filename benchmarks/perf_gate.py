@@ -1,4 +1,4 @@
-"""Perf-regression gate: diff a fresh BENCH_server.json vs the baseline.
+"""Perf-regression gate: diff fresh benchmark reports vs their baselines.
 
 The flush grid's ``slab.grads_per_s`` is the repo's headline server
 number; this gate keeps PRs from silently walking it backwards.  CI
@@ -17,10 +17,25 @@ single-digit-percent jitter.  Missing cells and a missing/partial
 baseline FAIL rather than skip: a gate that silently waves through a
 shrunken grid is not a gate.
 
-Refreshing the baseline after an intentional perf change::
+The serve plane is gated the same way when ``--serve-fresh`` /
+``--serve-baseline`` are given (CI passes ``BENCH_serve.json`` /
+``benchmarks/BENCH_serve.baseline.json``).  Per ``clients`` cell:
+
+  * training throughput under serving load must reach ``tolerance`` x
+    the baseline's ``train.grads_per_s`` — a serving plane that starts
+    starving the training loop is a structural regression;
+  * client-observed staleness p99 (worst client in the cell) must stay
+    within ``max(base_p99 / tolerance, base_p99 + 2.0)`` versions —
+    p99 staleness on a healthy leader is ~1-2 versions, so the
+    additive term keeps the bound meaningful where a pure ratio of a
+    tiny baseline would be vacuous (or zero).
+
+Refreshing the baselines after an intentional perf change::
 
   make bench-server && cp BENCH_server.json \\
       benchmarks/BENCH_server.baseline.json
+  make bench-serve && cp BENCH_serve.json \\
+      benchmarks/BENCH_serve.baseline.json
 """
 from __future__ import annotations
 
@@ -37,6 +52,80 @@ def _flush_cells(report):
     return cells
 
 
+def _serve_cells(report):
+    """clients -> (train grads/sec, worst client staleness p99 or None).
+
+    p99 is None for the clients=0 cell (no client_stats to read)."""
+    cells = {}
+    for c in report.get("grid", []):
+        p99s = [float(s["staleness"]["p99"])
+                for s in c.get("client_stats", [])]
+        cells[int(c["clients"])] = (
+            float(c["train"]["grads_per_s"]),
+            max(p99s) if p99s else None)
+    return cells
+
+
+def _load(path, what):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"perf gate FAIL: cannot read {what} {path}: {e}",
+              file=sys.stderr)
+        return None
+
+
+def gate_serve(fresh_path, baseline_path, tolerance):
+    """Gate BENCH_serve.json cells; returns a list of failure lines."""
+    baseline = _load(baseline_path, "serve baseline")
+    fresh = _load(fresh_path, "fresh serve report")
+    if baseline is None or fresh is None:
+        return ["serve report/baseline unreadable (see above)"]
+    base_cells = _serve_cells(baseline)
+    fresh_cells = _serve_cells(fresh)
+    if not base_cells:
+        return [f"serve baseline {baseline_path} has no cells"]
+
+    failures = []
+    for clients in sorted(base_cells):
+        base_gps, base_p99 = base_cells[clients]
+        cell = fresh_cells.get(clients)
+        if cell is None:
+            failures.append(f"serve clients={clients}: cell missing "
+                            f"from fresh report (baseline "
+                            f"{base_gps:.1f} g/s)")
+            continue
+        got_gps, got_p99 = cell
+        floor = tolerance * base_gps
+        status = "ok" if got_gps >= floor else "REGRESSED"
+        print(f"serve clients={clients:3d}: train {got_gps:9.1f} g/s "
+              f"vs baseline {base_gps:9.1f} (floor {floor:9.1f}) "
+              f"{status}")
+        if got_gps < floor:
+            failures.append(
+                f"serve clients={clients}: train {got_gps:.1f} g/s < "
+                f"{tolerance} x baseline {base_gps:.1f}")
+        if base_p99 is None:
+            continue
+        if got_p99 is None:
+            failures.append(f"serve clients={clients}: fresh report "
+                            "has no client staleness stats")
+            continue
+        # ratio bound for big baselines, additive slack for the
+        # near-zero healthy case (p99 ~ 1 version)
+        ceil = max(base_p99 / tolerance, base_p99 + 2.0)
+        status = "ok" if got_p99 <= ceil else "REGRESSED"
+        print(f"serve clients={clients:3d}: staleness p99 "
+              f"{got_p99:6.1f} vs baseline {base_p99:6.1f} "
+              f"(ceiling {ceil:6.1f}) {status}")
+        if got_p99 > ceil:
+            failures.append(
+                f"serve clients={clients}: staleness p99 {got_p99:.1f}"
+                f" > ceiling {ceil:.1f} (baseline {base_p99:.1f})")
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="fail when fresh slab grads/sec falls below "
@@ -48,21 +137,17 @@ def main(argv=None):
                     help="fresh must reach this fraction of baseline "
                          "per cell (default 0.35 — catches structural "
                          "cliffs, ignores CI noise)")
+    ap.add_argument("--serve-fresh", default=None,
+                    help="fresh BENCH_serve.json; gates training "
+                         "grads/sec under serving load and client "
+                         "staleness p99 per clients cell")
+    ap.add_argument("--serve-baseline",
+                    default="benchmarks/BENCH_serve.baseline.json")
     args = ap.parse_args(argv)
 
-    try:
-        with open(args.baseline) as f:
-            baseline = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"perf gate FAIL: cannot read baseline "
-              f"{args.baseline}: {e}", file=sys.stderr)
-        return 1
-    try:
-        with open(args.fresh) as f:
-            fresh = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"perf gate FAIL: cannot read fresh report "
-              f"{args.fresh}: {e}", file=sys.stderr)
+    baseline = _load(args.baseline, "baseline")
+    fresh = _load(args.fresh, "fresh report")
+    if baseline is None or fresh is None:
         return 1
 
     base_cells = _flush_cells(baseline)
@@ -89,16 +174,31 @@ def main(argv=None):
             failures.append(
                 f"fleet={fleet} K={k}: {got:.1f} g/s < "
                 f"{args.tolerance} x baseline {base:.1f}")
+
+    serve_cells = 0
+    if args.serve_fresh is not None:
+        failures += gate_serve(args.serve_fresh, args.serve_baseline,
+                               args.tolerance)
+        serve_report = _load(args.serve_baseline, "serve baseline")
+        if serve_report is not None:
+            serve_cells = len(_serve_cells(serve_report))
+
     if failures:
         print("\nperf gate FAIL:", file=sys.stderr)
         for line in failures:
             print(f"  {line}", file=sys.stderr)
         print("(intentional change? refresh the baseline: "
               "make bench-server && cp BENCH_server.json "
-              "benchmarks/BENCH_server.baseline.json)", file=sys.stderr)
+              "benchmarks/BENCH_server.baseline.json; for the serve "
+              "plane: make bench-serve && cp BENCH_serve.json "
+              "benchmarks/BENCH_serve.baseline.json)", file=sys.stderr)
         return 1
-    print(f"perf gate PASS ({len(base_cells)} cells, tolerance "
-          f"{args.tolerance})")
+    if serve_cells:
+        print(f"perf gate PASS ({len(base_cells)} server cells + "
+              f"{serve_cells} serve cells, tolerance {args.tolerance})")
+    else:
+        print(f"perf gate PASS ({len(base_cells)} cells, tolerance "
+              f"{args.tolerance})")
     return 0
 
 

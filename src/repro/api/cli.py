@@ -15,10 +15,20 @@ Subcommands:
   infer     connect to a training leader as a read-only serve client:
             stream fresh params and run inference on every pushed
             version (repro.serve)
+  top       connect to a training leader as a read-only *stats* client:
+            stream live telemetry — grads/sec, staleness p50/p99,
+            ledger state — without perturbing the run (repro.obs.top)
+  trace     run a cluster experiment with tracing on and write a
+            Chrome trace-event / Perfetto JSON timeline: sugar for
+            ``run --backend cluster --trace FILE``
   dryrun    multi-pod lower/compile analysis (repro.launch.dryrun, with
             the 512 forced host devices set up before jax imports)
   bench     paper tables + kernel microbenches (benchmarks.run)
   schedules list the registered threshold-schedule families
+
+Every entry point shares one logging setup (``setup_logging``):
+per-component ``repro.<component>`` logger names, one format, a
+``--log-level`` flag (default WARNING).
 
 Examples:
   python -m repro simulate --smoke
@@ -33,6 +43,9 @@ Examples:
       --cluster-workers 2 --wall-budget 30
   python -m repro join LEADER_HOST:5555 --workers 2
   python -m repro infer LEADER_HOST:5555 --requests 8
+  python -m repro top LEADER_HOST:5555 --duration 10
+  python -m repro trace /tmp/t.json --arch mlp --transport proc \
+      --cluster-workers 2 --wall-budget 5
   python -m repro run --spec experiment.json
 """
 from __future__ import annotations
@@ -45,6 +58,27 @@ from typing import List, Optional
 
 from repro.api.schedules import schedule_help
 from repro.api.spec import BACKENDS, FLUSH_MODES, MODES, ExperimentSpec
+
+_LOG_LEVELS = ("debug", "info", "warning", "error")
+
+
+def setup_logging(level: Optional[str] = None) -> None:
+    """The one logging setup every CLI entry point shares (``repro
+    run``, ``join``, ``infer``, ``top``, ...): per-component
+    ``repro.<component>`` logger names, one line format, stderr.
+    Idempotent — ``basicConfig`` is a no-op once a handler exists, so
+    nested entry points (e.g. ``serve --listen`` forwarding into
+    ``run``) keep the first configuration."""
+    import logging
+    lvl = getattr(logging, (level or "warning").upper(), logging.WARNING)
+    logging.basicConfig(
+        level=lvl,
+        format="%(asctime)s.%(msecs)03d %(name)s %(levelname)s: "
+               "%(message)s",
+        datefmt="%H:%M:%S", stream=sys.stderr)
+    # scope the chosen level to this package: --log-level debug must
+    # not unleash every third-party library's debug firehose
+    logging.getLogger("repro").setLevel(lvl)
 
 # CLI flag -> (spec field, type).  Every flag defaults to None so that
 # only explicitly-passed flags override the --spec file / dataclass
@@ -146,6 +180,12 @@ def _add_spec_flags(ap: argparse.ArgumentParser, backend_flag: bool):
                          "restored step)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-step logs; print only the result")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="cluster: write a Chrome trace-event / "
+                         "Perfetto JSON timeline of the run here (load "
+                         "in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
+                    help="repro.* logger level (default warning)")
 
 
 def _build_spec(args, backend: Optional[str]) -> ExperimentSpec:
@@ -180,9 +220,16 @@ def _build_spec(args, backend: Optional[str]) -> ExperimentSpec:
 
 
 def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
+    setup_logging(getattr(args, "log_level", None))
     spec = _build_spec(args, forced_backend or args_backend(args))
     if args.save_spec:
         spec.save(args.save_spec)
+    trace = getattr(args, "trace", None)
+    if trace and spec.backend != "cluster":
+        print(f"warning: --trace records the cluster runtime's "
+              f"timeline and does nothing on backend="
+              f"{spec.backend!r}; ignoring it", file=sys.stderr)
+        trace = None
     from repro.api import trainers
     if spec.backend == "spmd":
         trainer = trainers.SpmdTrainer(ckpt_dir=args.ckpt_dir,
@@ -191,7 +238,7 @@ def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
         from repro.cluster.trainer import ClusterTrainer
         trainer = ClusterTrainer(ckpt_dir=args.ckpt_dir,
                                  resume_from=args.resume_from,
-                                 verbose=not args.quiet)
+                                 verbose=not args.quiet, trace=trace)
     else:
         trainer = trainers.SimulatorTrainer()
     result = trainer.run(spec)
@@ -253,7 +300,10 @@ def _cmd_join(rest: List[str]) -> int:
                          "seconds (the leader may not be up yet)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress join progress logs")
+    ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
+                    help="repro.* logger level (default warning)")
     args = ap.parse_args(rest)
+    setup_logging(args.log_level)
     from repro.cluster.hostlink import join_main
     code = join_main(args.address, worker_id=args.worker_id,
                      workers=args.workers,
@@ -294,7 +344,10 @@ def _cmd_infer(rest: List[str]) -> int:
                          "seconds (the leader may not be up yet)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-request logs")
+    ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
+                    help="repro.* logger level (default warning)")
     args = ap.parse_args(rest)
+    setup_logging(args.log_level)
     from repro.serve.client import infer_main
     code = infer_main(args.address, requests=args.requests,
                       duration_s=args.duration, batch=args.batch,
@@ -306,6 +359,35 @@ def _cmd_infer(rest: List[str]) -> int:
     # skip interpreter finalization: this process ran a JAX runtime (see
     # _cmd_join)
     os._exit(code)
+
+
+def _cmd_top(rest: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro top",
+        description="read-only stats client: stream a training "
+                    "leader's live telemetry — grads/sec, staleness "
+                    "p50/p99, conservation-ledger state — one line per "
+                    "push, without perturbing the run (repro.obs.top)")
+    ap.add_argument("address", metavar="HOST:PORT",
+                    help="the leader's listen address "
+                         "(repro serve --listen HOST:PORT)")
+    ap.add_argument("--count", type=int, default=None,
+                    help="stop after this many stats rows")
+    ap.add_argument("--duration", type=float, default=None,
+                    help="stop after this many seconds")
+    ap.add_argument("--connect-timeout", type=float, default=30.0,
+                    help="keep retrying the leader for this many "
+                         "seconds (the leader may not be up yet)")
+    ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
+                    help="repro.* logger level (default warning)")
+    args = ap.parse_args(rest)
+    setup_logging(args.log_level)
+    # no JAX runtime in this process (it only renders JSON), so a
+    # normal return is safe — no os._exit needed
+    from repro.obs.top import top_main
+    return top_main(args.address, count=args.count,
+                    duration_s=args.duration,
+                    connect_timeout=args.connect_timeout)
 
 
 def _cmd_serve_leader(rest: List[str]) -> int:
@@ -389,6 +471,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return _cmd_join(argv[1:])
     if argv and argv[0] == "infer":
         return _cmd_infer(argv[1:])
+    if argv and argv[0] == "top":
+        return _cmd_top(argv[1:])
     if argv and argv[0] in _PASSTHROUGH:
         return _cmd_passthrough(argv[0], argv[1:])
 
@@ -402,6 +486,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_sim = sub.add_parser("simulate",
                            help="run the paper-faithful simulator backend")
     _add_spec_flags(p_sim, backend_flag=False)
+    p_trace = sub.add_parser(
+        "trace", help="run a cluster experiment with tracing on and "
+                      "write a Perfetto/Chrome trace-event JSON "
+                      "timeline (trace FILE [run flags])")
+    p_trace.add_argument("tracefile", metavar="FILE",
+                         help="trace JSON output path")
+    _add_spec_flags(p_trace, backend_flag=False)
     for name, hlp in _PASSTHROUGH.items():
         sub.add_parser(name, help=hlp, add_help=False)
     sub.add_parser("join", help="join a cluster leader as one or more "
@@ -411,10 +502,23 @@ def main(argv: Optional[List[str]] = None) -> int:
                                  "params from a training leader and run "
                                  "inference (infer HOST:PORT)",
                    add_help=False)
+    sub.add_parser("top", help="read-only stats client: stream live "
+                               "telemetry from a training leader "
+                               "(top HOST:PORT)",
+                   add_help=False)
     sub.add_parser("schedules", help="list threshold-schedule families")
 
     args = ap.parse_args(argv)
 
+    if args.cmd == "trace":
+        # sugar for `run --backend cluster --trace FILE`
+        if args.trace is None:
+            args.trace = args.tracefile
+        try:
+            return _cmd_run(args, forced_backend="cluster")
+        except (ValueError, FileNotFoundError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
     if args.cmd in ("run", "simulate"):
         try:
             return _cmd_run(args) if args.cmd == "run" \

@@ -10,6 +10,29 @@ and provenance (the spec that produced it).
 ``averaged()`` computes the paper's headline statistic — every metric
 averaged over the entire training interval — and ``to_json`` /
 ``from_json`` round-trip the whole thing for experiment artifacts.
+
+``extra`` key contract (``backend="cluster"``) — these keys are stable
+and consumers may rely on their *shape*, not just their presence:
+
+  * ``accounting``   — the conservation ledger: ``applied``,
+    ``dropped``, ``buffered``, ``pending_round``, ``updates`` (exact,
+    to the gradient, on every transport).
+  * ``events``       — fault/checkpoint/phase timeline (list of dicts
+    with at least ``t`` and ``event``).
+  * ``start_version`` — server version at t=0 (non-zero after resume).
+  * ``serve_wall_s`` — the serving-window denominator for grads/sec.
+  * ``serving``      — **always present**: ``clients``,
+    ``rejected_peers``, ``serve_every``, ``stats_clients``,
+    ``per_client``.  Transports without a serving plane report the
+    empty shape (``clients == 0`` …) rather than omitting the key, so
+    consumers key on *content*, never on key presence.
+  * ``telemetry``    — :meth:`repro.obs.telemetry.Telemetry.summary`
+    (counters / gauges / histograms / spans_recorded) plus
+    ``ledger_check`` cross-checking the counters against
+    ``accounting`` (``consistent`` must be True).
+  * ``listen``       — resolved ``host:port`` (host transport only).
+  * ``trace_path``   — Chrome trace-event JSON path (only when the run
+    was traced via ``--trace``).
 """
 from __future__ import annotations
 

@@ -67,7 +67,8 @@ from repro.cluster.mptransport import (_CTRL, _F_PARAMS, _F_PING,
                                        _F_PONG, _F_REJECT, _F_WELCOME,
                                        _HDR, _MAX_FRAME, _join_frame,
                                        _peer_error, _recv_exact,
-                                       _serve_frame, _welcome_frame,
+                                       _serve_frame, _stats_frame,
+                                       _welcome_frame,
                                        SocketTransport, SocketWorkerClient,
                                        WireProtocolError)
 
@@ -209,6 +210,24 @@ class HostTransport(SocketTransport):
         _log.info("admitted serve client %d (read-only)", sid)
         return None
 
+    def _on_stats(self, conn) -> Optional[str]:
+        """Admit a read-only stats client (``repro top``): no lease, no
+        spec (it rebuilds nothing — it just renders JSON), just a
+        stats_id and the push cadence.  WELCOME is sent here, before
+        :meth:`_on_stats_ready` registers the connection for pushes, so
+        the client always sees WELCOME before the first STATS frame."""
+        with self._lease_lock:
+            sid = self._stats_seq
+            self._stats_seq += 1
+        conn.is_stats = True
+        conn.stats_id = sid
+        cfg = {"role": "stats", "stats_id": sid,
+               "heartbeat_s": self.heartbeat_s,
+               "stats_every_s": self.stats_every_s}
+        conn.send_frame(_welcome_frame(cfg))
+        _log.info("admitted stats client %d (read-only)", sid)
+        return None
+
     def _admit_hello(self, conn, worker_id: int,
                      generation: int) -> Optional[str]:
         if not 0 <= worker_id < self.num_workers:
@@ -332,6 +351,21 @@ def negotiate_serve(address: Any, *, connect_timeout: float = 30.0
                           max(0.0, connect_timeout))
     return sock, _leader_handshake(sock, _serve_frame(), deadline,
                                    what="serve")
+
+
+def negotiate_stats(address: Any, *, connect_timeout: float = 30.0
+                    ) -> Tuple[socket.socket, Dict[str, Any]]:
+    """The STATS handshake (``repro top``): connect as a read-only
+    telemetry subscriber, return ``(connected socket, welcome config)``.
+    Same shape as :func:`negotiate_serve`; rejections are permanent and
+    raise :class:`WireProtocolError` with the leader's reason."""
+    host, port = parse_hostport(address) if isinstance(address, str) \
+        else tuple(address)[:2]
+    deadline = time.monotonic() + max(0.0, connect_timeout)
+    sock = _connect_retry(host, int(port),
+                          max(0.0, connect_timeout))
+    return sock, _leader_handshake(sock, _stats_frame(), deadline,
+                                   what="stats")
 
 
 def _leader_handshake(sock: socket.socket, request: bytes,

@@ -27,6 +27,9 @@ no per-leaf serialization.  The format is **versioned and pinned**::
     SERVE   := !IH            magic, proto — read-only subscribe
     PING    := !IH            magic, proto — leader liveness  (hub ->)
     PONG    := !IH            magic, proto — liveness reply
+    STATS   := !IH [json]     magic, proto — read-only stats subscribe
+                              (client ->, empty body); stats payload
+                              push (hub ->, JSON body)
 
 ``raw-slab`` is the ``(P_pad,)`` slab as **little-endian ``<f4``** —
 pinned on both encode and decode (a big-endian host byteswaps at the
@@ -92,6 +95,19 @@ the push stream per serve connection (every Nth version), trading
 client-visible staleness for broadcast bandwidth; ``serve_stats``
 reports per-client push/version/skip counters.
 
+**Stats plane**: a peer whose first frame is STATS becomes a read-only
+subscriber to the hub's *telemetry* push (``python -m repro top``):
+small JSON payloads — ledger counters, staleness percentiles, queue
+depth — on a fixed cadence, produced by :attr:`SocketTransport.
+stats_provider`.  Like serve peers, stats connections never hold a
+``worker_id``, never enter the barrier or the conservation ledger, and
+``quiesce`` skips them; unlike serve peers they are *not* sent the
+params broadcast at all (a stats reader costs the run a few hundred
+bytes of JSON per tick, never a slab) — which is why a sync run stays
+bitwise-identical with a stats reader attached (regression-tested).
+Old peers ignore unknown frame types, so STATS rides protocol v1
+without a version bump.
+
 **Liveness**: with ``heartbeat_s > 0`` the hub PINGs every
 authenticated connection on that cadence (never a silent stray — the
 model-withholding rule extends to control frames).  Clients reply PONG
@@ -118,6 +134,7 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.cluster.transport import GradientMsg, ParamsMsg
+from repro.obs.telemetry import NULL
 
 _log = logging.getLogger("repro.cluster.transport")
 
@@ -136,6 +153,7 @@ _PARAMS = struct.Struct("!ii")       # version, restore epoch
 _F_HELLO, _F_GRAD, _F_PARAMS, _F_JOIN, _F_WELCOME, _F_REJECT = \
     1, 2, 3, 4, 5, 6
 _F_SERVE, _F_PING, _F_PONG = 7, 8, 9
+_F_STATS = 10
 
 # one frame must fit in memory several times over; anything bigger is a
 # corrupted header (e.g. a reader that lost frame sync), not a real slab
@@ -229,6 +247,12 @@ def _serve_frame() -> bytes:
     return _ctrl_frame(_F_SERVE, b"")
 
 
+def _stats_frame(payload: bytes = b"") -> bytes:
+    """Empty body: a read-only stats subscribe request (client ->,
+    first frame).  JSON body: one stats payload push (hub ->)."""
+    return _ctrl_frame(_F_STATS, payload)
+
+
 def _ping_frame() -> bytes:
     return _ctrl_frame(_F_PING, b"")
 
@@ -273,6 +297,11 @@ class _Conn:
         # (barrier, ledger, live_workers) worker-only with no new code
         self.is_serve = False
         self.serve_id: Optional[int] = None
+        # stats plane: read-only telemetry subscribers (repro top).
+        # Same worker_id=None trick as serve peers, and additionally
+        # excluded from the params broadcast entirely
+        self.is_stats = False
+        self.stats_id: Optional[int] = None
         self.pushes = 0                     # params frames shipped
         self.last_pushed_version: Optional[int] = None
         self.skipped_pushes = 0             # down-sampled by serve_every
@@ -318,10 +347,18 @@ class _Conn:
                         "mid-stream")
             return None if n == _CTRL.size else \
                 f"SERVE frame has length {n}, expected {_CTRL.size}"
+        if ftype == _F_STATS:
+            if self.authenticated:
+                return ("STATS on an already-authenticated connection "
+                        "— a trainer cannot demote itself to a stats "
+                        "reader mid-stream")
+            return None if n == _CTRL.size else \
+                f"STATS subscribe frame has length {n}, expected " \
+                f"{_CTRL.size}"
         if not self.authenticated:
             return (f"first frame has type {ftype}, not "
-                    "HELLO/JOIN/SERVE — peer is not speaking the repro "
-                    "slab protocol")
+                    "HELLO/JOIN/SERVE/STATS — peer is not speaking the "
+                    "repro slab protocol")
         if n > _MAX_FRAME:
             return (f"frame length {n} exceeds the {_MAX_FRAME}-byte "
                     "maximum — peer lost frame sync")
@@ -350,6 +387,7 @@ class _Conn:
                 if payload is None:
                     self.hub._note_torn()       # died mid-frame: discard
                     break
+                self.hub.obs.count("wire.rx_bytes", _HDR.size + n)
                 if ftype == _F_HELLO:
                     magic, proto, wid, gen = _HELLO.unpack(payload)
                     # _admit_hello claims conn.worker_id inside the
@@ -379,22 +417,42 @@ class _Conn:
                         break
                     self.authenticated = True
                     self.hub._on_serve_ready(self)
+                elif ftype == _F_STATS:
+                    magic, proto = _CTRL.unpack(payload[:_CTRL.size])
+                    err = _peer_error(magic, proto) \
+                        or self.hub._on_stats(self)
+                    if err is not None:
+                        self.hub._reject(self, err)
+                        break
+                    self.authenticated = True
+                    self.hub._on_stats_ready(self)
                 elif ftype == _F_PONG:
                     pass                    # liveness reply; receipt
                     #                         alone is the signal
                 elif ftype == _F_GRAD:
                     if self.worker_id is None:
-                        self.hub._reject(
-                            self, "GRAD frame from a read-only serve "
-                                  "client" if self.is_serve else
-                                  "GRAD frame before HELLO — the peer "
-                                  "never identified itself")
+                        reason = "GRAD frame before HELLO — the peer " \
+                                 "never identified itself"
+                        if self.is_serve:
+                            reason = ("GRAD frame from a read-only "
+                                      "serve client")
+                        elif self.is_stats:
+                            reason = ("GRAD frame from a read-only "
+                                      "stats client")
+                        self.hub._reject(self, reason)
                         break
                     wid, version, seq = _GRAD.unpack(
                         payload[:_GRAD.size])
                     grad = _slab_from_payload(payload, _GRAD.size)
                     msg = GradientMsg(wid, grad, version, seq)
-                    if self.hub._enqueue(msg):  # blocks: backpressure
+                    # the span brackets the bounded put: its duration IS
+                    # the backpressure wait when the hub queue is full
+                    with self.hub.obs.span(f"worker/{wid}/wire",
+                                           "grad_rx", version=version,
+                                           seq=seq,
+                                           bytes=_HDR.size + n):
+                        ok = self.hub._enqueue(msg)
+                    if ok:                      # blocks: backpressure
                         self.hub._count_received(wid)
                 # other frame types are ignored (forward compat)
         finally:
@@ -420,6 +478,7 @@ class _Conn:
             return False
         try:
             self.sock.sendall(frame)
+            self.hub.obs.count("wire.tx_bytes", len(frame))
             return True
         except OSError:
             return False
@@ -437,6 +496,14 @@ class _Conn:
             # model (the HELLO handler re-arms the push on admission)
             if frame is None or frame is self._last_sent \
                     or not self.authenticated:
+                continue
+            if self.is_stats:
+                # stats readers are never sent the params broadcast —
+                # a few hundred bytes of JSON per tick (pushed by the
+                # stats thread via send_frame), never a slab.  This is
+                # what keeps a sync run bitwise-identical with a stats
+                # reader attached
+                self._last_sent = frame
                 continue
             if self.is_serve:
                 version, = _PARAMS.unpack_from(frame, _HDR.size)[:1]
@@ -504,6 +571,12 @@ class SocketTransport:
     connections sit in TIME_WAIT.
     """
 
+    # the telemetry bus; the runtime swaps in its live bus before the
+    # run starts.  Class attribute (not per-instance state in __init__)
+    # so directly-constructed hubs in tests/benchmarks get the no-op
+    # bus with zero setup
+    obs = NULL
+
     def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
                  host: str = "127.0.0.1", port: int = 0,
                  heartbeat_s: float = 0.0, serve_every: int = 1):
@@ -552,6 +625,15 @@ class SocketTransport:
         self.on_serve_ready: Optional[Any] = None
         self._serve_seq = 0
         self._serve_conns: List[_Conn] = []     # every admitted, ever
+        # stats plane: a zero-arg callable returning a JSON-encodable
+        # dict (the runtime installs one once the server exists); the
+        # push thread starts lazily with the first admitted stats
+        # reader and ticks every stats_every_s
+        self.stats_provider: Optional[Any] = None
+        self.stats_every_s = 0.5
+        self._stats_seq = 0
+        self._stats_conns: List[_Conn] = []     # every admitted, ever
+        self._stats_thread: Optional[threading.Thread] = None
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="hub-accept", daemon=True)
         self._accept_thread.start()
@@ -617,6 +699,60 @@ class SocketTransport:
         if self.on_serve_ready is not None:
             self.on_serve_ready(conn.serve_id)
 
+    def _on_stats(self, conn: _Conn) -> Optional[str]:
+        """STATS (read-only telemetry subscribe) hook — only the
+        multi-host hub admits stats clients; the plain hub has no live
+        run to report on from outside its own process."""
+        return ("this hub does not admit stats clients (not a host "
+                "transport) — point `repro top` at a training leader")
+
+    def _on_stats_ready(self, conn: _Conn) -> None:
+        """An admitted stats connection just authenticated: push one
+        payload immediately (so `repro top` paints before the first
+        cadence tick) and make sure the push thread is running."""
+        with self._conns_cond:
+            self._stats_conns.append(conn)
+        conn.send_frame(self._stats_frame_now(), lock_timeout=1.0)
+        self._ensure_stats_thread()
+
+    def _stats_frame_now(self) -> bytes:
+        """One STATS push frame from the current provider snapshot.
+        A hub whose runtime has not installed a provider yet (or whose
+        provider raises mid-teardown) reports a ``waiting`` state
+        instead of wedging the push thread."""
+        provider = self.stats_provider
+        payload = None
+        if provider is not None:
+            try:
+                payload = provider()
+            except Exception:
+                payload = None
+        if payload is None:
+            payload = {"state": "waiting"}
+        return _stats_frame(json.dumps(payload).encode("utf-8"))
+
+    def _ensure_stats_thread(self) -> None:
+        with self._conns_cond:
+            if self._stats_thread is not None:
+                return
+            self._stats_thread = threading.Thread(
+                target=self._stats_loop, name="hub-stats", daemon=True)
+            self._stats_thread.start()
+
+    def _stats_loop(self) -> None:
+        """Push a telemetry snapshot to every live stats reader on the
+        cadence.  Short lock timeout for the same reason as heartbeats:
+        one stalled reader must not delay the others' ticks."""
+        while not self._closed.wait(self.stats_every_s):
+            with self._conns_cond:
+                conns = [c for c in self._stats_conns
+                         if not c.closed.is_set()]
+            if not conns:
+                continue
+            frame = self._stats_frame_now()
+            for conn in conns:
+                conn.send_frame(frame, lock_timeout=0.2)
+
     def _heartbeat_loop(self) -> None:
         """PING every authenticated connection on the heartbeat cadence.
         A short lock timeout keeps a writer wedged against one stalled
@@ -636,10 +772,13 @@ class SocketTransport:
         down-sampling skipped."""
         with self._conns_cond:
             conns = list(self._serve_conns)
+        with self._conns_cond:
+            stats_clients = len(self._stats_conns)
         return {
             "clients": len(conns),
             "rejected_peers": self.rejected_peers,
             "serve_every": self.serve_every,
+            "stats_clients": stats_clients,
             "per_client": [
                 {"serve_id": c.serve_id,
                  "pushes": c.pushes,
@@ -857,14 +996,15 @@ class SocketTransport:
         """True once every connection reader has drained to EOF (all
         producers must already be stopped/closed).  Interleave with
         ``recv_gradient(timeout=0)`` drains: a reader blocked on the
-        bounded queue needs the caller to make room.  Serve connections
-        are skipped: they produce no gradients, so the conservation
-        ledger owes them nothing — and a lingering read-only subscriber
-        must never hold up training shutdown."""
+        bounded queue needs the caller to make room.  Serve and stats
+        connections are skipped: they produce no gradients, so the
+        conservation ledger owes them nothing — and a lingering
+        read-only subscriber must never hold up training shutdown."""
         deadline = None if timeout is None else \
             time.monotonic() + max(0.0, timeout)
         with self._conns_cond:
-            conns = [c for c in self._conns if not c.is_serve]
+            conns = [c for c in self._conns
+                     if not c.is_serve and not c.is_stats]
         for conn in conns:
             remain = None if deadline is None else \
                 max(0.0, deadline - time.monotonic())
@@ -886,6 +1026,8 @@ class SocketTransport:
         self._accept_thread.join(timeout=2.0)
         if self._hb_thread is not None:
             self._hb_thread.join(timeout=2.0)
+        if self._stats_thread is not None:
+            self._stats_thread.join(timeout=2.0)
         if self.family == "unix":
             for path in (self.address,):
                 try:

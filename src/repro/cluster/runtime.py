@@ -51,6 +51,7 @@ than a hang.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import sys
 import threading
@@ -71,6 +72,9 @@ from repro.cluster.worker import Worker
 from repro.core.schedule import ThresholdSchedule, constant_schedule
 from repro.core.slab import slab_codec
 from repro.data.pipeline import shard_iterator
+from repro.obs.telemetry import Telemetry
+
+_log = logging.getLogger("repro.cluster.runtime")
 
 
 @dataclasses.dataclass
@@ -89,8 +93,14 @@ class ClusterResult:
     events: List[Dict[str, Any]]   # kills, respawns, checkpoints, restores
     final_params: Any
     wall_s: float
-    # serving plane (host transport only): per-serve-client push stats
+    # serving plane: per-serve-client push stats.  Always a dict on the
+    # cluster backend (empty-shaped when the transport has no serving
+    # plane), so consumers key on content, not key presence
     serving: Optional[Dict[str, Any]] = None
+    # telemetry plane: the obs summary (counters / gauges / histograms)
+    # plus a ledger_check block cross-checking the telemetry counters
+    # against the conservation ledger
+    telemetry: Optional[Dict[str, Any]] = None
 
 
 class ClusterRuntime:
@@ -113,7 +123,8 @@ class ClusterRuntime:
                  proc_ready_timeout_s: float = 180.0,
                  verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
-                 resume_from: Optional[str] = None):
+                 resume_from: Optional[str] = None,
+                 trace: Optional[str] = None):
         assert mode in ("sync", "async", "hybrid")
         if transport_kind not in TRANSPORTS:
             raise ValueError(f"transport_kind must be one of {TRANSPORTS},"
@@ -188,6 +199,13 @@ class ClusterRuntime:
         self.ckpt_dir = ckpt_dir
         self.resume_from = resume_from
         self.verbose = verbose
+        # the telemetry bus: metrics always on (lock-cheap counters /
+        # histograms), timeline spans only when a trace file was asked
+        # for.  trace is the output path (written by the trainer after
+        # the run), not a spec field — tracing is a run artifact, like
+        # --out, and must not perturb spec round-trips over the wire
+        self.trace_path = trace
+        self.obs = Telemetry(trace=bool(trace))
 
         # the slab wire format: workers fetch a params *slab*, decode,
         # differentiate, and re-encode the gradient — all in one jitted
@@ -230,6 +248,10 @@ class ClusterRuntime:
                 heartbeat_s=heartbeat_s, serve_every=serve_every)
         else:
             self.transport = InProcTransport(grad_capacity=cap)
+        # hand the socket hubs the live bus (wire byte counters,
+        # grad_rx spans, the STATS push plane); InProcTransport carries
+        # no instrumentation of its own and just ignores the attribute
+        self.transport.obs = self.obs
         # the resolved bind address (host transport): port 0 in `listen`
         # has been replaced by the real ephemeral port by now
         self.listen_address: Optional[Any] = \
@@ -264,6 +286,12 @@ class ClusterRuntime:
     def _log_event(self, kind: str, **kw) -> None:
         ev = {"t": round(self._elapsed(), 3), "event": kind, **kw}
         self.events.append(ev)
+        # every fault/lifecycle event is also a timeline instant (the
+        # trace shows kills/restores against the spans they perturb)
+        # and a structured log record
+        self.obs.instant("server", kind, **kw)
+        self.obs.count(f"events.{kind}")
+        _log.info("+%.2fs %s %s", ev["t"], kind, kw)
         if self.verbose:
             print(f"[cluster +{ev['t']:6.2f}s] {kind} "
                   f"{ {k: v for k, v in kw.items()} }", flush=True)
@@ -297,7 +325,8 @@ class ClusterRuntime:
             wtrans = self.transport.connect(wid, gen)
         w = Worker(wid, grad_fn=self._grad, batches=batches,
                    transport=wtrans, mode=self.mode,
-                   straggle_s=self.faults.straggle_s(wid), generation=gen)
+                   straggle_s=self.faults.straggle_s(wid),
+                   generation=gen, obs=self.obs)
         if wtrans is not self.transport:
             w.endpoint = wtrans     # flushed + closed at shutdown
             # a dead connection must stop the worker (not leave it
@@ -392,6 +421,31 @@ class ClusterRuntime:
         params, step = restore_checkpoint(path, like=self.init_params)
         self.server.restore(params, step)
         self._log_event("restore", step=step)
+
+    def _stats_payload(self) -> Dict[str, Any]:
+        """One `repro top` tick: the live ledger columns, staleness
+        percentiles, and fleet state.  Runs on the hub's stats-push
+        thread; everything it reads is lock-protected or a snapshot."""
+        a = self.server.accounting()
+        st = self.obs.hist_stats("staleness") or {}
+        serve_clients = 0
+        if hasattr(self.transport, "serve_stats"):
+            serve_clients = self.transport.serve_stats()["clients"]
+        return {
+            "t": round(self._elapsed(), 3),
+            "version": self.server.version,
+            "mode": self.mode,
+            "applied": a["applied"],
+            "dropped": a["dropped"],
+            "buffered": a["buffered"],
+            "pending_round": a["pending_round"],
+            "updates": a["updates"],
+            "staleness": {"p50": st.get("p50"), "p99": st.get("p99")},
+            "queue_depth": self.transport.pending_gradients(),
+            "live_workers": len(self.server.live),
+            "num_workers": self.num_workers,
+            "serve_clients": serve_clients,
+        }
 
     def _sampler(self, snaps: List) -> None:
         # snapshot_slab is zero work (a reference to the published,
@@ -513,7 +567,13 @@ class ClusterRuntime:
             transport=self.transport, num_workers=self.num_workers,
             schedule=self.schedule, flush_mode=self.flush_mode,
             staleness_decay=self.staleness_decay,
-            max_gradients=self.max_gradients, start_version=start_version)
+            max_gradients=self.max_gradients,
+            start_version=start_version, obs=self.obs)
+        if hasattr(self.transport, "stats_provider"):
+            # the STATS push plane (`repro top`): now that the server
+            # exists, the hub can answer stats subscribers with live
+            # ledger + staleness numbers
+            self.transport.stats_provider = self._stats_payload
 
         snaps: List = []
         threads: List[threading.Thread] = []
@@ -598,12 +658,19 @@ class ClusterRuntime:
                     self._spawn(wid)
 
             deadline = self._t0 + self.wall_budget_s
+            next_q = 0.0            # queue-depth sampling grid (~5 Hz)
             while time.monotonic() < deadline \
                     and not self.server.done.is_set():
                 msg = self.transport.recv_gradient(timeout=min(
                     0.02, max(1e-3, deadline - time.monotonic())))
                 if msg is not None:
                     self.server.ingest(msg)
+                now = time.monotonic() - self._t0
+                if now >= next_q:
+                    self.obs.observe(
+                        "queue_depth",
+                        self.transport.pending_gradients())
+                    next_q = now + 0.2
             wall_s = self._elapsed()
         finally:
             # ---------------------------------------------- shutdown
@@ -683,12 +750,40 @@ class ClusterRuntime:
         # snapshot() already returns a host copy (the donation rule:
         # nothing escaping the server may alias the donated slab)
         _, final_params, applied = self.server.snapshot()
-        serving = self.transport.serve_stats() \
-            if self.transport_kind == "host" else None
+        # the serving report is shape-stable across transports: a hub
+        # transport reports its real serve-plane state, and a transport
+        # with no serving plane (inproc) reports the same keys, empty —
+        # consumers key on content, never on key presence
+        if hasattr(self.transport, "serve_stats"):
+            serving = self.transport.serve_stats()
+        else:
+            serving = {"clients": 0, "rejected_peers": 0,
+                       "serve_every": 1, "stats_clients": 0,
+                       "per_client": []}
+        # telemetry summary + the ledger cross-check: every gradient
+        # the server ingested is exactly accounted (applied + dropped +
+        # buffered + pending), and everything computed that was never
+        # ingested is the post-loop in_flight drain
+        telemetry = self.obs.summary()
+        c = telemetry["counters"]
+        ingested = c.get("grads_ingested", 0)
+        ledger_sum = (accounting["applied"] + accounting["dropped"]
+                      + accounting["buffered"]
+                      + accounting["pending_round"])
+        telemetry["ledger_check"] = {
+            "grads_ingested": ingested,
+            "ledger_sum": ledger_sum,
+            "computed": accounting["computed"],
+            "in_flight": accounting["in_flight"],
+            "consistent": (ingested == ledger_sum
+                           and accounting["computed"]
+                           == ingested + accounting["in_flight"]),
+        }
         return ClusterResult(
             times=np.asarray(times), train_loss=np.asarray(tr),
             test_loss=np.asarray(te), test_acc=np.asarray(acc),
             num_updates=accounting["updates"], num_gradients=applied,
             mode=self.mode, start_version=start_version,
             accounting=accounting, events=list(self.events),
-            final_params=final_params, wall_s=wall_s, serving=serving)
+            final_params=final_params, wall_s=wall_s, serving=serving,
+            telemetry=telemetry)

@@ -39,6 +39,7 @@ gradients and ``version`` (= updates) — is what
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Dict, Optional, Set
 
 import numpy as np
@@ -46,6 +47,7 @@ import numpy as np
 from repro.core.slab import SlabAggregator, SlabBuffer, slab_codec
 from repro.core.schedule import ThresholdSchedule
 from repro.cluster.transport import GradientMsg, ParamsMsg, Transport
+from repro.obs.telemetry import NULL
 
 
 class ParameterServer:
@@ -56,12 +58,15 @@ class ParameterServer:
                  max_gradients: Optional[int] = None,
                  start_version: int = 0,
                  use_pallas: Optional[bool] = None,
-                 interpret: bool = False):
+                 interpret: bool = False,
+                 obs=None):
         assert mode in ("sync", "async", "hybrid")
         assert flush_mode in ("sum", "mean")
         if mode in ("async", "hybrid"):
             assert schedule is not None, f"{mode} mode needs a K(t) schedule"
         self.lock = threading.RLock()
+        self.obs = obs if obs is not None else NULL
+        self._last_k: Optional[int] = None  # K(t) switch detection
         self.version = int(start_version)   # parameter updates applied
         self.start_version = int(start_version)
         self.mode = mode
@@ -122,8 +127,19 @@ class ParameterServer:
     # ---------------------------------------------------------- ingest
     def ingest(self, msg: GradientMsg) -> None:
         with self.lock:
+            # telemetry: every gradient that reached the server, and
+            # how stale it was on arrival (server version minus the
+            # version it was computed against; negative after a restore
+            # rolled the clock back).  The ledger cross-check is
+            # grads_ingested == applied + dropped + buffered + pending
+            self.obs.count("grads_ingested")
+            self.obs.count(f"grads_ingested.w{msg.worker_id}")
+            stale = self.version - msg.version
+            self.obs.observe("staleness", stale)
+            self.obs.observe(f"staleness.w{msg.worker_id}", stale)
             if self.done.is_set():
                 self.dropped += 1
+                self.obs.count("drops.budget")
                 return
             if self.mode == "sync":
                 self._ingest_sync(msg)
@@ -133,6 +149,7 @@ class ParameterServer:
     def _ingest_sync(self, msg: GradientMsg) -> None:
         if msg.version != self.version:
             self.dropped += 1       # late arrival from a previous round
+            self.obs.count("drops.stale")
             return
         if msg.worker_id in self._round:
             # a worker re-contributing to an in-progress round (it can,
@@ -140,6 +157,7 @@ class ParameterServer:
             # while it was waiting): latest wins, the overwritten
             # gradient is accounted as dropped
             self.dropped += 1
+            self.obs.count("drops.duplicate")
         self._round[msg.worker_id] = msg.grad
         self._maybe_complete_round()
 
@@ -160,6 +178,13 @@ class ParameterServer:
         # depends on it); hybrid asks the K(t) schedule
         k_needed = 1 if self.mode == "async" else \
             self.schedule(self.version)
+        if k_needed != self._last_k:
+            # the paper's async→sync handoff, as a timeline event
+            if self._last_k is not None:
+                self.obs.count("k_switches")
+                self.obs.instant("server", "k_switch", k=k_needed,
+                                 version=self.version)
+            self._last_k = k_needed
         if len(self.buffer) >= k_needed:
             weights = self.buffer.weights(self.version)
             k = len(self.buffer)
@@ -171,12 +196,25 @@ class ParameterServer:
             self._apply(weights, scale)
 
     def _apply(self, weights: np.ndarray, scale: float) -> None:
+        t0 = time.monotonic()
         pub = self.agg.flush_apply(weights, scale)
+        dt = time.monotonic() - t0
         self.version += 1
         self.updates_applied += 1
         self.applied += len(weights)
+        self.obs.observe("flush_s", dt)
+        self.obs.span_at("server", "flush", t0, dt, k=len(weights),
+                         version=self.version)
+        self.obs.count("grads_applied", len(weights))
+        self.obs.count("updates")
+        t1 = time.monotonic()
         self.transport.publish_params(
             ParamsMsg(self.version, pub, epoch=self.restore_epoch))
+        dt1 = time.monotonic() - t1
+        self.obs.observe("publish_s", dt1)
+        self.obs.span_at("server", "publish", t1, dt1,
+                         version=self.version)
+        self.obs.count("params_published")
         if self.max_gradients and self.applied >= self.max_gradients:
             self.done.set()
 
@@ -212,6 +250,10 @@ class ParameterServer:
         with self.lock:
             lost = len(self.buffer) + len(self._round)
             self.dropped += lost
+            self.obs.count("drops.restore", lost)
+            self.obs.count("restores")
+            self.obs.instant("server", "restore", step=int(step),
+                             lost=lost)
             self.buffer.discard()
             self._round = {}
             self.agg.reset_params(params)

@@ -45,10 +45,16 @@ class ClusterTrainer:
     last run are kept on ``self.last_params``."""
 
     def __init__(self, ckpt_dir: Optional[str] = None,
-                 resume_from: Optional[str] = None, verbose: bool = False):
+                 resume_from: Optional[str] = None, verbose: bool = False,
+                 trace: Optional[str] = None):
         self.ckpt_dir = ckpt_dir
         self.resume_from = resume_from
         self.verbose = verbose
+        # Chrome trace-event output path (--trace): a run artifact like
+        # --out, deliberately NOT an ExperimentSpec field — the spec
+        # travels over the wire to proc/host workers and must describe
+        # the experiment, not one invocation's local output files
+        self.trace = trace
         self.last_params = None
 
     def build_runtime(self, spec: "ExperimentSpec") -> ClusterRuntime:
@@ -104,7 +110,7 @@ class ClusterTrainer:
             proc_ready_timeout_s=600.0 if spec.transport == "host"
             else 180.0,
             ckpt_dir=ckpt_dir, resume_from=self.resume_from,
-            verbose=self.verbose)
+            verbose=self.verbose, trace=self.trace)
         if ckpt_dir is not None and self.ckpt_dir is None:
             runtime.events.append({"t": 0.0,
                                    "event": "ckpt_dir_provisioned",
@@ -124,9 +130,23 @@ class ClusterTrainer:
         if runtime.listen_address is not None:
             bind_host, bind_port = runtime.listen_address
             result.extra["listen"] = f"{bind_host}:{bind_port}"
-        if cres.serving is not None:
-            # serving-plane report: per-client params-push accounting
-            result.extra["serving"] = cres.serving
+        # serving-plane report: always present on the cluster backend
+        # (empty-shaped when the transport has no serving plane), so
+        # consumers never have to probe for the key — see api/result.py
+        result.extra["serving"] = cres.serving if cres.serving \
+            is not None else {"clients": 0, "rejected_peers": 0,
+                              "serve_every": 1, "stats_clients": 0,
+                              "per_client": []}
+        # telemetry summary + ledger cross-check (see repro.obs)
+        if cres.telemetry is not None:
+            result.extra["telemetry"] = cres.telemetry
+        if runtime.trace_path:
+            from repro.obs import write_chrome_trace
+            n = write_chrome_trace(runtime.obs, runtime.trace_path)
+            result.extra["trace_path"] = runtime.trace_path
+            if self.verbose:
+                print(f"[cluster] wrote {n} trace events to "
+                      f"{runtime.trace_path}", flush=True)
         return result
 
     def run(self, spec: "ExperimentSpec") -> "RunResult":

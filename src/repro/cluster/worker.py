@@ -35,19 +35,21 @@ Every transport wait here is a short *positive* timeout (never ``None``
 from __future__ import annotations
 
 import threading
+import time
 import traceback
 from typing import Callable, Iterator, Optional
 
 import jax
 
 from repro.cluster.transport import GradientMsg, Transport
+from repro.obs.telemetry import NULL
 
 
 class Worker(threading.Thread):
     def __init__(self, worker_id: int, *, grad_fn: Callable,
                  batches: Iterator, transport: Transport, mode: str,
                  straggle_s: float = 0.0, generation: int = 0,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None, obs=None):
         super().__init__(name=name or f"worker-{worker_id}.{generation}",
                          daemon=True)
         self.worker_id = worker_id
@@ -60,6 +62,7 @@ class Worker(threading.Thread):
         self.stop_event = threading.Event()
         self.sent = 0            # gradients actually handed to the server
         self.error: Optional[str] = None
+        self.obs = obs if obs is not None else NULL
 
     def run(self) -> None:
         try:
@@ -93,17 +96,28 @@ class Worker(threading.Thread):
                     continue
             epoch = getattr(msg, "epoch", 0)
             x, y = next(self.batches)
+            t0 = time.monotonic()
             grad = self.grad_fn(msg.params, x, y)
             jax.block_until_ready(grad)
+            dt = time.monotonic() - t0
+            self.obs.observe("grad_s", dt)
+            self.obs.observe(f"grad_s.w{self.worker_id}", dt)
+            self.obs.span_at(f"worker/{self.worker_id}", "grad_compute",
+                             t0, dt, version=msg.version)
             if self.straggle_s and self.stop_event.wait(self.straggle_s):
                 break           # killed mid-straggle: gradient is lost
             out = GradientMsg(self.worker_id, grad, msg.version,
                               self.sent + 1)
+            t0 = time.monotonic()
             ok = False          # bounded queue: block until the server
             while not ok and not self.stop_event.is_set():  # drains, or
                 ok = self.transport.send_gradient(out, timeout=0.05)
             if not ok:
                 break           # ...killed while blocked: gradient lost
+            wait = time.monotonic() - t0
+            self.obs.observe("send_wait_s", wait)
+            self.obs.span_at(f"worker/{self.worker_id}", "send_wait",
+                             t0, wait, version=msg.version)
             self.sent += 1
             if self.mode == "sync":
                 next_version = msg.version + 1

@@ -1,0 +1,220 @@
+"""``python -m repro top HOST:PORT`` — live remote run introspection.
+
+:class:`StatsClient` rides the STATS handshake
+(:func:`repro.cluster.hostlink.negotiate_stats`): it receives the
+leader's WELCOME (``stats_id`` + push cadence), then a reader thread
+keeps a local cell current from the hub's JSON telemetry pushes —
+ledger counters, staleness percentiles, queue depth — a few hundred
+bytes per tick, never a params slab.  Stats clients hold no worker-id,
+never enter the fleet barrier or the conservation ledger, and the hub
+never sends them the params broadcast, so attaching one to a live sync
+run leaves the trained model bitwise-identical (regression-tested in
+``tests/test_obs.py``).
+
+:func:`top_main` is the CLI body: one line per push with grads/sec
+computed from consecutive applied-counter deltas, staleness p50/p99,
+and the live ledger columns.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional, TextIO
+
+from repro.cluster.mptransport import (_CTRL, _F_PING, _F_REJECT,
+                                       _F_STATS, _HDR, _MAX_FRAME,
+                                       _pong_frame, _recv_exact,
+                                       WireProtocolError)
+
+class StatsClient:
+    """One read-only telemetry subscription to a training leader.
+
+    ``wait_stats(timeout)`` blocks for the next *unconsumed* push (None
+    on timeout / close) — pushes are coalesced into a single latest
+    cell, so a slow caller skips ticks instead of queueing them.
+    """
+
+    def __init__(self, address: Any, *, connect_timeout: float = 30.0):
+        from repro.cluster.hostlink import negotiate_stats
+        sock, cfg = negotiate_stats(address,
+                                    connect_timeout=connect_timeout)
+        self.welcome: Dict[str, Any] = cfg
+        self.stats_id = int(cfg.get("stats_id", -1))
+        sock.settimeout(None)
+        self.sock = sock
+        self.closed = threading.Event()
+        self.reject_reason: Optional[str] = None
+        self.pushes_seen = 0
+        self._cell: Optional[Dict[str, Any]] = None
+        self._cell_seq = 0                  # bumps on every push
+        self._taken_seq = 0                 # last seq wait_stats returned
+        self._cond = threading.Condition()
+        self._wlock = threading.Lock()
+        self._close_lock = threading.Lock()
+        self._closed_once = False
+        self._reader = threading.Thread(
+            target=self._read_loop, name=f"stats-reader-{self.stats_id}",
+            daemon=True)
+        self._reader.start()
+
+    # ---------------------------------------------------------- threads
+    def _read_loop(self) -> None:
+        try:
+            while not self.closed.is_set():
+                hdr, _ = _recv_exact(self.sock, _HDR.size)
+                if hdr is None:
+                    break
+                ftype, n = _HDR.unpack(hdr)
+                if n > _MAX_FRAME:
+                    break
+                payload, _ = _recv_exact(self.sock, n)
+                if payload is None:
+                    break
+                if ftype == _F_PING:
+                    with self._wlock:
+                        try:
+                            self.sock.sendall(_pong_frame())
+                        except OSError:
+                            break
+                elif ftype == _F_STATS and n > _CTRL.size:
+                    try:
+                        doc = json.loads(
+                            payload[_CTRL.size:].decode("utf-8"))
+                    except (ValueError, UnicodeDecodeError):
+                        continue            # malformed tick: skip it
+                    with self._cond:
+                        self._cell = doc
+                        self._cell_seq += 1
+                        self.pushes_seen += 1
+                        self._cond.notify_all()
+                elif ftype == _F_REJECT:
+                    reason = payload[_CTRL.size:].decode(
+                        "utf-8", "replace") if n >= _CTRL.size else ""
+                    self.reject_reason = reason or "rejected by hub"
+                    break
+                # other frame types: ignored (forward compat)
+        finally:
+            self.close()
+
+    def _mark_closed(self) -> None:
+        self.closed.set()
+        with self._cond:
+            self._cond.notify_all()
+
+    # -------------------------------------------------------------- api
+    def wait_stats(self, timeout: Optional[float] = None
+                   ) -> Optional[Dict[str, Any]]:
+        """The next push not yet returned by this method (coalesced:
+        only the latest is kept)."""
+        deadline = None if timeout is None else \
+            time.monotonic() + timeout
+        with self._cond:
+            while self._taken_seq == self._cell_seq:
+                if self.closed.is_set():
+                    return None
+                remain = None if deadline is None else \
+                    deadline - time.monotonic()
+                if remain is not None and remain <= 0:
+                    return None
+                self._cond.wait(0.1 if remain is None
+                                else min(0.1, remain))
+            self._taken_seq = self._cell_seq
+            return self._cell
+
+    def close(self) -> None:
+        with self._close_lock:
+            if self._closed_once:
+                return
+            self._closed_once = True
+        self._mark_closed()
+        try:
+            self.sock.shutdown(2)           # SHUT_RDWR
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ================================================================ CLI
+
+
+def _fmt_line(doc: Dict[str, Any], rate: Optional[float]) -> str:
+    """One `repro top` row from one stats payload."""
+    if doc.get("state") == "waiting":
+        return "[top] waiting: leader is up but the run has not started"
+    st = doc.get("staleness") or {}
+    p50 = st.get("p50")
+    p99 = st.get("p99")
+    stale = "stale p50/p99 -/-" if p50 is None else \
+        f"stale p50/p99 {p50:.0f}/{p99:.0f}"
+    rate_s = "grads/s     -" if rate is None else \
+        f"grads/s {rate:7.1f}"
+    return (f"[top] v{doc.get('version', 0):<6} {rate_s}  {stale}  "
+            f"applied {doc.get('applied', 0):<7} "
+            f"dropped {doc.get('dropped', 0):<5} "
+            f"buffered {doc.get('buffered', 0):<4} "
+            f"pending {doc.get('pending_round', 0):<4} "
+            f"queue {doc.get('queue_depth', 0):<4} "
+            f"workers {doc.get('live_workers', 0)}/"
+            f"{doc.get('num_workers', 0)} "
+            f"serve {doc.get('serve_clients', 0)} "
+            f"[{doc.get('mode', '?')}]")
+
+
+def top_main(address: str, *, count: Optional[int] = None,
+             duration_s: Optional[float] = None,
+             connect_timeout: float = 30.0,
+             out: Optional[TextIO] = None) -> int:
+    """``python -m repro top`` body: stream the leader's telemetry
+    pushes as one line each until EOF / ``count`` rows /
+    ``duration_s``.  Exit codes: 0 ok (including a leader that goes
+    away mid-watch), 4 rejected by the leader / unreachable."""
+    out = out if out is not None else sys.stdout
+    try:
+        client = StatsClient(address, connect_timeout=connect_timeout)
+    except WireProtocolError as e:
+        print(f"top failed: {e}", file=sys.stderr, flush=True)
+        return 4
+    try:
+        print(f"[top] stats client {client.stats_id} connected to "
+              f"{address} (push every "
+              f"{client.welcome.get('stats_every_s', '?')}s)",
+              file=out, flush=True)
+        rows = 0
+        prev: Optional[Dict[str, Any]] = None   # (for the rate delta)
+        prev_t: Optional[float] = None
+        t_start = time.monotonic()
+        while count is None or rows < count:
+            if duration_s is not None \
+                    and time.monotonic() - t_start > duration_s:
+                break
+            doc = client.wait_stats(timeout=1.0)
+            now = time.monotonic()
+            if doc is None:
+                if client.closed.is_set():
+                    break
+                continue
+            rate = None
+            if prev is not None and prev_t is not None \
+                    and "applied" in doc and "applied" in prev \
+                    and now > prev_t:
+                rate = (doc["applied"] - prev["applied"]) \
+                    / (now - prev_t)
+            print(_fmt_line(doc, rate), file=out, flush=True)
+            rows += 1
+            if "applied" in doc:
+                prev, prev_t = doc, now
+        if client.reject_reason:
+            print(f"top: rejected by leader: {client.reject_reason}",
+                  file=sys.stderr, flush=True)
+            return 4
+        if client.closed.is_set() and rows > 0:
+            print("[top] leader closed the connection (run over)",
+                  file=out, flush=True)
+        return 0
+    finally:
+        client.close()
