@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test quickstart smoke-sim smoke-train smoke-cluster smoke-proc \
-	smoke-host examples bench-server bench-serve perf-gate
+	smoke-host smoke-elastic examples bench-server bench-serve perf-gate
 
 # Benchmark env tuning (standard JAX-on-CPU serving practice): force a
 # small multi-device host topology so device placement is exercised,
@@ -71,6 +71,15 @@ smoke-host:
 	  wait $$LEADER; RC=$$?; \
 	  wait $$J1; R1=$$?; wait $$J2; R2=$$?; \
 	  [ $$RC -eq 0 ] && [ $$R1 -eq 0 ] && [ $$R2 -eq 0 ]'
+
+# elastic fleet: a leader seeded at 2 workers with an admission
+# ceiling of 3 admits a late joiner mid-run, survives a SIGKILLed
+# worker whose shard is re-leased at a bumped generation, and is gated
+# on exit codes AND the exact conservation ledger.  The hard timeout
+# turns any membership hang (a barrier that never degraded, a lease
+# never reclaimed) into a fast failure
+smoke-elastic:
+	timeout 360 $(PY) examples/smoke_elastic.py
 
 # server aggregation hot path (slab vs pre-PR pytree) plus the
 # end-to-end transport grid (in-proc threads vs multi-proc workers),

@@ -1,0 +1,151 @@
+"""Elastic-fleet smoke: online admission + SIGKILL shard re-lease.
+
+The three-terminal elasticity quickstart, scripted as one process (the
+CI gate behind ``make smoke-elastic``):
+
+  1. a leader starts with a seed fleet of 2 and an admission ceiling of
+     3 (``--max-workers``), and two ``repro join`` process groups come
+     up;
+  2. a third joiner is admitted *mid-run* — the fleet grows beyond the
+     seed, staging buffer and K(t) schedule resized online;
+  3. one seed worker is SIGKILLed (no goodbye, no flush); its shard is
+     re-leased to a fresh process at a bumped generation;
+  4. the run is wrapped up and gated on exit codes (every surviving
+     joiner exits 0, the killed one shows SIGKILL) and on the exact
+     conservation ledger: computed == applied + dropped + buffered +
+     pending + in-flight, across every grow / kill / re-lease.
+
+  PYTHONPATH=src python examples/smoke_elastic.py
+
+Exits 0 only if every gate holds; any hang is bounded by the Makefile's
+hard ``timeout``.
+"""
+import sys
+import threading
+import time
+
+
+def _poll(predicate, timeout_s, what):
+    deadline = time.monotonic() + timeout_s
+    while not predicate():
+        if time.monotonic() >= deadline:
+            print(f"[elastic] FAIL: timed out waiting: {what}")
+            sys.exit(1)
+        time.sleep(0.05)
+
+
+def main():
+    from repro.api import ExperimentSpec
+    from repro.cluster.hostlink import spawn_join_process
+    from repro.cluster.trainer import ClusterTrainer
+
+    spec = ExperimentSpec(
+        arch="mlp", backend="cluster", mode="async", smoke=True,
+        cluster_workers=2, max_workers=3, wall_budget_s=120.0,
+        wall_sample_every_s=30.0, batch=16, transport="host",
+        listen="127.0.0.1:0")
+    trainer = ClusterTrainer()
+    runtime = trainer.build_runtime(spec)
+    addr = runtime.listen_address
+    print(f"[elastic] leader on {addr[0]}:{addr[1]} — seed fleet 2, "
+          "admission ceiling 3")
+
+    def applied():
+        server = getattr(runtime, "server", None)
+        return server.applied if server is not None else 0
+
+    box = {}
+    leader = threading.Thread(
+        target=lambda: box.update(res=trainer.finish(runtime, spec)),
+        daemon=True)
+    j0 = spawn_join_process(addr, worker_id=0, platform="cpu")
+    j1 = spawn_join_process(addr, worker_id=1, platform="cpu")
+    leader.start()
+    _poll(lambda: runtime.transport.live_workers() >= {0, 1},
+          180.0, "seed fleet assembled")
+    _poll(lambda: applied() > 0, 60.0, "seed fleet training")
+    print(f"[elastic] seed fleet training ({applied()} gradients "
+          "applied)")
+
+    # online admission: a third host dials the live run
+    j2 = spawn_join_process(addr, platform="cpu")
+    _poll(lambda: 2 in runtime.transport.live_workers(),
+          180.0, "third worker admitted mid-run")
+    # the hub admits the HELLO a beat before the runtime's
+    # ready-callback grows the fleet — poll the growth too
+    _poll(lambda: runtime.fleet_size == 3, 30.0, "fleet grew to 3")
+    print(f"[elastic] worker 2 admitted mid-run — fleet grew to "
+          f"{runtime.fleet_size}")
+    mark = applied()
+    _poll(lambda: applied() > mark, 60.0, "grown fleet training")
+
+    # departure: SIGKILL a seed worker, then re-lease its shard
+    j1.kill()
+    _poll(lambda: 1 not in runtime.transport.live_workers(),
+          60.0, "killed worker reaped")
+    print("[elastic] worker 1 SIGKILLed and reaped — re-leasing its "
+          "shard")
+    j3 = spawn_join_process(addr, worker_id=1, platform="cpu")
+    _poll(lambda: 1 in runtime.transport.live_workers(),
+          180.0, "shard re-leased")
+    mark = applied()
+    _poll(lambda: applied() > mark, 60.0, "re-leased fleet training")
+    print(f"[elastic] shard re-leased, fleet training again "
+          f"({applied()} gradients applied)")
+
+    runtime.server.done.set()           # smoke over — wrap up the run
+    leader.join(timeout=120.0)
+    if leader.is_alive():
+        print("[elastic] FAIL: leader never finished")
+        return 1
+
+    codes = {}
+    for name, proc in (("j0", j0), ("j2", j2), ("j3", j3)):
+        try:
+            codes[name] = proc.wait(timeout=60)
+        except Exception:
+            proc.kill()
+            codes[name] = "stranded"
+    if j1.poll() is None:
+        j1.kill()
+    j1.wait(timeout=30)
+
+    ok = True
+    if codes != {"j0": 0, "j2": 0, "j3": 0}:
+        print(f"[elastic] FAIL: surviving joiner exit codes {codes}")
+        ok = False
+    if j1.returncode >= 0:      # SIGKILL surfaces as a negative code
+        print(f"[elastic] FAIL: killed worker exited {j1.returncode}, "
+              "expected a signal death")
+        ok = False
+
+    res = box.get("res")
+    if res is None:
+        print("[elastic] FAIL: no run result")
+        return 1
+    a = res.extra["accounting"]
+    lhs = a["computed"]
+    rhs = (a["applied"] + a["dropped"] + a["buffered"]
+           + a["pending_round"] + a["in_flight"])
+    if lhs != rhs:
+        print(f"[elastic] FAIL: ledger leak — computed {lhs} != "
+              f"applied+dropped+buffered+pending+in_flight {rhs}: {a}")
+        ok = False
+    if set(a["computed_per_worker"]) != {"0", "1", "2"}:
+        print("[elastic] FAIL: per-worker ledger missing members: "
+              f"{a['computed_per_worker']}")
+        ok = False
+    grew = [e for e in res.extra["events"] if e["event"] == "fleet_grow"]
+    if not grew or grew[0]["to_workers"] != 3:
+        print(f"[elastic] FAIL: no fleet_grow to 3 in events: {grew}")
+        ok = False
+    if not ok:
+        return 1
+    print(f"[elastic] OK: {a['applied']} gradients applied, ledger "
+          f"exact across admit/kill/re-lease "
+          f"(per-worker {a['computed_per_worker']})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -126,6 +126,11 @@ _SPEC_FLAGS = [
     ("--serve-every", "serve_every", int,
      "serving plane: push every Nth params version to serve clients "
      "(staleness-vs-bandwidth knob; default 1 = every version)"),
+    ("--max-workers", "max_workers", int,
+     "cluster host transport: elastic admission ceiling — `repro join` "
+     "workers beyond --cluster-workers grow the fleet online up to "
+     "this many ids (default: --cluster-workers, i.e. fixed "
+     "membership)"),
 ]
 # fault-plan flags (cluster backend): merged into spec.faults
 _FAULT_FLAGS = [
@@ -184,6 +189,12 @@ def _add_spec_flags(ap: argparse.ArgumentParser, backend_flag: bool):
                     help="cluster: write a Chrome trace-event / "
                          "Perfetto JSON timeline of the run here (load "
                          "in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--join-secret", default=None, metavar="SECRET",
+                    help="cluster host transport: require joiners to "
+                         "prove this shared secret (HMAC challenge/"
+                         "response on JOIN); an invocation credential, "
+                         "never written into the spec (env: "
+                         "REPRO_JOIN_SECRET)")
     ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
                     help="repro.* logger level (default warning)")
 
@@ -236,9 +247,12 @@ def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
                                        verbose=not args.quiet)
     elif spec.backend == "cluster":
         from repro.cluster.trainer import ClusterTrainer
+        join_secret = getattr(args, "join_secret", None) \
+            or os.environ.get("REPRO_JOIN_SECRET") or None
         trainer = ClusterTrainer(ckpt_dir=args.ckpt_dir,
                                  resume_from=args.resume_from,
-                                 verbose=not args.quiet, trace=trace)
+                                 verbose=not args.quiet, trace=trace,
+                                 join_secret=join_secret)
     else:
         trainer = trainers.SimulatorTrainer()
     result = trainer.run(spec)
@@ -295,20 +309,36 @@ def _cmd_join(rest: List[str]) -> int:
     ap.add_argument("--workers", type=int, default=1,
                     help="join this many workers, one OS process each "
                          "(default 1)")
-    ap.add_argument("--connect-timeout", type=float, default=60.0,
-                    help="keep retrying the leader for this many "
-                         "seconds (the leader may not be up yet)")
+    ap.add_argument("--connect-timeout", "--join-timeout",
+                    dest="connect_timeout", type=float, default=60.0,
+                    help="keep retrying the leader (refused/busy, with "
+                         "jittered backoff) for this many seconds "
+                         "before exiting 4 with the leader's reason "
+                         "(the leader may not be up yet)")
+    ap.add_argument("--join-secret", default=None, metavar="SECRET",
+                    help="shared secret for a leader started with "
+                         "--join-secret (answers its HMAC challenge; "
+                         "env: REPRO_JOIN_SECRET)")
+    ap.add_argument("--reconnect", dest="reconnect_s", type=float,
+                    default=5.0, metavar="SECONDS",
+                    help="after a mid-run connection drop, try to "
+                         "rejoin the same worker-id lease for this "
+                         "many seconds before giving up cleanly "
+                         "(default 5; 0 disables)")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress join progress logs")
     ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
                     help="repro.* logger level (default warning)")
     args = ap.parse_args(rest)
     setup_logging(args.log_level)
+    secret = args.join_secret \
+        or os.environ.get("REPRO_JOIN_SECRET") or None
     from repro.cluster.hostlink import join_main
     code = join_main(args.address, worker_id=args.worker_id,
                      workers=args.workers,
                      connect_timeout=args.connect_timeout,
-                     verbose=not args.quiet)
+                     verbose=not args.quiet, secret=secret,
+                     reconnect_s=args.reconnect_s)
     sys.stdout.flush()
     sys.stderr.flush()
     # skip interpreter finalization: this process ran a JAX runtime and

@@ -82,6 +82,12 @@ class ExperimentSpec:
     #                                version to serve clients (the
     #                                staleness-vs-bandwidth knob; 1 =
     #                                every version)
+    max_workers: Optional[int] = None   # host transport: elastic
+    #                                admission ceiling — JOINs beyond
+    #                                cluster_workers grow the fleet up
+    #                                to this many ids; None = fixed
+    #                                membership (pre-elastic behavior,
+    #                                bit for bit)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -126,6 +132,17 @@ class ExperimentSpec:
         if self.serve_every < 1:
             raise ValueError(f"serve_every must be >= 1, "
                              f"got {self.serve_every!r}")
+        if self.max_workers is not None:
+            if self.transport != "host":
+                raise ValueError(
+                    "max_workers (elastic admission) requires "
+                    'transport="host", got '
+                    f"transport={self.transport!r}")
+            if self.max_workers < self.cluster_workers:
+                raise ValueError(
+                    f"max_workers must be >= cluster_workers "
+                    f"({self.cluster_workers}), "
+                    f"got {self.max_workers!r}")
 
     # --------------------------------------------------------- derivation
     def with_(self, **changes) -> "ExperimentSpec":

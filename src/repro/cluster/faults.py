@@ -50,6 +50,21 @@ class FaultPlan:
                                  f"got {getattr(self, f)!r}")
 
     # ------------------------------------------------------------ queries
+    def validate_worker_ids(self, limit: int) -> None:
+        """Raise when the plan names a worker id the fleet can never
+        hold.  ``limit`` is the *admission ceiling* (``max_workers`` on
+        an elastic fleet, the fleet size otherwise): a fault aimed at a
+        not-yet-joined elastic worker is legitimate — it simply finds
+        nobody to kill if the worker never arrives."""
+        bad_ids = sorted({wid for wid, _ in (*self.stragglers,
+                                             *self.kill)
+                          if wid >= limit})
+        if bad_ids:
+            raise ValueError(
+                f"FaultPlan names worker ids {bad_ids} but the fleet "
+                f"can hold at most {limit} workers (ids 0.."
+                f"{limit - 1})")
+
     def straggle_s(self, worker_id: int) -> float:
         """Extra seconds this worker sleeps per gradient (0 = healthy)."""
         return dict(self.stragglers).get(worker_id, 0.0)

@@ -33,10 +33,29 @@ generation, and a HELLO carrying a generation older than the current
 lease is fenced out: a superseded worker that limps back cannot
 double-feed a shard the fleet already re-assigned.
 
+**Elastic membership** — the fleet is only *seeded* at
+``cluster_workers``; with ``max_workers > cluster_workers`` the leader
+keeps admitting joiners mid-run up to that cap (the runtime grows the
+staging buffer and re-derives the K(t) schedule online).  A departed
+worker's id enters a short **re-lease grace window**: its own host can
+resume it immediately (``JOIN(w)`` — the reconnect path), while an
+*auto* join (``JOIN(-1)``) only receives it after the window expires,
+so a blip never permanently hands a shard to a stranger.  Auto joins
+retry grace/full rejections within their deadline (``BUSY_MARKER``).
+
+**Authenticated JOIN** — a leader started with a shared join secret
+answers JOIN with CHALLENGE (random nonce); the joiner proves the
+secret via AUTH = HMAC-SHA256(secret, nonce) and only then receives
+WELCOME.  Wrong digests, and direct HELLOs that skip the challenge,
+are rejected readably and never enter the barrier.  Read-only
+SERVE/STATS peers are not challenged.
+
 The leader cannot respawn a remote worker (it does not own the remote
 machine) — a kill fault on this transport cuts the worker's connection
 (a network fault; the remote process exits cleanly on EOF), and
-replacement capacity rejoins from its own host.
+replacement capacity rejoins from its own host — ``repro join``'s
+reconnect-with-backoff does exactly that, resuming the old lease
+through the generation fence.
 
 **Serve handshake** — same shape, no lease::
 
@@ -52,20 +71,25 @@ drives this to run inference against live training params.
 """
 from __future__ import annotations
 
+import hmac
 import json
 import logging
 import os
+import random
 import socket
 import subprocess
 import sys
 import threading
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterator, Optional, Tuple
 
-from repro.cluster.mptransport import (_CTRL, _F_PARAMS, _F_PING,
+from repro.cluster.mptransport import (_AUTH_NONCE_LEN, _CTRL,
+                                       _F_CHALLENGE, _F_PARAMS, _F_PING,
                                        _F_PONG, _F_REJECT, _F_WELCOME,
-                                       _HDR, _MAX_FRAME, _join_frame,
+                                       _HDR, _MAX_FRAME, _auth_digest,
+                                       _auth_frame, _challenge_frame,
+                                       _join_frame,
                                        _peer_error, _recv_exact,
                                        _serve_frame, _stats_frame,
                                        _welcome_frame,
@@ -139,13 +163,26 @@ class HostTransport(SocketTransport):
                  host: str = "127.0.0.1", port: int = 0,
                  num_workers: int, welcome_config:
                  Optional[Dict[str, Any]] = None,
-                 heartbeat_s: float = 2.0, serve_every: int = 1):
+                 heartbeat_s: float = 2.0, serve_every: int = 1,
+                 max_workers: Optional[int] = None,
+                 join_secret: Optional[str] = None,
+                 lease_grace_s: float = 2.0):
         super().__init__(grad_capacity, family="tcp", host=host,
                          port=port, heartbeat_s=heartbeat_s,
                          serve_every=serve_every)
         self.num_workers = int(num_workers)
+        # the admission ceiling AND the data-shard space: every joiner
+        # shards over max_workers for the whole run, so admitting a
+        # late worker never re-partitions anyone else's data.  With no
+        # elastic cap it equals num_workers — the pre-elastic contract,
+        # bit for bit
+        self.max_workers = max(self.num_workers,
+                               int(max_workers or self.num_workers))
+        self.join_secret = join_secret or None
+        self.lease_grace_s = float(lease_grace_s)
         self.welcome_config = dict(welcome_config or {})
         self._leases: Dict[int, int] = {}       # worker_id -> generation
+        self._departed: Dict[int, float] = {}   # worker_id -> close time
         self._lease_lock = threading.Lock()
 
     # ------------------------------------------------------------ leases
@@ -165,29 +202,77 @@ class HostTransport(SocketTransport):
         return taken
 
     def _on_join(self, conn, requested_id: int) -> Optional[str]:
+        if self._draining:
+            # permanent (no BUSY_MARKER): a worker whose reconnect
+            # races the shutdown gets a fast, clean no instead of
+            # retrying against a dying leader
+            return ("the run is shutting down — no new workers are "
+                    "being admitted")
+        if self.join_secret and not conn.auth_ok:
+            # park the JOIN behind a challenge; _on_auth grants the
+            # lease once the digest verifies.  The nonce is per-attempt
+            # random, so a captured AUTH frame cannot be replayed
+            conn.pending_join = int(requested_id)
+            conn.auth_nonce = os.urandom(_AUTH_NONCE_LEN)
+            conn.awaiting_auth = True
+            conn.send_frame(_challenge_frame(conn.auth_nonce))
+            return None
+        return self._grant_lease(conn, requested_id)
+
+    def _on_auth(self, conn, digest: bytes) -> Optional[str]:
+        secret, nonce = self.join_secret, conn.auth_nonce
+        if not secret or nonce is None:
+            return "unexpected AUTH frame — this hub issued no challenge"
+        if not hmac.compare_digest(_auth_digest(secret, nonce),
+                                   bytes(digest)):
+            return ("join authentication failed: the AUTH digest does "
+                    "not match this leader's join secret (check "
+                    "--join-secret on both sides)")
+        conn.awaiting_auth = False
+        conn.auth_ok = True
+        req, conn.pending_join = conn.pending_join, None
+        return self._grant_lease(conn, -1 if req is None else req)
+
+    def _grant_lease(self, conn, requested_id: int) -> Optional[str]:
         with self._lease_lock:
             taken = self._taken_ids()
+            now = time.monotonic()
             if requested_id < 0:
-                free = [w for w in range(self.num_workers)
+                free = [w for w in range(self.max_workers)
                         if w not in taken]
                 if not free:
                     return (f"{BUSY_MARKER} fleet is full: all "
-                            f"{self.num_workers} worker ids are joined")
-                wid = free[0]
+                            f"{self.max_workers} worker ids are joined")
+                # an auto join never receives a recently-departed id
+                # inside its re-lease grace window — the departed host
+                # may be mid-reconnect and would find its shard stolen
+                open_now = [w for w in free
+                            if now - self._departed.get(w, -1e18)
+                            >= self.lease_grace_s]
+                if not open_now:
+                    return (f"{BUSY_MARKER} every free worker id is "
+                            "inside the "
+                            f"{self.lease_grace_s:.1f}s re-lease grace "
+                            "window (its previous holder may rejoin)")
+                wid = open_now[0]
             else:
-                if requested_id >= self.num_workers:
+                if requested_id >= self.max_workers:
                     return (f"worker id {requested_id} out of range "
-                            f"(fleet size {self.num_workers})")
+                            f"(fleet size {self.max_workers})")
                 if requested_id in taken:
                     return (f"{BUSY_MARKER} worker id {requested_id} "
                             "is already joined")
+                # an explicit request skips the grace window: it IS the
+                # departed holder resuming its shard (the reconnect
+                # path), fenced by the generation bump either way
                 wid = requested_id
             generation = self._leases.get(wid, -1) + 1
             self._leases[wid] = generation
             conn.leased_wid = wid
+            self._departed.pop(wid, None)
         cfg = dict(self.welcome_config)
         cfg.update(worker_id=wid, generation=generation,
-                   num_workers=self.num_workers,
+                   num_workers=self.max_workers,
                    heartbeat_s=self.heartbeat_s)
         conn.send_frame(_welcome_frame(cfg))
         _log.info("leased worker id %d (generation %d)", wid, generation)
@@ -230,11 +315,18 @@ class HostTransport(SocketTransport):
 
     def _admit_hello(self, conn, worker_id: int,
                      generation: int) -> Optional[str]:
-        if not 0 <= worker_id < self.num_workers:
+        if not 0 <= worker_id < self.max_workers:
             # an out-of-range id would count toward the fleet barrier
             # while its data shard doesn't exist — never admit it
             return (f"worker id {worker_id} out of range (fleet size "
-                    f"{self.num_workers})")
+                    f"{self.max_workers})")
+        if self.join_secret and not conn.auth_ok:
+            # the challenge lives on the JOIN leg; a bare HELLO would
+            # bypass it, so on a secured leader only authenticated
+            # joiners reach the barrier
+            return ("this leader requires an authenticated JOIN "
+                    "(shared --join-secret) — a direct HELLO is not "
+                    "accepted")
         with self._lease_lock, self._conns_cond:
             for c in self._conns:
                 # a leased-but-still-compiling joiner holds its id too
@@ -257,7 +349,19 @@ class HostTransport(SocketTransport):
             # racing admission or join for the same id must see this
             # connection as its holder (no duplicate-shard TOCTOU)
             conn.worker_id, conn.generation = worker_id, generation
+            self._departed.pop(worker_id, None)
             return None
+
+    def _conn_closed(self, conn) -> None:
+        # record the departure time before the base class reaps the
+        # connection: the re-lease grace window for auto joins is
+        # measured from here
+        wid = conn.worker_id if conn.worker_id is not None \
+            else conn.leased_wid
+        if wid is not None:
+            with self._lease_lock:
+                self._departed[wid] = time.monotonic()
+        super()._conn_closed(conn)
 
     # ------------------------------------------------------------ faults
     def kill_worker(self, worker_id: int) -> bool:
@@ -276,38 +380,56 @@ class HostTransport(SocketTransport):
 # =========================================================== join side
 
 
+def _backoff_delays(base: float = 0.1, cap: float = 1.0
+                    ) -> Iterator[float]:
+    """Jittered exponential backoff: base, 2·base, … capped, each
+    ±50% jittered so a fleet of joiners dialing a restarting leader
+    never thunders in lockstep."""
+    delay = base
+    while True:
+        yield delay * random.uniform(0.5, 1.5)
+        delay = min(cap, delay * 2.0)
+
+
 def _connect_retry(host: str, port: int,
                    timeout: float) -> socket.socket:
-    """Dial the leader, retrying until it is up (the two-terminal
-    quickstart and scripted smoke tests start both sides concurrently)."""
+    """Dial the leader, retrying with jittered exponential backoff until
+    it is up (the two-terminal quickstart and scripted smoke tests start
+    both sides concurrently)."""
     deadline = time.monotonic() + max(0.0, timeout)
+    delays = _backoff_delays()
     while True:
         try:
             return socket.create_connection((host, port), timeout=5.0)
         except OSError as e:
-            if time.monotonic() > deadline:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
                 raise WireProtocolError(
                     f"could not reach the leader at {host}:{port} "
                     f"within {timeout:.0f}s: {e}") from None
-            time.sleep(0.2)
+            time.sleep(min(next(delays), remaining))
 
 
 
 
 def negotiate_join(address: Any, *, worker_id: Optional[int] = None,
-                   connect_timeout: float = 30.0
+                   connect_timeout: float = 30.0,
+                   secret: Optional[str] = None
                    ) -> Tuple[socket.socket, Dict[str, Any]]:
     """The JOIN handshake: connect, request a worker-id lease, return
     ``(connected socket, welcome config)``.  ``connect_timeout`` covers
     the whole negotiation — an unreachable leader AND transient lease
     contention (e.g. a rejoin racing the teardown of its dead
-    predecessor's connection) are retried until the deadline.  Raises
-    :class:`WireProtocolError` with the leader's readable reason when
-    the rejection is permanent or the deadline expires."""
+    predecessor's connection) are retried with jittered backoff until
+    the deadline.  ``secret`` answers a secured leader's CHALLENGE with
+    the HMAC digest.  Raises :class:`WireProtocolError` with the
+    leader's readable reason when the rejection is permanent or the
+    deadline expires."""
     host, port = parse_hostport(address) if isinstance(address, str) \
         else tuple(address)[:2]
     deadline = time.monotonic() + max(0.0, connect_timeout)
     last_busy: Optional[WireProtocolError] = None
+    delays = _backoff_delays()
     while True:
         sock = None
         try:
@@ -316,7 +438,7 @@ def negotiate_join(address: Any, *, worker_id: Optional[int] = None,
             frame = _join_frame(-1 if worker_id is None
                                 else int(worker_id))
             return sock, _leader_handshake(sock, frame, deadline,
-                                           what="join")
+                                           what="join", secret=secret)
         except WireProtocolError as e:
             if sock is not None:
                 sock.close()    # idempotent (handshake closes on fail)
@@ -324,7 +446,8 @@ def negotiate_join(address: Any, *, worker_id: Optional[int] = None,
                 last_busy = e
                 if time.monotonic() > deadline:
                     raise
-                time.sleep(0.2)
+                time.sleep(min(next(delays),
+                               max(0.0, deadline - time.monotonic())))
                 continue
             if last_busy is not None \
                     and time.monotonic() > deadline:
@@ -369,11 +492,13 @@ def negotiate_stats(address: Any, *, connect_timeout: float = 30.0
 
 
 def _leader_handshake(sock: socket.socket, request: bytes,
-                      deadline: float, what: str = "join"
-                      ) -> Dict[str, Any]:
+                      deadline: float, what: str = "join",
+                      secret: Optional[str] = None) -> Dict[str, Any]:
     """Send one request frame (JOIN or SERVE) and read frames until the
     leader answers WELCOME (returned as the parsed config) or REJECT
-    (raised with the leader's reason)."""
+    (raised with the leader's reason).  A CHALLENGE in between is
+    answered with AUTH = HMAC-SHA256(``secret``, nonce); lacking a
+    secret against a secured leader fails readably."""
     ok = False
     try:
         # re-armed per frame: the deadline covers the WHOLE negotiation
@@ -416,6 +541,13 @@ def _leader_handshake(sock: socket.socket, request: bytes,
             if err is not None:
                 raise WireProtocolError(f"leader handshake failed: {err}")
             body = payload[_CTRL.size:]
+            if ftype == _F_CHALLENGE:
+                if not secret:
+                    raise WireProtocolError(
+                        f"the leader requires an authenticated {what}: "
+                        "pass the shared secret (--join-secret)")
+                sock.sendall(_auth_frame(_auth_digest(secret, body)))
+                continue
             if ftype == _F_REJECT:
                 raise WireProtocolError(
                     f"leader rejected the {what}: "
@@ -455,9 +587,13 @@ def build_slab_worker_fn(spec, worker_id: int, num_workers: int,
 
     grad = jax.jit(_grad_slab)
 
-    def fresh_batches():
+    def fresh_batches(gen: Optional[int] = None):
+        # a rejoining worker reuses the compiled gradient and only
+        # re-derives its stream for the new lease generation
         return shard_iterator(x_tr, y_tr, worker_id, num_workers,
-                              batch, seed=seed, generation=generation)
+                              batch, seed=seed,
+                              generation=generation if gen is None
+                              else int(gen))
 
     # warm up on a throwaway iterator: the training stream must start
     # at batch 0, exactly like an in-process worker's
@@ -466,89 +602,139 @@ def build_slab_worker_fn(spec, worker_id: int, num_workers: int,
     return grad, fresh_batches
 
 
+def _rejoin(address: Any, wid: int, window_s: float, *,
+            secret: Optional[str] = None, verbose: bool = True
+            ) -> Optional[Tuple[socket.socket, Dict[str, Any]]]:
+    """Reconnect after a mid-run drop: re-negotiate the *same* worker id
+    (the explicit request skips the leader's grace window — we ARE the
+    departed holder) for up to ``window_s``.  Returns the new
+    ``(socket, welcome config)`` or ``None`` when the leader is gone,
+    draining, or the window expired — all normal ends of a run."""
+    if verbose:
+        print(f"[join] worker {wid} lost the leader; reconnecting for "
+              f"up to {window_s:.0f}s", flush=True)
+    try:
+        return negotiate_join(address, worker_id=wid,
+                              connect_timeout=window_s, secret=secret)
+    except WireProtocolError as e:
+        if verbose:
+            print(f"[join] worker {wid} will not rejoin: {e}",
+                  flush=True)
+        return None
+
+
 def run_joined_worker(address: Any, *,
                       worker_id: Optional[int] = None,
                       connect_timeout: float = 30.0,
-                      verbose: bool = True) -> int:
+                      verbose: bool = True,
+                      secret: Optional[str] = None,
+                      reconnect_s: float = 0.0) -> int:
     """One joined worker, end to end: JOIN -> WELCOME -> rebuild the
     workload from the wire spec -> compile -> HELLO (ready) -> train
-    until the leader hangs up (EOF) or the run ends.  Returns a process
-    exit code; raises :class:`WireProtocolError` when the leader turns
-    the join away."""
+    until the leader hangs up (EOF) or the run ends.  With
+    ``reconnect_s > 0`` a mid-run drop re-negotiates the same lease
+    (bumped generation, fresh shard stream) for up to that window —
+    a leader that is gone or draining ends the run cleanly instead.
+    Returns a process exit code; raises :class:`WireProtocolError` when
+    the *first* join is turned away (a failed rejoin after at least one
+    completed session exits 0: the run is over or the shard is
+    covered)."""
     sock, cfg = negotiate_join(address, worker_id=worker_id,
-                               connect_timeout=connect_timeout)
-    wid, generation = int(cfg["worker_id"]), int(cfg["generation"])
-    num_workers = int(cfg["num_workers"])
-    if verbose:
-        print(f"[join] leased worker {wid}.{generation} of "
-              f"{num_workers} from {_addr_str(address)}; rebuilding "
-              f"workload", flush=True)
-    try:
-        from repro.api.spec import ExperimentSpec
-        from repro.cluster.worker import Worker
+                               connect_timeout=connect_timeout,
+                               secret=secret)
+    from repro.api.spec import ExperimentSpec
+    from repro.cluster.worker import Worker
 
-        spec = ExperimentSpec.from_dict(cfg["spec"])
-        grad, fresh_batches = build_slab_worker_fn(
-            spec, wid, num_workers, generation,
-            batch=spec.batch, seed=spec.seed)
-        # hung-leader watchdog, sized from the leader's own PING
-        # cadence (announced in WELCOME): generous multiple, so a GC
-        # pause or one slow flush never false-positives
-        hb = float(cfg.get("heartbeat_s") or 0.0)
-        stall_timeout = max(10.0, 5.0 * hb) if hb > 0 else 0.0
-        # HELLO == ready: connect into the fleet barrier only now, so
-        # the leader's serving clock never measures our compile time
-        client = SocketWorkerClient(None, wid, generation=generation,
-                                    heartbeat_timeout_s=stall_timeout,
-                                    sock=sock)
-    except Exception:
-        traceback.print_exc()
-        sys.stderr.flush()
+    built = None            # ((wid, num_workers), (spec, grad, batches))
+    total_sent = sessions = 0
+    wid = generation = 0
+    while True:
+        wid, generation = int(cfg["worker_id"]), int(cfg["generation"])
+        num_workers = int(cfg["num_workers"])
+        if verbose:
+            print(f"[join] leased worker {wid}.{generation} of "
+                  f"{num_workers} from {_addr_str(address)}; rebuilding "
+                  f"workload", flush=True)
         try:
-            sock.close()
-        except OSError:
-            pass
-        return 2
+            if built is None or built[0] != (wid, num_workers):
+                spec = ExperimentSpec.from_dict(cfg["spec"])
+                grad, fresh_batches = build_slab_worker_fn(
+                    spec, wid, num_workers, generation,
+                    batch=spec.batch, seed=spec.seed)
+                built = ((wid, num_workers),
+                         (spec, grad, fresh_batches))
+            else:
+                spec, grad, fresh_batches = built[1]
+            # hung-leader watchdog, sized from the leader's own PING
+            # cadence (announced in WELCOME): generous multiple, so a GC
+            # pause or one slow flush never false-positives
+            hb = float(cfg.get("heartbeat_s") or 0.0)
+            stall_timeout = max(10.0, 5.0 * hb) if hb > 0 else 0.0
+            # HELLO == ready: connect into the fleet barrier only now,
+            # so the leader's serving clock never measures compile time
+            client = SocketWorkerClient(None, wid, generation=generation,
+                                        heartbeat_timeout_s=stall_timeout,
+                                        sock=sock)
+        except Exception:
+            traceback.print_exc()
+            sys.stderr.flush()
+            try:
+                sock.close()
+            except OSError:
+                pass
+            return 2
 
-    worker = Worker(wid, grad_fn=grad, batches=fresh_batches(),
-                    transport=client, mode=spec.mode,
-                    straggle_s=spec.faults.straggle_s(wid),
-                    generation=generation)
-    # leader shutdown/death closes the connection -> closed is set ->
-    # the loop exits: a dead leader can never strand this worker
-    worker.stop_event = client.closed
+        worker = Worker(wid, grad_fn=grad,
+                        batches=fresh_batches(generation),
+                        transport=client, mode=spec.mode,
+                        straggle_s=spec.faults.straggle_s(wid),
+                        generation=generation)
+        # leader shutdown/death closes the connection -> closed is set
+        # -> the loop exits: a dead leader can never strand this worker
+        worker.stop_event = client.closed
+        if verbose:
+            print(f"[join] worker {wid}.{generation} ready (compiled); "
+                  "training", flush=True)
+        worker.run()                        # inline, not as a thread
+        client.flush(5.0)
+        client.close()
+        total_sent += worker.sent
+        sessions += 1
+        if worker.error:
+            print(worker.error, file=sys.stderr, flush=True)
+            return 3
+        if client.reject_reason:
+            print(f"[join] worker {wid}.{generation} was rejected: "
+                  f"{client.reject_reason}", file=sys.stderr, flush=True)
+            return 4
+        if client.stall_reason:
+            print(f"[join] worker {wid}.{generation} gave up: "
+                  f"{client.stall_reason}", file=sys.stderr, flush=True)
+            return 5
+        if reconnect_s <= 0:
+            break
+        nxt = _rejoin(address, wid, reconnect_s, secret=secret,
+                      verbose=verbose)
+        if nxt is None:
+            break
+        sock, cfg = nxt
     if verbose:
-        print(f"[join] worker {wid}.{generation} ready (compiled); "
-              "training", flush=True)
-    worker.run()                            # inline, not as a thread
-    client.flush(5.0)
-    client.close()
-    if worker.error:
-        print(worker.error, file=sys.stderr, flush=True)
-        return 3
-    if client.reject_reason:
-        print(f"[join] worker {wid}.{generation} was rejected: "
-              f"{client.reject_reason}", file=sys.stderr, flush=True)
-        return 4
-    if client.stall_reason:
-        print(f"[join] worker {wid}.{generation} gave up: "
-              f"{client.stall_reason}", file=sys.stderr, flush=True)
-        return 5
-    if verbose:
-        print(f"[join] worker {wid}.{generation} done: {worker.sent} "
-              "gradients sent", flush=True)
+        print(f"[join] worker {wid} done: {total_sent} gradients sent "
+              f"over {sessions} session(s)", flush=True)
     return 0
 
 
-def _join_child(address: str, connect_timeout: float,
-                verbose: bool) -> None:
+def _join_child(address: str, connect_timeout: float, verbose: bool,
+                secret: Optional[str] = None,
+                reconnect_s: float = 0.0) -> None:
     """Child entry point for ``repro join --workers K`` (spawned, one
     JAX runtime each).  ``os._exit`` skips interpreter finalization —
     see ``mptransport._proc_worker_main`` for why."""
     code = 1
     try:
         code = run_joined_worker(address, connect_timeout=connect_timeout,
-                                 verbose=verbose)
+                                 verbose=verbose, secret=secret,
+                                 reconnect_s=reconnect_s)
     except WireProtocolError as e:
         print(f"join failed: {e}", file=sys.stderr, flush=True)
         code = 4
@@ -562,7 +748,8 @@ def _join_child(address: str, connect_timeout: float,
 
 def join_main(address: str, *, worker_id: Optional[int] = None,
               workers: int = 1, connect_timeout: float = 60.0,
-              verbose: bool = True) -> int:
+              verbose: bool = True, secret: Optional[str] = None,
+              reconnect_s: float = 0.0) -> int:
     """``python -m repro join`` body.  ``workers > 1`` spawns one OS
     process per worker (each with its own JAX runtime), mirroring a
     multi-worker host joining the fleet."""
@@ -578,14 +765,16 @@ def join_main(address: str, *, worker_id: Optional[int] = None,
         try:
             return run_joined_worker(address, worker_id=worker_id,
                                      connect_timeout=connect_timeout,
-                                     verbose=verbose)
+                                     verbose=verbose, secret=secret,
+                                     reconnect_s=reconnect_s)
         except WireProtocolError as e:
             print(f"join failed: {e}", file=sys.stderr, flush=True)
             return 4
     import multiprocessing
     ctx = multiprocessing.get_context("spawn")
     procs = [ctx.Process(target=_join_child,
-                         args=(address, connect_timeout, verbose),
+                         args=(address, connect_timeout, verbose,
+                               secret, reconnect_s),
                          name=f"join-{i}") for i in range(workers)]
     for p in procs:
         p.start()
@@ -600,7 +789,9 @@ def join_main(address: str, *, worker_id: Optional[int] = None,
 def spawn_join_process(address: Any, *, workers: int = 1,
                        worker_id: Optional[int] = None,
                        connect_timeout: float = 120.0,
-                       platform: Optional[str] = None
+                       platform: Optional[str] = None,
+                       secret: Optional[str] = None,
+                       reconnect_s: Optional[float] = None
                        ) -> "subprocess.Popen":
     """Launch ``python -m repro join`` as a separate OS process group —
     the test/bench harness's stand-in for a second machine (distinct
@@ -612,6 +803,10 @@ def spawn_join_process(address: Any, *, workers: int = 1,
            "--connect-timeout", str(connect_timeout), "--quiet"]
     if worker_id is not None:
         cmd += ["--worker-id", str(worker_id)]
+    if secret is not None:
+        cmd += ["--join-secret", secret]
+    if reconnect_s is not None:
+        cmd += ["--reconnect", str(reconnect_s)]
     env = dict(os.environ)
     import repro
     pkg_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))

@@ -30,6 +30,8 @@ no per-leaf serialization.  The format is **versioned and pinned**::
     STATS   := !IH [json]     magic, proto — read-only stats subscribe
                               (client ->, empty body); stats payload
                               push (hub ->, JSON body)
+    CHALLENGE := !IH nonce    magic, proto, 32-byte nonce    (hub ->)
+    AUTH    := !IH digest     magic, proto, HMAC-SHA256(secret, nonce)
 
 ``raw-slab`` is the ``(P_pad,)`` slab as **little-endian ``<f4``** —
 pinned on both encode and decode (a big-endian host byteswaps at the
@@ -105,8 +107,24 @@ stats_provider`.  Like serve peers, stats connections never hold a
 params broadcast at all (a stats reader costs the run a few hundred
 bytes of JSON per tick, never a slab) — which is why a sync run stays
 bitwise-identical with a stats reader attached (regression-tested).
+The hub keeps a small ring of recent cells (fed by the cadence thread,
+subscribers or not); a newly-admitted stats reader is sent the ring as
+one ``{"history": [...]}`` backfill frame before live pushes begin, so
+a late-attaching ``repro top`` starts with rates instead of starting
+blind — while the live pushes themselves stay coalesced latest-only.
 Old peers ignore unknown frame types, so STATS rides protocol v1
 without a version bump.
+
+**Join authentication**: a hub constructed with a shared join secret
+(the multi-host leader's ``--join-secret``) answers JOIN with a
+CHALLENGE frame carrying a fresh random nonce instead of a WELCOME.
+The peer proves possession of the secret by replying AUTH with
+``HMAC-SHA256(secret, nonce)``; a correct digest completes the pending
+lease (WELCOME), a wrong one is rejected readably, and a peer that
+HELLOs directly — skipping the challenge — is rejected too.  Old peers
+ignore unknown frame types, so CHALLENGE/AUTH ride protocol v1 exactly
+like STATS did.  Read-only SERVE/STATS subscribers are deliberately
+*not* challenged: they can observe, never contribute.
 
 **Liveness**: with ``heartbeat_s > 0`` the hub PINGs every
 authenticated connection on that cadence (never a silent stray — the
@@ -118,7 +136,10 @@ and exit with a readable error instead of waiting forever.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
+import hmac
 import json
 import logging
 import os
@@ -154,6 +175,15 @@ _F_HELLO, _F_GRAD, _F_PARAMS, _F_JOIN, _F_WELCOME, _F_REJECT = \
     1, 2, 3, 4, 5, 6
 _F_SERVE, _F_PING, _F_PONG = 7, 8, 9
 _F_STATS = 10
+_F_CHALLENGE, _F_AUTH = 11, 12
+
+# HMAC-SHA256 over the challenge nonce: both sides fixed-size
+_AUTH_NONCE_LEN = 32
+_AUTH_DIGEST_LEN = 32
+
+# leader-side ring of recent stats cells: enough for a late-attaching
+# `repro top` to backfill rates (~2 minutes at the default 0.5s cadence)
+_STATS_HISTORY_LEN = 240
 
 # one frame must fit in memory several times over; anything bigger is a
 # corrupted header (e.g. a reader that lost frame sync), not a real slab
@@ -253,6 +283,22 @@ def _stats_frame(payload: bytes = b"") -> bytes:
     return _ctrl_frame(_F_STATS, payload)
 
 
+def _challenge_frame(nonce: bytes) -> bytes:
+    """Authenticated-JOIN challenge (hub ->): prove you hold the shared
+    join secret before the lease is granted."""
+    return _ctrl_frame(_F_CHALLENGE, nonce)
+
+
+def _auth_frame(digest: bytes) -> bytes:
+    """Challenge response (client ->): HMAC-SHA256(secret, nonce)."""
+    return _ctrl_frame(_F_AUTH, digest)
+
+
+def _auth_digest(secret: str, nonce: bytes) -> bytes:
+    return hmac.new(secret.encode("utf-8"), nonce,
+                    hashlib.sha256).digest()
+
+
 def _ping_frame() -> bytes:
     return _ctrl_frame(_F_PING, b"")
 
@@ -292,6 +338,13 @@ class _Conn:
         self.generation = 0
         self.authenticated = False          # valid HELLO/JOIN/SERVE seen
         self.leased_wid: Optional[int] = None   # set by a JOIN lease
+        # authenticated-JOIN state (hubs with a join secret): a JOIN is
+        # parked as pending_join while the CHALLENGE round-trips; the
+        # lease is only granted once the AUTH digest verifies
+        self.awaiting_auth = False          # CHALLENGE sent, AUTH due
+        self.auth_ok = False                # digest verified
+        self.auth_nonce: Optional[bytes] = None
+        self.pending_join: Optional[int] = None
         # serving plane: read-only params subscribers.  worker_id stays
         # None for them, which is what keeps every membership surface
         # (barrier, ledger, live_workers) worker-only with no new code
@@ -355,6 +408,16 @@ class _Conn:
             return None if n == _CTRL.size else \
                 f"STATS subscribe frame has length {n}, expected " \
                 f"{_CTRL.size}"
+        if ftype == _F_AUTH:
+            if self.authenticated:
+                return ("AUTH on an already-authenticated connection — "
+                        "the challenge round-trips exactly once")
+            if not self.awaiting_auth:
+                return ("unexpected AUTH frame — this connection has "
+                        "no challenge outstanding")
+            return None if n == _CTRL.size + _AUTH_DIGEST_LEN else \
+                f"AUTH frame has length {n}, expected " \
+                f"{_CTRL.size + _AUTH_DIGEST_LEN}"
         if not self.authenticated:
             return (f"first frame has type {ftype}, not "
                     "HELLO/JOIN/SERVE/STATS — peer is not speaking the "
@@ -404,6 +467,18 @@ class _Conn:
                     magic, proto, req = _JOIN.unpack(payload)
                     err = _peer_error(magic, proto) \
                         or self.hub._on_join(self, req)
+                    if err is not None:
+                        self.hub._reject(self, err)
+                        break
+                    # a secret-bearing hub parks the JOIN behind a
+                    # CHALLENGE: the connection stays unauthenticated
+                    # (no params broadcast, no lease) until AUTH lands
+                    self.authenticated = not self.awaiting_auth
+                elif ftype == _F_AUTH:
+                    magic, proto = _CTRL.unpack(payload[:_CTRL.size])
+                    err = _peer_error(magic, proto) \
+                        or self.hub._on_auth(self,
+                                             payload[_CTRL.size:])
                     if err is not None:
                         self.hub._reject(self, err)
                         break
@@ -627,13 +702,17 @@ class SocketTransport:
         self._serve_conns: List[_Conn] = []     # every admitted, ever
         # stats plane: a zero-arg callable returning a JSON-encodable
         # dict (the runtime installs one once the server exists); the
-        # push thread starts lazily with the first admitted stats
-        # reader and ticks every stats_every_s
-        self.stats_provider: Optional[Any] = None
+        # push thread starts when the provider is installed (the
+        # stats_provider property setter) and ticks every stats_every_s
+        # even with no subscribers, feeding the history ring a
+        # late-attaching `repro top` backfills from
         self.stats_every_s = 0.5
         self._stats_seq = 0
         self._stats_conns: List[_Conn] = []     # every admitted, ever
         self._stats_thread: Optional[threading.Thread] = None
+        self._stats_history: Any = \
+            collections.deque(maxlen=_STATS_HISTORY_LEN)
+        self._stats_provider: Optional[Any] = None
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="hub-accept", daemon=True)
         self._accept_thread.start()
@@ -681,6 +760,12 @@ class SocketTransport:
         return ("this hub does not negotiate worker-id leases (not a "
                 "host transport) — connect with HELLO")
 
+    def _on_auth(self, conn: _Conn, digest: bytes) -> Optional[str]:
+        """AUTH (challenge response) hook — only a hub that issued a
+        CHALLENGE (a secret-bearing :class:`~repro.cluster.hostlink.
+        HostTransport`) can verify one."""
+        return ("unexpected AUTH frame — this hub issued no challenge")
+
     def _on_serve(self, conn: _Conn) -> Optional[str]:
         """SERVE (read-only subscribe) hook — only the multi-host hub
         admits serve clients; the plain hub has no spec to hand them
@@ -706,21 +791,48 @@ class SocketTransport:
         return ("this hub does not admit stats clients (not a host "
                 "transport) — point `repro top` at a training leader")
 
+    @property
+    def stats_provider(self) -> Optional[Any]:
+        return self._stats_provider
+
+    @stats_provider.setter
+    def stats_provider(self, provider: Optional[Any]) -> None:
+        """Installing a provider starts the push/history thread at once
+        (not lazily with the first subscriber): the history ring must
+        already hold cells when a late `repro top` attaches."""
+        self._stats_provider = provider
+        if provider is not None and not self._closed.is_set():
+            self._ensure_stats_thread()
+
+    def stats_history(self) -> List[Dict[str, Any]]:
+        """Recent stats cells, oldest first (the backfill payload)."""
+        return list(self._stats_history)
+
     def _on_stats_ready(self, conn: _Conn) -> None:
-        """An admitted stats connection just authenticated: push one
-        payload immediately (so `repro top` paints before the first
-        cadence tick) and make sure the push thread is running."""
+        """An admitted stats connection just authenticated: send the
+        history-ring backfill (so a late-attaching `repro top` can
+        compute rates over cells it never saw pushed), then one current
+        payload (so it paints before the first cadence tick).  Both go
+        out *before* the connection joins the push list — a cadence
+        tick must not overtake its own backfill on the wire."""
+        history = self.stats_history()
+        if history:
+            conn.send_frame(
+                _stats_frame(json.dumps({"history": history})
+                             .encode("utf-8")), lock_timeout=1.0)
+        conn.send_frame(self._stats_frame_now(), lock_timeout=1.0)
         with self._conns_cond:
             self._stats_conns.append(conn)
-        conn.send_frame(self._stats_frame_now(), lock_timeout=1.0)
         self._ensure_stats_thread()
 
-    def _stats_frame_now(self) -> bytes:
+    def _stats_frame_now(self, record: bool = False) -> bytes:
         """One STATS push frame from the current provider snapshot.
         A hub whose runtime has not installed a provider yet (or whose
         provider raises mid-teardown) reports a ``waiting`` state
-        instead of wedging the push thread."""
-        provider = self.stats_provider
+        instead of wedging the push thread.  ``record=True`` (the
+        cadence thread) appends real cells to the history ring —
+        placeholder ``waiting`` states are never recorded."""
+        provider = self._stats_provider
         payload = None
         if provider is not None:
             try:
@@ -729,6 +841,8 @@ class SocketTransport:
                 payload = None
         if payload is None:
             payload = {"state": "waiting"}
+        elif record:
+            self._stats_history.append(payload)
         return _stats_frame(json.dumps(payload).encode("utf-8"))
 
     def _ensure_stats_thread(self) -> None:
@@ -740,16 +854,16 @@ class SocketTransport:
             self._stats_thread.start()
 
     def _stats_loop(self) -> None:
-        """Push a telemetry snapshot to every live stats reader on the
-        cadence.  Short lock timeout for the same reason as heartbeats:
-        one stalled reader must not delay the others' ticks."""
+        """On every cadence tick: record the current cell in the
+        history ring (subscribers or not — that is what a late reader
+        backfills from), then push it to every live stats reader.
+        Short lock timeout for the same reason as heartbeats: one
+        stalled reader must not delay the others' ticks."""
         while not self._closed.wait(self.stats_every_s):
+            frame = self._stats_frame_now(record=True)
             with self._conns_cond:
                 conns = [c for c in self._stats_conns
                          if not c.closed.is_set()]
-            if not conns:
-                continue
-            frame = self._stats_frame_now()
             for conn in conns:
                 conn.send_frame(frame, lock_timeout=0.2)
 

@@ -120,6 +120,9 @@ class ClusterRuntime:
                  spec_dict: Optional[Dict[str, Any]] = None,
                  listen: Optional[str] = None,
                  heartbeat_s: float = 2.0, serve_every: int = 1,
+                 max_workers: Optional[int] = None,
+                 join_secret: Optional[str] = None,
+                 lease_grace_s: float = 2.0,
                  proc_ready_timeout_s: float = 180.0,
                  verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
@@ -154,14 +157,19 @@ class ClusterRuntime:
             schedule = constant_schedule(num_workers, 1)
         if mode == "hybrid":
             assert schedule is not None, "hybrid mode needs a schedule"
-        bad_ids = sorted({wid for wid, _ in (*faults.stragglers,
-                                             *faults.kill)
-                          if wid >= num_workers})
-        if bad_ids:
+        # elastic admission is a host-transport feature: the other
+        # transports own their whole fleet at construction time
+        if max_workers is not None and transport_kind != "host":
             raise ValueError(
-                f"FaultPlan names worker ids {bad_ids} but the fleet "
-                f"has only {num_workers} workers (ids 0.."
-                f"{num_workers - 1})")
+                "max_workers (elastic admission) requires "
+                'transport_kind="host" — the other transports spawn '
+                "their entire fleet up front")
+        self.max_workers = max(num_workers, int(max_workers
+                                                or num_workers))
+        # faults may target any admissible worker id, including elastic
+        # ones that have not joined yet (a kill aimed at an absent
+        # worker just finds nobody)
+        faults.validate_worker_ids(self.max_workers)
         if (faults.checkpoint_every_s > 0 or faults.restore_at_s > 0) \
                 and not ckpt_dir:
             raise ValueError(
@@ -185,6 +193,11 @@ class ClusterRuntime:
         self.lr = lr
         self.batch = batch
         self.num_workers = num_workers
+        # the *current* fleet size: seeded at num_workers, grown by
+        # online admission up to max_workers (host transport only).
+        # K(t) schedules and the staging buffer re-derive from it
+        self.fleet_size = num_workers
+        self._fleet_lock = threading.Lock()
         self.wall_budget_s = wall_budget_s
         self.sample_every_s = sample_every_s
         self.schedule = schedule
@@ -245,7 +258,10 @@ class ClusterRuntime:
                 cap, host=bind_host, port=bind_port,
                 num_workers=num_workers,
                 welcome_config={"spec": spec_dict},
-                heartbeat_s=heartbeat_s, serve_every=serve_every)
+                heartbeat_s=heartbeat_s, serve_every=serve_every,
+                max_workers=self.max_workers,
+                join_secret=join_secret,
+                lease_grace_s=lease_grace_s)
         else:
             self.transport = InProcTransport(grad_capacity=cap)
         # hand the socket hubs the live bus (wire byte counters,
@@ -338,6 +354,31 @@ class ClusterRuntime:
         self.server.register(wid)
         w.start()
 
+    def _grow_fleet_to(self, n: int) -> None:
+        """Online admission: a joiner beyond the current fleet size
+        grows the server's staging buffer and re-derives the K(t)
+        schedule for the new effective fleet — *before* the worker
+        registers, so a sync barrier that fills immediately already has
+        a staging row for every live member.  The conservation ledger
+        is untouched (the resize preserves staged rows and the host-
+        side counters never move)."""
+        with self._fleet_lock:
+            if n <= self.fleet_size:
+                return
+            old = self.fleet_size
+            schedule = None
+            if self.mode == "async":
+                schedule = constant_schedule(n, 1)
+            elif self.mode == "hybrid" and self.spec_dict \
+                    and self.spec_dict.get("schedule"):
+                from repro.api.schedules import parse_schedule
+                schedule = parse_schedule(self.spec_dict["schedule"], n)
+            self.server.grow_fleet(n, schedule)
+            self.fleet_size = n
+        self.obs.gauge("fleet_size", n)
+        self.obs.count("members.admitted_beyond_seed", n - old)
+        self._log_event("fleet_grow", from_workers=old, to_workers=n)
+
     def _on_remote_ready(self, wid: int, gen: int) -> None:
         # hub reader thread: a worker finished connecting.  For spawned
         # (proc) workers, guard on the exact generation so an orphan
@@ -347,8 +388,16 @@ class ClusterRuntime:
         # legitimate holder of the worker id's shard
         if self.transport_kind == "host":
             if gen >= self._generation.get(wid, -1):
+                # grow BEFORE register: the staging buffer must cover
+                # the live fleet when this worker's first sync round
+                # fills
+                self._grow_fleet_to(wid + 1)
                 self._generation[wid] = gen
                 self.server.register(wid)
+                self.obs.count("members.joined")
+                self.obs.gauge("live_workers", len(self.server.live))
+                self._log_event("member_join", worker=wid,
+                                generation=gen)
             return
         if self._generation.get(wid) == gen:
             self.server.register(wid)
@@ -361,6 +410,11 @@ class ClusterRuntime:
         # stall every later sync round
         if self._generation.get(wid) == gen:
             self.server.deregister(wid)
+            if self.transport_kind == "host":
+                self.obs.count("members.departed")
+                self.obs.gauge("live_workers", len(self.server.live))
+                self._log_event("member_gone", worker=wid,
+                                generation=gen)
 
     def _kill(self, wid: int) -> None:
         if self.transport_kind == "proc":
@@ -444,6 +498,8 @@ class ClusterRuntime:
             "queue_depth": self.transport.pending_gradients(),
             "live_workers": len(self.server.live),
             "num_workers": self.num_workers,
+            "fleet_size": self.fleet_size,
+            "max_workers": self.max_workers,
             "serve_clients": serve_clients,
         }
 
@@ -723,9 +779,12 @@ class ClusterRuntime:
             # separately asserts nothing is lost on a healthy wire)
             received = self.transport.received_counts()
             accounting["computed"] = sum(received.values())
+            # an elastic fleet may have grown past the seed: report a
+            # column for every member that ever existed
+            fleet_ids = set(range(self.fleet_size)) | set(received)
             accounting["computed_per_worker"] = {
                 str(wid): received.get(wid, 0)
-                for wid in range(self.num_workers)}
+                for wid in sorted(fleet_ids)}
             accounting["torn_frames"] = self.transport.torn_frames
         else:
             accounting["computed"] = sum(w.sent

@@ -113,6 +113,30 @@ class ParameterServer:
                                            self.agg.params_slab))
 
     # ------------------------------------------------------- membership
+    def grow_fleet(self, num_workers: int,
+                   schedule: Optional[ThresholdSchedule] = None) -> None:
+        """Admit a fleet larger than construction time planned for
+        (elastic membership): grow the staging buffer to cover
+        ``num_workers`` simultaneous contributions and, when a
+        re-derived K(t) ``schedule`` for the new fleet size is handed
+        in, swap it in atomically with the resize.  Must run *before*
+        :meth:`register` for any worker id beyond the old ceiling — a
+        sync round stages one row per live worker, so staging must
+        already cover the grown fleet when the barrier fills.  Exact
+        accounting is untouched: staged rows are preserved by
+        :meth:`repro.core.slab.SlabAggregator.grow` and the host-side
+        version list never moves."""
+        with self.lock:
+            if schedule is not None:
+                self.schedule = schedule
+            if self.mode == "async":
+                k_max = 1       # K ≡ 1 by definition: one row, any fleet
+            else:
+                k_max = max(1, int(num_workers),
+                            self.schedule.num_workers
+                            if self.schedule else 0)
+            self.agg.grow(k_max)
+
     def register(self, worker_id: int) -> None:
         with self.lock:
             self.live.add(worker_id)

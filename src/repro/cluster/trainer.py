@@ -46,10 +46,16 @@ class ClusterTrainer:
 
     def __init__(self, ckpt_dir: Optional[str] = None,
                  resume_from: Optional[str] = None, verbose: bool = False,
-                 trace: Optional[str] = None):
+                 trace: Optional[str] = None,
+                 join_secret: Optional[str] = None):
         self.ckpt_dir = ckpt_dir
         self.resume_from = resume_from
         self.verbose = verbose
+        # the shared JOIN secret is an invocation credential, NOT a
+        # spec field: the spec travels to every joiner in WELCOME, and
+        # a secret embedded there would hand itself to whoever it is
+        # meant to keep out
+        self.join_secret = join_secret
         # Chrome trace-event output path (--trace): a run artifact like
         # --out, deliberately NOT an ExperimentSpec field — the spec
         # travels over the wire to proc/host workers and must describe
@@ -102,6 +108,7 @@ class ClusterTrainer:
             else None,
             listen=spec.listen,
             heartbeat_s=spec.heartbeat_s, serve_every=spec.serve_every,
+            max_workers=spec.max_workers, join_secret=self.join_secret,
             # proc children connect as fast as JAX compiles (180s
             # default is plenty); host workers are started by a human
             # in another terminal, possibly on other machines — give

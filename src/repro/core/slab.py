@@ -253,9 +253,29 @@ class SlabAggregator:
         self.stage(self._zero_row, 0)
         self.flush_apply(np.ones((1,), np.float32), 0.0)
 
+    def grow(self, k_max: int) -> None:
+        """Resize the staging buffer to ``k_max`` rows (elastic fleet
+        admission).  Already-staged rows are preserved — a hybrid buffer
+        keeps gradients staged *between* flushes, so growth mid-buffer
+        must not lose them — and the new rows are zero, which the
+        zero-weight masking keeps inert.  No warmup flush runs here (it
+        would fold staged row 0 into the params); the next real flush
+        traces the new shape, so growth costs one compile per resize —
+        paid only by elastic fleets, never by a fixed one.
+        Shrinking is never done: a departed worker's row just keeps
+        weight 0."""
+        k_max = int(k_max)
+        if k_max <= self.k_max:
+            return
+        old = self._staging
+        self.k_max = k_max
+        self._staging = jnp.zeros((k_max, self.codec.padded_size),
+                                  jnp.float32).at[:old.shape[0]].set(old)
+
     def flush_cache_size(self) -> int:
         """Number of compiled flush executables (the probe asserted to
-        be exactly 1 in tests, regardless of fleet size / K)."""
+        be exactly 1 in tests, regardless of fleet size / K — growth via
+        :meth:`grow` adds one entry per resize)."""
         return int(self._flush._cache_size())
 
 

@@ -13,7 +13,10 @@ run leaves the trained model bitwise-identical (regression-tested in
 
 :func:`top_main` is the CLI body: one line per push with grads/sec
 computed from consecutive applied-counter deltas, staleness p50/p99,
-and the live ledger columns.
+and the live ledger columns.  A late attach is not blind: the hub's
+first push is a ``{"history": [...]}`` backfill from its STATS ring
+(recent ticks it recorded with zero subscribers), which seeds the rate
+delta so the very first live row already has a grads/sec figure.
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import json
 import sys
 import threading
 import time
-from typing import Any, Dict, Optional, TextIO
+from typing import Any, Dict, List, Optional, TextIO
 
 from repro.cluster.mptransport import (_CTRL, _F_PING, _F_REJECT,
                                        _F_STATS, _HDR, _MAX_FRAME,
@@ -47,6 +50,11 @@ class StatsClient:
         self.closed = threading.Event()
         self.reject_reason: Optional[str] = None
         self.pushes_seen = 0
+        # the hub's history-ring backfill (sent once, before the first
+        # live push): past ticks, oldest first — never coalesced into
+        # the live cell, so wait_stats() still only ever returns fresh
+        # pushes
+        self.backfill: List[Dict[str, Any]] = []
         self._cell: Optional[Dict[str, Any]] = None
         self._cell_seq = 0                  # bumps on every push
         self._taken_seq = 0                 # last seq wait_stats returned
@@ -84,6 +92,12 @@ class StatsClient:
                             payload[_CTRL.size:].decode("utf-8"))
                     except (ValueError, UnicodeDecodeError):
                         continue            # malformed tick: skip it
+                    if isinstance(doc.get("history"), list):
+                        # the one-shot ring backfill: keep it aside,
+                        # don't wake wait_stats (it is not a live tick)
+                        self.backfill = [c for c in doc["history"]
+                                         if isinstance(c, dict)]
+                        continue
                     with self._cond:
                         self._cell = doc
                         self._cell_seq += 1
@@ -160,7 +174,7 @@ def _fmt_line(doc: Dict[str, Any], rate: Optional[float]) -> str:
             f"pending {doc.get('pending_round', 0):<4} "
             f"queue {doc.get('queue_depth', 0):<4} "
             f"workers {doc.get('live_workers', 0)}/"
-            f"{doc.get('num_workers', 0)} "
+            f"{doc.get('fleet_size', doc.get('num_workers', 0))} "
             f"serve {doc.get('serve_clients', 0)} "
             f"[{doc.get('mode', '?')}]")
 
@@ -188,6 +202,7 @@ def top_main(address: str, *, count: Optional[int] = None,
         prev: Optional[Dict[str, Any]] = None   # (for the rate delta)
         prev_t: Optional[float] = None
         t_start = time.monotonic()
+        backfilled = False
         while count is None or rows < count:
             if duration_s is not None \
                     and time.monotonic() - t_start > duration_s:
@@ -198,12 +213,28 @@ def top_main(address: str, *, count: Optional[int] = None,
                 if client.closed.is_set():
                     break
                 continue
+            if not backfilled:
+                backfilled = True
+                if client.backfill:
+                    # seed the rate delta from the hub's history ring:
+                    # the first live row is not blind on a late attach
+                    prev = client.backfill[-1]
+                    print(f"[top] backfilled {len(client.backfill)} "
+                          "past tick(s) from the leader's history "
+                          "ring", file=out, flush=True)
             rate = None
-            if prev is not None and prev_t is not None \
-                    and "applied" in doc and "applied" in prev \
-                    and now > prev_t:
-                rate = (doc["applied"] - prev["applied"]) \
-                    / (now - prev_t)
+            if prev is not None and "applied" in doc \
+                    and "applied" in prev:
+                # prefer the leader's own clock ("t", carried in every
+                # cell): backfilled ticks have no local receipt time
+                if isinstance(doc.get("t"), (int, float)) \
+                        and isinstance(prev.get("t"), (int, float)) \
+                        and doc["t"] > prev["t"]:
+                    rate = (doc["applied"] - prev["applied"]) \
+                        / (doc["t"] - prev["t"])
+                elif prev_t is not None and now > prev_t:
+                    rate = (doc["applied"] - prev["applied"]) \
+                        / (now - prev_t)
             print(_fmt_line(doc, rate), file=out, flush=True)
             rows += 1
             if "applied" in doc:

@@ -20,6 +20,7 @@ Three layers:
 import logging
 import socket
 import struct
+import threading
 import time
 
 import numpy as np
@@ -381,6 +382,91 @@ def test_join_lease_negotiation_and_generation_fencing():
         hub.close()
 
 
+# ------------------------------------------- elastic admission + auth
+
+def test_elastic_admission_beyond_seed_fleet():
+    """With ``max_workers`` above the seed, auto JOINs keep receiving
+    fresh ids past ``num_workers`` — and every WELCOME names the
+    *ceiling* as the shard space, so data sharding is identical for
+    the host that joined first and the host admitted last."""
+    hub = HostTransport(4, host="127.0.0.1", port=0, num_workers=2,
+                        max_workers=4, welcome_config={})
+    addr = tuple(hub.address)
+    socks = []
+    try:
+        for expect in range(4):
+            s, cfg = negotiate_join(addr)
+            socks.append(s)
+            assert (cfg["worker_id"], cfg["generation"]) == (expect, 0)
+            # the shard space is the admission ceiling, not the seed
+            assert cfg["num_workers"] == 4
+        with pytest.raises(WireProtocolError, match="full"):
+            negotiate_join(addr, connect_timeout=0.5)
+    finally:
+        for s in socks:
+            s.close()
+        hub.close()
+
+
+def test_auto_join_blocked_by_grace_window_then_relessed():
+    """An auto JOIN must not be handed a recently-departed worker id —
+    its previous holder may be mid-reconnect — until the re-lease grace
+    window expires; after expiry the id is re-leased with a bumped
+    generation (fencing out the departed holder's stale frames)."""
+    hub = HostTransport(4, host="127.0.0.1", port=0, num_workers=1,
+                        welcome_config={}, lease_grace_s=0.5)
+    addr = tuple(hub.address)
+    try:
+        s0, cfg0 = negotiate_join(addr)
+        assert (cfg0["worker_id"], cfg0["generation"]) == (0, 0)
+        s0.close()
+        _poll(lambda: 0 in hub._departed, what="departure recorded")
+        # inside the window: the only free id is grace-protected
+        with pytest.raises(WireProtocolError, match="grace"):
+            negotiate_join(addr, connect_timeout=0.3)
+        # the BUSY rejection is retried past expiry: same id, new
+        # generation — never a brand-new shard
+        s1, cfg1 = negotiate_join(addr, connect_timeout=10.0)
+        assert (cfg1["worker_id"], cfg1["generation"]) == (0, 1)
+        s1.close()
+    finally:
+        hub.close()
+
+
+def test_join_secret_challenge_and_rejections():
+    """Authenticated JOIN, all four corners: a secretless joiner gets a
+    readable client-side error, a wrong secret gets the leader's
+    readable REJECT without ever taking a lease or a barrier seat, the
+    right secret is admitted (generation 0 — the failures consumed
+    nothing), and a direct HELLO cannot sidestep the challenge."""
+    hub = HostTransport(4, host="127.0.0.1", port=0, num_workers=2,
+                        welcome_config={"spec": {"arch": "mlp"}},
+                        join_secret="open-sesame")
+    addr = tuple(hub.address)
+    try:
+        with pytest.raises(WireProtocolError, match="authenticated"):
+            negotiate_join(addr, connect_timeout=5.0)
+        with pytest.raises(WireProtocolError,
+                           match="authentication failed"):
+            negotiate_join(addr, secret="wrong", connect_timeout=5.0)
+        assert hub.live_workers() == set()      # never entered the barrier
+        s, cfg = negotiate_join(addr, secret="open-sesame")
+        try:
+            # generation 0: the rejected attempts held no lease
+            assert (cfg["worker_id"], cfg["generation"]) == (0, 0)
+            assert cfg["spec"] == {"arch": "mlp"}
+        finally:
+            s.close()
+        # a bare HELLO is not a way around the challenge
+        stray = SocketWorkerClient(addr, 1, generation=0, family="tcp")
+        assert stray.closed.wait(5.0)
+        assert "authenticated JOIN" in (stray.reject_reason or "")
+        stray.close()
+        assert 1 not in hub.live_workers()
+    finally:
+        hub.close()
+
+
 # ---------------------------------------------------------- end to end
 
 def _host_spec(**kw):
@@ -463,6 +549,100 @@ def test_two_host_groups_bitwise_identical_to_inproc():
     for key in finals["inproc"]:
         assert np.array_equal(np.asarray(finals["inproc"][key]),
                               np.asarray(finals["host"][key])), key
+
+
+def test_elastic_e2e_admit_kill_release_and_exact_ledger():
+    """The elasticity acceptance scenario, end to end over TCP: a
+    2-worker run admits a third joiner mid-run (the fleet grows beyond
+    the seed), survives a SIGKILLed worker whose shard is then
+    re-leased to a fresh process at a bumped generation, and still
+    finishes with an exact conservation ledger."""
+    spec = _host_spec(transport="host", listen="127.0.0.1:0",
+                      mode="async", cluster_workers=2, max_workers=3,
+                      max_gradients=None, wall_budget_s=120.0)
+    trainer = ClusterTrainer()
+    runtime = trainer.build_runtime(spec)
+    addr = runtime.listen_address
+
+    def _applied():
+        server = getattr(runtime, "server", None)
+        return server.applied if server is not None else 0
+
+    box = {}
+    th = threading.Thread(
+        target=lambda: box.update(res=trainer.finish(runtime, spec)),
+        daemon=True)
+    j0 = spawn_join_process(addr, worker_id=0, platform=CHILD_PLATFORM)
+    j1 = spawn_join_process(addr, worker_id=1, platform=CHILD_PLATFORM)
+    th.start()
+    j2 = j3 = None
+    try:
+        _poll(lambda: runtime.transport.live_workers() >= {0, 1},
+              timeout_s=180.0, what="seed fleet assembled")
+        _poll(lambda: _applied() > 0, timeout_s=60.0,
+              what="seed fleet training")
+
+        # online admission: a third host joins the live run
+        j2 = spawn_join_process(addr, platform=CHILD_PLATFORM)
+        _poll(lambda: 2 in runtime.transport.live_workers(),
+              timeout_s=180.0, what="worker 2 admitted mid-run")
+        # the hub admits the HELLO a beat before the runtime's
+        # ready-callback grows the fleet — poll, don't assert
+        _poll(lambda: runtime.fleet_size == 3, timeout_s=30.0,
+              what="fleet grew to 3")
+        mark = _applied()
+        _poll(lambda: _applied() > mark, timeout_s=60.0,
+              what="grown fleet training")
+
+        # departure: SIGKILL a seed worker (no goodbye, no flush)...
+        j1.kill()
+        _poll(lambda: 1 not in runtime.transport.live_workers(),
+              timeout_s=60.0, what="killed worker reaped")
+        # ...and re-lease its shard to a fresh process (the explicit id
+        # skips the grace window; the generation bump fences the ghost)
+        j3 = spawn_join_process(addr, worker_id=1,
+                                platform=CHILD_PLATFORM)
+        _poll(lambda: 1 in runtime.transport.live_workers(),
+              timeout_s=180.0, what="shard re-leased")
+        mark = _applied()
+        _poll(lambda: _applied() > mark, timeout_s=60.0,
+              what="re-leased fleet training")
+        runtime.server.done.set()           # end the run
+        th.join(120.0)
+        assert not th.is_alive(), "runtime never finished"
+    finally:
+        codes = {}
+        for name, p in (("j0", j0), ("j2", j2), ("j3", j3)):
+            if p is None:
+                continue
+            try:
+                codes[name] = p.wait(timeout=60)
+            except Exception:
+                p.kill()
+                codes[name] = "stranded"
+        if j1.poll() is None:
+            j1.kill()
+        j1.wait(timeout=30)
+    assert codes == {"j0": 0, "j2": 0, "j3": 0}, codes
+    assert j1.returncode == -9              # SIGKILL, by design
+
+    res = box["res"]
+    a = _check_conservation(res)
+    assert a["applied"] > 0
+    # the per-worker ledger covers every member that ever existed —
+    # including the one admitted beyond the seed fleet
+    assert set(a["computed_per_worker"]) == {"0", "1", "2"}
+
+    events = res.extra["events"]
+    grow = [e for e in events if e["event"] == "fleet_grow"]
+    assert grow and grow[0]["to_workers"] == 3, grow
+    joins = [e for e in events if e["event"] == "member_join"]
+    assert any(e["worker"] == 2 for e in joins), joins
+    # the re-leased shard came back under a bumped generation
+    assert any(e["worker"] == 1 and e["generation"] >= 1
+               for e in joins), joins
+    assert any(e["event"] == "member_gone" and e["worker"] == 1
+               for e in events)
 
 
 def test_kill_the_leader_joined_worker_exits_cleanly():

@@ -314,6 +314,71 @@ def test_top_formats_waiting_and_live_rows():
     assert "42" in line and "99.5" in line and "hybrid" in line
 
 
+def test_stats_history_ring_backfills_late_attaching_top():
+    """A `repro top` that attaches mid-run is not blind: the hub's
+    cadence thread feeds a history ring even with zero subscribers, a
+    new subscriber receives that ring as a one-shot backfill before its
+    first live push (seeding the grads/sec delta), and live pushes stay
+    coalesced — a slow reader skips ticks instead of queueing them."""
+    import io
+
+    from repro.cluster.hostlink import HostTransport
+    from repro.obs.top import StatsClient, top_main
+
+    hub = HostTransport(4, host="127.0.0.1", port=0, num_workers=1,
+                        welcome_config={})
+    hub.stats_every_s = 0.05
+    state = {"n": 0}
+
+    def provider():
+        state["n"] += 1
+        return {"t": state["n"] * 0.05, "version": state["n"],
+                "applied": state["n"] * 10, "dropped": 0, "buffered": 0,
+                "pending_round": 0, "queue_depth": 0, "live_workers": 1,
+                "fleet_size": 1, "serve_clients": 0, "mode": "async",
+                "staleness": {"p50": 0.0, "p99": 0.0}}
+
+    reader = None
+    try:
+        # installing the provider starts the cadence thread at once —
+        # the ring fills with nobody watching
+        hub.stats_provider = provider
+        deadline = time.monotonic() + 5.0
+        while len(hub.stats_history()) < 3:
+            assert time.monotonic() < deadline, "history ring never fed"
+            time.sleep(0.02)
+
+        # late attach: the backfill arrives before the first live push
+        reader = StatsClient(hub.address)
+        first = reader.wait_stats(timeout=5.0)
+        assert first is not None and "version" in first
+        assert reader.backfill, "no history backfill received"
+        assert all("version" in c for c in reader.backfill)
+        # ring cells are oldest-first and precede the first live push
+        versions = [c["version"] for c in reader.backfill]
+        assert versions == sorted(versions)
+        assert versions[-1] <= first["version"]
+
+        # coalescing: a slow reader skips the ticks it slept through
+        time.sleep(0.4)
+        latest = reader.wait_stats(timeout=5.0)
+        assert latest is not None
+        assert latest["version"] > first["version"] + 1
+
+        # and the CLI body seeds its rate delta from the backfill: the
+        # very first printed row already carries grads/sec (applied
+        # moves 10 per 0.05s of leader clock = 200.0 exactly)
+        out = io.StringIO()
+        assert top_main(tuple(hub.address), count=1, out=out) == 0
+        text = out.getvalue()
+        assert "backfilled" in text, text
+        assert "200.0" in text, text
+    finally:
+        if reader is not None:
+            reader.close()
+        hub.close()
+
+
 # ------------------------------------------------ perf gate: serve cells
 
 def _serve_report(cells):

@@ -20,13 +20,16 @@ multi-host (leader + joined process groups) runs in
 import threading
 import time
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.cluster.hostlink import HostTransport
 from repro.cluster.mptransport import ProcTransport, SocketTransport
+from repro.cluster.server import ParameterServer
 from repro.cluster.transport import (GradientMsg, InProcTransport,
                                      ParamsMsg)
+from repro.core.schedule import constant_schedule
 
 KINDS = ["inproc", "socket-tcp", "socket-unix", "proc", "host"]
 
@@ -196,6 +199,131 @@ def test_timeout_contract(kind):
         assert not th.is_alive() and out[0].seq == 1
     finally:
         close()
+
+
+# ---------------------------------------------------- membership churn
+#
+# Server-level conformance for elastic fleets: the sync barrier must
+# degrade to the *live* membership when a worker dies mid-round, growth
+# mid-round/mid-buffer must preserve what is already staged, and the
+# conservation ledger must stay exact through all of it.  Policy only —
+# the wire-level churn (leases, grace windows, auth) lives in
+# ``tests/test_hostlink.py``.
+
+def _churn_server(mode, num_workers, schedule=None):
+    params = {"b": jnp.zeros((4,), jnp.float32),
+              "w": jnp.arange(8, dtype=jnp.float32)}
+    transport = InProcTransport(grad_capacity=16)
+    server = ParameterServer(params, lr=0.05, mode=mode,
+                             transport=transport,
+                             num_workers=num_workers, schedule=schedule)
+    return server, transport
+
+
+def _grad(server, fill):
+    return server.codec.encode(
+        {"b": jnp.full((4,), fill, jnp.float32),
+         "w": jnp.full((8,), 2.0 * fill, jnp.float32)})
+
+
+def test_sync_round_completes_after_mid_round_worker_death():
+    """A sync round blocked on a worker that dies mid-round must
+    complete with the survivors' gradients the moment the death is
+    known — degrading the barrier to live membership, never
+    deadlocking — and account every gradient it saw."""
+    server, t = _churn_server("sync", 3)
+    try:
+        for w in range(3):
+            server.register(w)
+        server.ingest(GradientMsg(0, _grad(server, 0.1), 0, 1))
+        server.ingest(GradientMsg(1, _grad(server, 0.2), 0, 1))
+        assert server.version == 0          # barrier waits on worker 2
+        server.deregister(2)                # mid-round death
+        assert server.version == 1          # completed with the living
+        acct = server.accounting()
+        assert acct["applied"] == 2 and acct["pending_round"] == 0
+        assert acct["dropped"] == 0
+    finally:
+        t.close()
+
+
+def test_sync_grow_mid_round_bitwise_and_ledger_exact():
+    """Grow / shrink / re-lease, sync policy: a fleet seeded at 2 that
+    grows to 4 *mid-round* must produce bitwise the same parameters as
+    a fleet of 4 from the start (the staging resize preserves what the
+    newcomers then complete), a post-shrink stale replay from the
+    re-leased id is dropped and accounted, and the ledger is exact
+    across the whole churn."""
+    fixed, tA = _churn_server("sync", 4)
+    grown, tB = _churn_server("sync", 2)
+    try:
+        g = [_grad(fixed, 0.1 * (w + 1)) for w in range(4)]
+        for w in range(4):
+            fixed.register(w)
+        for w in range(2):
+            grown.register(w)
+        # part of the round arrives before the fleet grows (one short
+        # of the seed barrier, so the round is still open)
+        grown.ingest(GradientMsg(0, g[0], 0, 1))
+        grown.grow_fleet(4)                 # elastic admission
+        grown.register(2)
+        grown.register(3)
+        assert grown.version == 0           # barrier now spans 4 ids
+        for w in range(1, 4):
+            grown.ingest(GradientMsg(w, g[w], 0, 1))
+        for w in range(4):
+            fixed.ingest(GradientMsg(w, g[w], 0, 1))
+        assert fixed.version == 1 and grown.version == 1
+        assert np.asarray(grown.agg.params_slab).tobytes() \
+            == np.asarray(fixed.agg.params_slab).tobytes()
+
+        # shrink: worker 3 dies before contributing to round v1; its
+        # re-leased successor first replays a stale v0 gradient (the
+        # predecessor's in-flight frame) — dropped, never applied
+        grown.deregister(3)
+        grown.ingest(GradientMsg(3, g[3], 0, 2))        # stale replay
+        grown.register(3)
+        for w in range(4):
+            grown.ingest(GradientMsg(w, g[w], 1, 2))
+        assert grown.version == 2
+        acct = grown.accounting()
+        ingested = 4 + 1 + 4
+        assert ingested == (acct["applied"] + acct["dropped"]
+                            + acct["buffered"] + acct["pending_round"])
+        assert acct["applied"] == 8 and acct["dropped"] == 1
+    finally:
+        tA.close()
+        tB.close()
+
+
+def test_hybrid_grow_mid_buffer_preserves_staged_rows():
+    """Hybrid policy: gradients staged *before* a mid-buffer grow (the
+    buffer below K, rows already written into staging) must survive the
+    resize — the flush after growth is bitwise identical to a fleet
+    that was large from the start, and the ledger stays exact."""
+    fixed, tA = _churn_server("hybrid", 4, constant_schedule(4, 3))
+    grown, tB = _churn_server("hybrid", 2, constant_schedule(2, 2))
+    try:
+        g = [_grad(fixed, 0.3 * (w + 1)) for w in range(3)]
+        # one gradient staged, buffer below K — then the fleet grows
+        # and the re-derived schedule raises K to 3
+        grown.ingest(GradientMsg(0, g[0], 0, 1))
+        assert grown.version == 0 and len(grown.buffer) == 1
+        grown.grow_fleet(4, constant_schedule(4, 3))
+        grown.ingest(GradientMsg(1, g[1], 0, 1))
+        grown.ingest(GradientMsg(2, g[2], 0, 1))
+        for w in range(3):
+            fixed.ingest(GradientMsg(w, g[w], 0, 1))
+        assert fixed.version == 1 and grown.version == 1
+        assert np.asarray(grown.agg.params_slab).tobytes() \
+            == np.asarray(fixed.agg.params_slab).tobytes()
+        acct = grown.accounting()
+        assert 3 == (acct["applied"] + acct["dropped"]
+                     + acct["buffered"] + acct["pending_round"])
+        assert acct["applied"] == 3 and acct["buffered"] == 0
+    finally:
+        tA.close()
+        tB.close()
 
 
 def test_socket_broadcast_reaches_every_worker():
