@@ -4,7 +4,8 @@ PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test quickstart smoke-sim smoke-train smoke-cluster smoke-proc \
-	smoke-host smoke-elastic examples bench-server bench-serve perf-gate
+	smoke-host smoke-elastic smoke-zoo examples bench-server bench-serve \
+	bench-zoo perf-gate
 
 # Benchmark env tuning (standard JAX-on-CPU serving practice): force a
 # small multi-device host topology so device placement is exercised,
@@ -81,6 +82,15 @@ smoke-host:
 smoke-elastic:
 	timeout 360 $(PY) examples/smoke_elastic.py
 
+# model zoo on the cluster path: a registry-built zoo:transformer
+# (real forward/backward) trains over the proc transport with the slab
+# wire negotiated to bf16; gated on exit codes, the exact conservation
+# ledger, non-empty telemetry, and rx bytes/gradient actually halving.
+# The hard timeout turns a worker stuck compiling or a hung barrier
+# into a fast failure
+smoke-zoo:
+	timeout 360 $(PY) examples/smoke_zoo.py
+
 # server aggregation hot path (slab vs pre-PR pytree) plus the
 # end-to-end transport grid (in-proc threads vs multi-proc workers),
 # emitting BENCH_server.json (stable schema, diffed across PRs).  The
@@ -91,6 +101,15 @@ smoke-elastic:
 bench-server:
 	timeout 900 env $(BENCH_ENV) $(PY) -m benchmarks.server_throughput \
 	    --quick --out BENCH_server.json
+
+# zoo P-sweep only: the {f32,bf16} x {unsharded,sharded} flush/wire
+# grid over real zoo model sizes, written to its own report file.
+# BENCH_zoo.json is a standalone artifact — the perf gate's fresh
+# input stays the full bench-server report (whose v3 schema embeds the
+# same zoo grid alongside the flush grid)
+bench-zoo:
+	timeout 900 env $(BENCH_ENV) $(PY) -m benchmarks.server_throughput \
+	    --zoo-only --out BENCH_zoo.json
 
 # serving-plane load: the same training run under {0,2} serve clients
 # (CI-sized grid), emitting BENCH_serve.json — training grads/sec,

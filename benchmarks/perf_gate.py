@@ -52,6 +52,16 @@ def _flush_cells(report):
     return cells
 
 
+def _zoo_cells(report):
+    """(workload, zoo_scale, dtype, shards) -> flush grads/sec."""
+    cells = {}
+    for c in (report.get("zoo") or {}).get("grid", []):
+        key = (str(c["workload"]), float(c["zoo_scale"]),
+               str(c["dtype"]), int(c["shards"]))
+        cells[key] = float(c["flush"]["grads_per_s"])
+    return cells
+
+
 def _serve_cells(report):
     """clients -> (train grads/sec, worst client staleness p99 or None).
 
@@ -175,6 +185,29 @@ def main(argv=None):
                 f"fleet={fleet} K={k}: {got:.1f} g/s < "
                 f"{args.tolerance} x baseline {base:.1f}")
 
+    # zoo grid (schema v3): gated only when the baseline carries one,
+    # so a pre-v3 baseline keeps gating its own cells without lying
+    # about coverage it never measured
+    zoo_base = _zoo_cells(baseline)
+    zoo_fresh = _zoo_cells(fresh)
+    for key in sorted(zoo_base):
+        workload, scale, dtype, shards = key
+        base = zoo_base[key]
+        got = zoo_fresh.get(key)
+        floor = args.tolerance * base
+        label = (f"zoo {workload}@x{scale:g} dtype={dtype} "
+                 f"shards={shards}")
+        if got is None:
+            failures.append(f"{label}: cell missing from fresh report "
+                            f"(baseline {base:.1f} g/s)")
+            continue
+        status = "ok" if got >= floor else "REGRESSED"
+        print(f"{label}: flush {got:9.1f} g/s vs baseline "
+              f"{base:9.1f} (floor {floor:9.1f}) {status}")
+        if got < floor:
+            failures.append(f"{label}: {got:.1f} g/s < "
+                            f"{args.tolerance} x baseline {base:.1f}")
+
     serve_cells = 0
     if args.serve_fresh is not None:
         failures += gate_serve(args.serve_fresh, args.serve_baseline,
@@ -193,12 +226,13 @@ def main(argv=None):
               "plane: make bench-serve && cp BENCH_serve.json "
               "benchmarks/BENCH_serve.baseline.json)", file=sys.stderr)
         return 1
+    parts = [f"{len(base_cells)} server cells"]
+    if zoo_base:
+        parts.append(f"{len(zoo_base)} zoo cells")
     if serve_cells:
-        print(f"perf gate PASS ({len(base_cells)} server cells + "
-              f"{serve_cells} serve cells, tolerance {args.tolerance})")
-    else:
-        print(f"perf gate PASS ({len(base_cells)} cells, tolerance "
-              f"{args.tolerance})")
+        parts.append(f"{serve_cells} serve cells")
+    print(f"perf gate PASS ({' + '.join(parts)}, tolerance "
+          f"{args.tolerance})")
     return 0
 
 

@@ -44,12 +44,22 @@ gets a number: thread workers share one GIL/runtime, process workers
 genuinely contend on the server alone, and host workers add the full
 join/lease/TCP layer the multi-host deployment pays.
 
+**Zoo sweep** — the model-zoo slab path vs parameter count P
+(``zoo:transformer`` at a ladder of ``zoo_scale`` widths), in every
+``{f32, bf16} x {unsharded, sharded}`` combination: per cell the
+staged-flush throughput (the optimizer's saturation point — stage K
+rows, one donated flush), and the wire codec throughput
+(slab -> frame bytes -> slab, i.e. what the socket hubs pay per
+gradient, with ``bytes_per_grad`` recording the 2x bf16 saving).
+
 Emits ``BENCH_server.json`` with a stable schema
-(``repro.bench.server/v2``) so future PRs can diff the perf trajectory:
+(``repro.bench.server/v3``) so future PRs can diff the perf trajectory:
 
   PYTHONPATH=src python -m benchmarks.server_throughput --quick
   PYTHONPATH=src python -m benchmarks.server_throughput \\
       --transport inproc proc host    # transport grid selection
+  PYTHONPATH=src python -m benchmarks.server_throughput --zoo-only \\
+      --out BENCH_zoo.json            # just the zoo sweep (make bench-zoo)
   # or: make bench-server   /   python -m repro bench
 """
 from __future__ import annotations
@@ -144,6 +154,108 @@ class SlabPath:
         for slot, slab in enumerate(grad_slabs):
             self.agg.stage(slab, slot)
         jax.block_until_ready(self.agg.flush_apply(weights, scale))
+
+
+# ------------------------------------------------------------ zoo sweep
+
+def bench_zoo_cell(params, kind: str, scale: float, dtype_name: str,
+                   shards: int, K: int, n_flushes: int,
+                   lr: float = 0.05) -> Dict:
+    """One zoo cell: the slab path on a real zoo model's params at one
+    (slab dtype, shard count) point — staged-flush throughput plus the
+    wire codec cost per gradient."""
+    from repro.cluster.mptransport import (_slab_from_payload,
+                                           _slab_to_bytes)
+
+    codec = slab_codec(params, dtype_name)
+    bank = [codec.encode(g) for g in gradient_bank(params, max(K, 2))]
+    jax.block_until_ready(bank)
+    rows = [bank[i % len(bank)] for i in range(K)]
+    weights = np.ones((K,), np.float32)
+
+    t0 = time.perf_counter()
+    agg = SlabAggregator(codec, params, K, shards=shards)
+    agg.warmup()
+    startup_s = time.perf_counter() - t0
+    lat = np.empty(n_flushes)
+    t1 = time.perf_counter()
+    for i in range(n_flushes):
+        f0 = time.perf_counter()
+        for slot, slab in enumerate(rows):
+            agg.stage(slab, slot)
+        jax.block_until_ready(agg.flush_apply(weights, lr * K))
+        lat[i] = time.perf_counter() - f0
+    serve_s = time.perf_counter() - t1
+
+    # the wire codec: what a socket hub pays per gradient frame
+    n_wire = 5
+    t2 = time.perf_counter()
+    for _ in range(n_wire):
+        payload = _slab_to_bytes(np.asarray(rows[0]), dtype_name)
+    encode_s = (time.perf_counter() - t2) / n_wire
+    t3 = time.perf_counter()
+    for _ in range(n_wire):
+        _slab_from_payload(payload, 0, dtype_name)
+    decode_s = (time.perf_counter() - t3) / n_wire
+
+    n_gradients = n_flushes * K
+    return {
+        "workload": f"zoo:{kind}", "zoo_scale": scale,
+        "P": codec.size, "P_padded": codec.padded_size,
+        "dtype": dtype_name, "shards": agg.shards, "K": K,
+        "n_flushes": n_flushes,
+        "flush": {
+            "startup_s": round(startup_s, 4),
+            "serve_s": round(serve_s, 4),
+            "grads_per_s": round(n_gradients / max(serve_s, 1e-9), 1),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+        },
+        "wire": {
+            "bytes_per_grad": len(payload),
+            "encode_gbps": round(len(payload) / max(encode_s, 1e-9)
+                                 / 1e9, 3),
+            "decode_gbps": round(len(payload) / max(decode_s, 1e-9)
+                                 / 1e9, 3),
+        },
+    }
+
+
+def run_zoo_sweep(scales, dtypes, shard_opts, K: int,
+                  n_flushes: int, kind: str = "transformer") -> Dict:
+    """P sweep: the zoo workload at each scale, every dtype x sharding
+    combination on the same params."""
+    import jax as _jax
+
+    from repro.models import model as M
+    from repro.models.zoo import num_params, zoo_config
+
+    grid = []
+    for scale in scales:
+        cfg = zoo_config(kind, scale)
+        params = M.init_params(_jax.random.PRNGKey(0), cfg)
+        n = num_params(params)
+        for dtype_name in dtypes:
+            for shards in shard_opts:
+                cell = bench_zoo_cell(params, kind, scale, dtype_name,
+                                      shards, K, n_flushes)
+                grid.append(cell)
+                f = cell["flush"]
+                w = cell["wire"]
+                print(f"zoo:{kind} x{scale:<5g} P={cell['P']:>9d} "
+                      f"{dtype_name:4s} shards={cell['shards']}: "
+                      f"flush {f['grads_per_s']:8.1f} g/s "
+                      f"(p50 {f['p50_ms']:.2f}ms) | wire "
+                      f"{w['bytes_per_grad'] / 1e6:6.2f} MB/grad "
+                      f"enc {w['encode_gbps']:.2f} GB/s", flush=True)
+        del params
+    return {
+        "definition": ("flush.grads_per_s = K*n_flushes / serve_s over "
+                       "the staged-flush cycle (stage K rows + one "
+                       "donated flush); wire.* is the slab<->frame "
+                       "codec alone (bytes_per_grad halves at bf16)"),
+        "kind": kind, "K": K, "grid": grid,
+    }
 
 
 # ------------------------------------------------- transport end-to-end
@@ -288,7 +400,7 @@ def run_grid(fleets, ks, n_flushes: int) -> Dict:
     worst = min(acc_cells, key=lambda c: c["speedup_grads_per_s"]) \
         if acc_cells else None
     report = {
-        "schema": "repro.bench.server/v2",
+        "schema": "repro.bench.server/v3",
         "workload": "mlp",
         "P": codec.size, "P_padded": codec.padded_size,
         "leaves": len(codec.sizes),
@@ -334,6 +446,17 @@ def main(argv=None):
                          "multi-host joined process groups; 'none' "
                          "skips the section, e.g. for flush-path-only "
                          "iteration)")
+    ap.add_argument("--zoo-scales", type=float, nargs="*", default=None,
+                    help="zoo sweep: zoo_scale ladder (the P sweep; "
+                         "default 0.125 0.25; pass an empty list to "
+                         "skip the section)")
+    ap.add_argument("--zoo-flushes", type=int, default=20,
+                    help="zoo sweep: flushes per cell (default 20 — "
+                         "the slabs are MBs, not KBs)")
+    ap.add_argument("--zoo-only", action="store_true",
+                    help="run only the zoo sweep (make bench-zoo): "
+                         "skips the flush and transport grids, so the "
+                         "output is NOT a perf-gate --fresh input")
     ap.add_argument("--out", default="BENCH_server.json")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero when the acceptance criterion "
@@ -362,8 +485,25 @@ def main(argv=None):
         else ["inproc", "proc", "host"]
     if "none" in transports:
         transports = []
+    zoo_scales = args.zoo_scales if args.zoo_scales is not None \
+        else [0.125, 0.25]
 
-    report = run_grid(fleets, ks, n)
+    if args.zoo_only:
+        report = {"schema": "repro.bench.server/v3",
+                  "env": {"backend": jax.default_backend(),
+                          "jax": jax.__version__,
+                          "device_count": jax.device_count()}}
+        transports = []
+        if not zoo_scales:
+            zoo_scales = [0.125, 0.25]
+    else:
+        report = run_grid(fleets, ks, n)
+    if zoo_scales:
+        print("\nzoo sweep ({f32,bf16} x {unsharded,sharded} vs P):")
+        report["zoo"] = run_zoo_sweep(
+            zoo_scales, ["f32", "bf16"],
+            [1, max(2, jax.local_device_count())], K=4,
+            n_flushes=args.zoo_flushes)
     if transports:
         print(f"\ntransport grid (hybrid const:K, {t_grads} gradients "
               f"per cell, serving window only):")
@@ -381,7 +521,7 @@ def main(argv=None):
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
-    acc = report["acceptance"]
+    acc = report.get("acceptance")
     if acc:
         print(f"\nacceptance (worst K>=4 cell, fleet={acc['fleet']} "
               f"K={acc['K']}): pytree {acc['pytree_grads_per_s']} g/s, "

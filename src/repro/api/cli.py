@@ -131,6 +131,14 @@ _SPEC_FLAGS = [
      "workers beyond --cluster-workers grow the fleet online up to "
      "this many ids (default: --cluster-workers, i.e. fixed "
      "membership)"),
+    ("--slab-dtype", "slab_dtype", str,
+     "cluster: gradient/params slab precision on the staging buffer "
+     "and the wire — f32 (pinned v1 layout, bitwise-reproducible, "
+     "default) | bf16 (half the wire bytes; master params and the "
+     "flush reduction stay f32)"),
+    ("--zoo-scale", "zoo_scale", float,
+     "zoo:* workloads: width multiplier applied to the registry "
+     "config (default 0.25; 1.0 = the full published tier)"),
 ]
 # fault-plan flags (cluster backend): merged into spec.faults
 _FAULT_FLAGS = [
@@ -189,6 +197,12 @@ def _add_spec_flags(ap: argparse.ArgumentParser, backend_flag: bool):
                     help="cluster: write a Chrome trace-event / "
                          "Perfetto JSON timeline of the run here (load "
                          "in ui.perfetto.dev or chrome://tracing)")
+    ap.add_argument("--prom-port", type=int, default=None, metavar="N",
+                    help="cluster: serve a Prometheus /metrics endpoint "
+                         "on this port for the duration of the run "
+                         "(live ledger, staleness quantiles, wire byte "
+                         "counters; 0 = pick a free port, logged as a "
+                         "prom_listening event)")
     ap.add_argument("--join-secret", default=None, metavar="SECRET",
                     help="cluster host transport: require joiners to "
                          "prove this shared secret (HMAC challenge/"
@@ -241,6 +255,12 @@ def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
               f"timeline and does nothing on backend="
               f"{spec.backend!r}; ignoring it", file=sys.stderr)
         trace = None
+    prom_port = getattr(args, "prom_port", None)
+    if prom_port is not None and spec.backend != "cluster":
+        print(f"warning: --prom-port exposes the cluster runtime's "
+              f"live stats and does nothing on backend="
+              f"{spec.backend!r}; ignoring it", file=sys.stderr)
+        prom_port = None
     from repro.api import trainers
     if spec.backend == "spmd":
         trainer = trainers.SpmdTrainer(ckpt_dir=args.ckpt_dir,
@@ -252,7 +272,8 @@ def _cmd_run(args, forced_backend: Optional[str] = None) -> int:
         trainer = ClusterTrainer(ckpt_dir=args.ckpt_dir,
                                  resume_from=args.resume_from,
                                  verbose=not args.quiet, trace=trace,
-                                 join_secret=join_secret)
+                                 join_secret=join_secret,
+                                 prom_port=prom_port)
     else:
         trainer = trainers.SimulatorTrainer()
     result = trainer.run(spec)
@@ -408,6 +429,10 @@ def _cmd_top(rest: List[str]) -> int:
     ap.add_argument("--connect-timeout", type=float, default=30.0,
                     help="keep retrying the leader for this many "
                          "seconds (the leader may not be up yet)")
+    ap.add_argument("--prom-port", type=int, default=None, metavar="N",
+                    help="also serve the newest stats push as a "
+                         "Prometheus /metrics endpoint on this port "
+                         "(0 = pick a free port; printed at startup)")
     ap.add_argument("--log-level", choices=_LOG_LEVELS, default=None,
                     help="repro.* logger level (default warning)")
     args = ap.parse_args(rest)
@@ -417,7 +442,8 @@ def _cmd_top(rest: List[str]) -> int:
     from repro.obs.top import top_main
     return top_main(args.address, count=args.count,
                     duration_s=args.duration,
-                    connect_timeout=args.connect_timeout)
+                    connect_timeout=args.connect_timeout,
+                    prom_port=args.prom_port)
 
 
 def _cmd_serve_leader(rest: List[str]) -> int:

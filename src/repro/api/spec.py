@@ -88,6 +88,15 @@ class ExperimentSpec:
     #                                to this many ids; None = fixed
     #                                membership (pre-elastic behavior,
     #                                bit for bit)
+    slab_dtype: str = "f32"        # gradient/params slab precision on
+    #                                the staging buffer and the wire:
+    #                                "f32" (pinned v1 layout, bitwise-
+    #                                reproducible) | "bf16" (half the
+    #                                wire bytes; master params + flush
+    #                                reduction stay f32)
+    zoo_scale: float = 0.25        # zoo:* workloads: width multiplier
+    #                                applied to the registry config
+    #                                (1.0 = the full published tier)
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -132,6 +141,12 @@ class ExperimentSpec:
         if self.serve_every < 1:
             raise ValueError(f"serve_every must be >= 1, "
                              f"got {self.serve_every!r}")
+        if self.slab_dtype not in ("f32", "bf16"):
+            raise ValueError('slab_dtype must be "f32" or "bf16", '
+                             f"got {self.slab_dtype!r}")
+        if self.zoo_scale <= 0:
+            raise ValueError(f"zoo_scale must be > 0, "
+                             f"got {self.zoo_scale!r}")
         if self.max_workers is not None:
             if self.transport != "host":
                 raise ValueError(

@@ -98,11 +98,20 @@ def _lm_tiny_workload(spec: ExperimentSpec):
     return lm_tiny_workload(spec)
 
 
+def _zoo_workload(spec: ExperimentSpec):
+    # lazy import: the zoo pulls in the full model stack + the config
+    # registry (see repro.models.zoo; spec.zoo_scale picks the width)
+    from repro.models.zoo import zoo_workload
+    return zoo_workload(spec)
+
+
 register_sim_workload("mlp", _mlp_workload)
 register_sim_workload("cnn-mnist", _cnn_workload("mnist_like", (28, 28, 1)))
 register_sim_workload("cnn-cifar", _cnn_workload("cifar10_like",
                                                  (32, 32, 3)))
 register_sim_workload("lm-tiny", _lm_tiny_workload)
+register_sim_workload("zoo:xlstm", _zoo_workload)
+register_sim_workload("zoo:transformer", _zoo_workload)
 
 
 # ------------------------------------------------------------- adapters

@@ -166,10 +166,12 @@ class HostTransport(SocketTransport):
                  heartbeat_s: float = 2.0, serve_every: int = 1,
                  max_workers: Optional[int] = None,
                  join_secret: Optional[str] = None,
-                 lease_grace_s: float = 2.0):
+                 lease_grace_s: float = 2.0,
+                 slab_dtype: str = "f32"):
         super().__init__(grad_capacity, family="tcp", host=host,
                          port=port, heartbeat_s=heartbeat_s,
-                         serve_every=serve_every)
+                         serve_every=serve_every,
+                         slab_dtype=slab_dtype)
         self.num_workers = int(num_workers)
         # the admission ceiling AND the data-shard space: every joiner
         # shards over max_workers for the whole run, so admitting a
@@ -287,6 +289,10 @@ class HostTransport(SocketTransport):
             self._serve_seq += 1
         conn.is_serve = True
         conn.serve_id = sid
+        # serve subscribers inherit the run's slab dtype (they learn it
+        # from the spec in this WELCOME and decode the broadcast with
+        # the matching codec)
+        conn.slab_dtype = self.slab_dtype
         cfg = dict(self.welcome_config)
         cfg.update(role="serve", serve_id=sid,
                    heartbeat_s=self.heartbeat_s,
@@ -579,7 +585,8 @@ def build_slab_worker_fn(spec, worker_id: int, num_workers: int,
 
     loss_fn, init_params, data, _ = SIM_WORKLOADS[spec.arch](spec)
     x_tr, y_tr = data[0], data[1]
-    codec = slab_codec(init_params)
+    codec = slab_codec(init_params,
+                       getattr(spec, "slab_dtype", "f32"))
     grad_fn = jax.grad(loss_fn)
 
     def _grad_slab(p_slab, x, y):
@@ -674,7 +681,9 @@ def run_joined_worker(address: Any, *,
             # so the leader's serving clock never measures compile time
             client = SocketWorkerClient(None, wid, generation=generation,
                                         heartbeat_timeout_s=stall_timeout,
-                                        sock=sock)
+                                        sock=sock,
+                                        slab_dtype=getattr(
+                                            spec, "slab_dtype", "f32"))
         except Exception:
             traceback.print_exc()
             sys.stderr.flush()

@@ -19,6 +19,7 @@ no per-leaf serialization.  The format is **versioned and pinned**::
     frame   := header payload
     header  := !BI            (type: u8, payload length: u32)
     HELLO   := !IHIi          magic, proto, worker_id, generation
+    HELLO'  := !IHIiB         ... + slab dtype code (non-f32 peers only)
     JOIN    := !IHi           magic, proto, requested worker id (-1=auto)
     WELCOME := !IH json       magic, proto, lease + spec JSON (hub ->)
     REJECT  := !IH utf-8      magic, proto, readable reason   (hub ->)
@@ -37,7 +38,22 @@ no per-leaf serialization.  The format is **versioned and pinned**::
 pinned on both encode and decode (a big-endian host byteswaps at the
 boundary, a little-endian host pays nothing), so f32 payloads
 round-trip bitwise across any pair of hosts, which is what makes the
-cross-process and cross-host parity tests exact.  The first frame on
+cross-process and cross-host parity tests exact.
+
+**Negotiated slab dtype** — a peer whose run declares ``slab_dtype``
+other than f32 (``ExperimentSpec.slab_dtype="bf16"``) says so with ONE
+trailing byte on its HELLO (``HELLO'`` above, dtype code 0=f32,
+1=bf16); its GRAD/PARAMS payloads then carry the slab as little-endian
+raw bf16 (``<u2`` bit patterns), halving every slab frame on the wire
+(``wire.tx_bytes``/``rx_bytes``).  The negotiation is strictly
+additive: an f32 peer sends the original 14-byte HELLO — byte for byte
+the pinned v1 frame — and old hubs reject an extended HELLO readably
+(length check), so mixed builds fail fast instead of misparsing slabs.
+The hub tracks the dtype per connection, validates GRAD frame lengths
+against the connection's element size, and caches one encoded PARAMS
+frame per dtype per published version (the broadcast stays
+swap-a-pointer cheap).  Read-only SERVE subscribers inherit the run's
+dtype (it rides the WELCOME spec).  The first frame on
 every accepted connection must be a HELLO or JOIN carrying the protocol
 magic and version: a stray TCP client, or a peer from an incompatible
 build, is rejected with a logged, readable error (and a best-effort
@@ -152,6 +168,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Set, Tuple
 
+import ml_dtypes
 import numpy as np
 
 from repro.cluster.transport import GradientMsg, ParamsMsg
@@ -166,6 +183,7 @@ _PROTO_VERSION = 1
 
 _HDR = struct.Struct("!BI")          # frame type, payload length
 _HELLO = struct.Struct("!IHIi")      # magic, proto, worker_id, generation
+_HELLO_DT = struct.Struct("!IHIiB")  # ... + slab dtype code (non-f32 only)
 _JOIN = struct.Struct("!IHi")        # magic, proto, requested id (-1=auto)
 _CTRL = struct.Struct("!IH")         # magic, proto (WELCOME/REJECT prefix)
 _GRAD = struct.Struct("!IiQ")        # worker_id, version, seq
@@ -189,10 +207,19 @@ _STATS_HISTORY_LEN = 240
 # corrupted header (e.g. a reader that lost frame sync), not a real slab
 _MAX_FRAME = 1 << 30
 
-# the pinned slab byte order: little-endian f32 on the wire, always.
-# On a little-endian host (every CI/dev machine) this is the native
-# layout and costs nothing; a big-endian host byteswaps at the boundary
+# the pinned slab byte order: little-endian on the wire, always.  On a
+# little-endian host (every CI/dev machine) this is the native layout
+# and costs nothing; a big-endian host byteswaps at the boundary.  f32
+# is the default (and the only layout protocol v1 ever shipped); bf16
+# is negotiated per connection via the extended HELLO and travels as
+# raw little-endian bf16 bit patterns (<u2 on the wire, viewed back as
+# ml_dtypes.bfloat16 — numpy has no native bf16 — at the boundary)
 _SLAB_DTYPE = np.dtype("<f4")
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+_DT_F32, _DT_BF16 = 0, 1             # HELLO' slab dtype codes
+_DT_NAMES = {_DT_F32: "f32", _DT_BF16: "bf16"}
+_DT_CODES = {name: code for code, name in _DT_NAMES.items()}
+_SLAB_ITEMSIZE = {"f32": 4, "bf16": 2}
 
 
 class WireProtocolError(RuntimeError):
@@ -221,37 +248,60 @@ def _recv_exact(sock: socket.socket, n: int
     return bytes(buf), False
 
 
-def _slab_to_bytes(arr) -> bytes:
-    """The slab's wire image: contiguous little-endian ``<f4`` bytes —
-    the pinned byte order, regardless of the producing host's own."""
+def _slab_to_bytes(arr, dtype_name: str = "f32") -> bytes:
+    """The slab's wire image: contiguous little-endian bytes — the
+    pinned byte order, regardless of the producing host's own.  f32
+    travels as ``<f4``; a bf16 connection ships the raw bf16 bit
+    patterns (``<u2``), half the bytes per element."""
+    if dtype_name == "bf16":
+        a = np.ascontiguousarray(np.asarray(arr))
+        if a.dtype != _BF16:
+            a = a.astype(_BF16)
+        return a.view(np.uint16).astype("<u2", copy=False).tobytes()
     a = np.ascontiguousarray(np.asarray(arr, dtype=np.float32))
     return a.astype(_SLAB_DTYPE, copy=False).tobytes()
 
 
-def _slab_from_payload(payload: bytes, offset: int) -> np.ndarray:
-    """Decode a wire slab: explicit ``<f4``, normalized to the native
-    float32 so downstream jnp/staging code never sees a swapped view."""
+def _slab_from_payload(payload: bytes, offset: int,
+                       dtype_name: str = "f32") -> np.ndarray:
+    """Decode a wire slab: explicit little-endian, normalized to the
+    native byte order so downstream jnp/staging code never sees a
+    swapped view.  bf16 payloads come back as ``ml_dtypes.bfloat16``
+    arrays (jnp adopts them as ``jnp.bfloat16`` with no conversion)."""
+    if dtype_name == "bf16":
+        u = np.frombuffer(payload, np.dtype("<u2"), offset=offset)
+        if u.dtype != np.uint16:        # big-endian host: byteswap once
+            u = u.astype(np.uint16)
+        return u.view(_BF16)
     slab = np.frombuffer(payload, _SLAB_DTYPE, offset=offset)
     if slab.dtype != np.float32:        # big-endian host: byteswap once
         slab = slab.astype(np.float32)
     return slab
 
 
-def _grad_frame(msg: GradientMsg) -> bytes:
-    slab = _slab_to_bytes(msg.grad)
+def _grad_frame(msg: GradientMsg, dtype_name: str = "f32") -> bytes:
+    slab = _slab_to_bytes(msg.grad, dtype_name)
     return (_HDR.pack(_F_GRAD, _GRAD.size + len(slab))
             + _GRAD.pack(msg.worker_id, msg.version, msg.seq) + slab)
 
 
-def _params_frame(msg: ParamsMsg) -> bytes:
-    slab = _slab_to_bytes(msg.params)
+def _params_frame(msg: ParamsMsg, dtype_name: str = "f32") -> bytes:
+    slab = _slab_to_bytes(msg.params, dtype_name)
     return (_HDR.pack(_F_PARAMS, _PARAMS.size + len(slab))
             + _PARAMS.pack(msg.version, msg.epoch) + slab)
 
 
-def _hello_frame(worker_id: int, generation: int) -> bytes:
-    return (_HDR.pack(_F_HELLO, _HELLO.size)
-            + _HELLO.pack(_MAGIC, _PROTO_VERSION, worker_id, generation))
+def _hello_frame(worker_id: int, generation: int,
+                 slab_dtype: str = "f32") -> bytes:
+    """An f32 peer sends the original 14-byte HELLO — bit for bit the
+    pinned v1 frame; only a non-f32 peer appends the dtype byte."""
+    if slab_dtype == "f32":
+        return (_HDR.pack(_F_HELLO, _HELLO.size)
+                + _HELLO.pack(_MAGIC, _PROTO_VERSION, worker_id,
+                              generation))
+    return (_HDR.pack(_F_HELLO, _HELLO_DT.size)
+            + _HELLO_DT.pack(_MAGIC, _PROTO_VERSION, worker_id,
+                             generation, _DT_CODES[slab_dtype]))
 
 
 def _join_frame(requested_id: int) -> bytes:
@@ -336,6 +386,11 @@ class _Conn:
         self.sock = sock
         self.worker_id: Optional[int] = None
         self.generation = 0
+        # the negotiated slab dtype for THIS connection: f32 unless the
+        # peer's HELLO carried a dtype byte (serve conns inherit the
+        # run's dtype at admission).  Controls GRAD decode, GRAD length
+        # validation, and which encoded PARAMS frame the writer pushes
+        self.slab_dtype = "f32"
         self.authenticated = False          # valid HELLO/JOIN/SERVE seen
         self.leased_wid: Optional[int] = None   # set by a JOIN lease
         # authenticated-JOIN state (hubs with a join secret): a JOIN is
@@ -385,8 +440,9 @@ class _Conn:
                         "identifies itself exactly once (a re-HELLO "
                         "under another id would ghost-register the "
                         "first one in the sync barrier)")
-            return None if n == _HELLO.size else \
-                f"HELLO frame has length {n}, expected {_HELLO.size}"
+            return None if n in (_HELLO.size, _HELLO_DT.size) else \
+                (f"HELLO frame has length {n}, expected {_HELLO.size} " \
+                 f"or {_HELLO_DT.size}")
         if ftype == _F_JOIN:
             if self.authenticated:
                 return ("JOIN on an already-authenticated connection — "
@@ -427,9 +483,9 @@ class _Conn:
                     "maximum — peer lost frame sync")
         if ftype == _F_GRAD and (n < _GRAD.size or
                                  (n - _GRAD.size)
-                                 % _SLAB_DTYPE.itemsize):
+                                 % _SLAB_ITEMSIZE[self.slab_dtype]):
             return (f"malformed GRAD frame: payload length {n} is not "
-                    f"header + whole {_SLAB_DTYPE} slab elements — "
+                    f"header + whole {self.slab_dtype} slab elements — "
                     "peer lost frame sync")
         return None
 
@@ -452,11 +508,26 @@ class _Conn:
                     break
                 self.hub.obs.count("wire.rx_bytes", _HDR.size + n)
                 if ftype == _F_HELLO:
-                    magic, proto, wid, gen = _HELLO.unpack(payload)
+                    if n == _HELLO_DT.size:
+                        magic, proto, wid, gen, dtc = \
+                            _HELLO_DT.unpack(payload)
+                    else:
+                        magic, proto, wid, gen = _HELLO.unpack(payload)
+                        dtc = _DT_F32   # bare v1 HELLO: pinned f32
+                    err = _peer_error(magic, proto)
+                    if err is None and dtc not in _DT_NAMES:
+                        err = (f"unknown slab dtype code {dtc} in "
+                               "HELLO — peer is from a newer build "
+                               "negotiating a dtype this hub does not "
+                               "speak")
+                    if err is None:
+                        # before admission: the first params push must
+                        # already use the negotiated encoding
+                        self.slab_dtype = _DT_NAMES[dtc]
                     # _admit_hello claims conn.worker_id inside the
                     # hub's admission lock — concurrent admissions for
                     # one id must see each other (duplicate fencing)
-                    err = _peer_error(magic, proto) \
+                    err = err \
                         or self.hub._admit_hello(self, wid, gen)
                     if err is not None:
                         self.hub._reject(self, err)
@@ -518,7 +589,8 @@ class _Conn:
                         break
                     wid, version, seq = _GRAD.unpack(
                         payload[:_GRAD.size])
-                    grad = _slab_from_payload(payload, _GRAD.size)
+                    grad = _slab_from_payload(payload, _GRAD.size,
+                                              self.slab_dtype)
                     msg = GradientMsg(wid, grad, version, seq)
                     # the span brackets the bounded put: its duration IS
                     # the backpressure wait when the hub queue is full
@@ -565,7 +637,10 @@ class _Conn:
             if not self._params_ev.wait(0.2):
                 continue
             self._params_ev.clear()
-            frame = self.hub._pub_frame     # latest only: coalesced
+            # latest only (coalesced), in this connection's negotiated
+            # dtype — same frame object per (version, dtype), so the
+            # identity-based _last_sent dedup below still holds
+            frame = self.hub._pub_frame_for(self.slab_dtype)
             # never broadcast parameters to a connection that has not
             # authenticated: a silent stray peer must not receive the
             # model (the HELLO handler re-arms the push on admission)
@@ -654,9 +729,16 @@ class SocketTransport:
 
     def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
                  host: str = "127.0.0.1", port: int = 0,
-                 heartbeat_s: float = 0.0, serve_every: int = 1):
+                 heartbeat_s: float = 0.0, serve_every: int = 1,
+                 slab_dtype: str = "f32"):
         assert family in ("unix", "tcp"), family
+        assert slab_dtype in _DT_CODES, slab_dtype
         self.family = family
+        # the RUN's declared slab dtype: what publish_params encodes
+        # eagerly, what connect() hands in-process worker endpoints,
+        # and what serve subscribers inherit.  Individual connections
+        # may still negotiate their own via HELLO'
+        self.slab_dtype = slab_dtype
         self.heartbeat_s = float(heartbeat_s)   # 0 = no PINGs
         self.serve_every = max(1, int(serve_every))
         self._sockdir: Optional[str] = None
@@ -684,6 +766,10 @@ class SocketTransport:
         self._rejected = 0
         self._pub_frame: Optional[bytes] = None
         self._pub_msg: Optional[ParamsMsg] = None
+        # per-dtype encodings of the CURRENT publication, keyed by
+        # dtype name; reset on every publish, filled lazily for
+        # dtypes other than the run's own (see _pub_frame_for)
+        self._pub_frames: Dict[str, bytes] = {}
         self._pub_cond = threading.Condition()
         self._held_frame: Optional[bytes] = None
         self._hold = False          # hold_params(): see fleet barrier
@@ -969,14 +1055,16 @@ class SocketTransport:
             return None
 
     def publish_params(self, msg: ParamsMsg) -> None:
-        frame = _params_frame(msg)
+        frame = _params_frame(msg, self.slab_dtype)
         with self._pub_cond:
             # unconditional replace — a restore publishes an OLDER
             # version and workers must resync to it (see Transport)
             self._pub_msg = ParamsMsg(
                 msg.version,
-                _slab_from_payload(frame, _HDR.size + _PARAMS.size),
+                _slab_from_payload(frame, _HDR.size + _PARAMS.size,
+                                   self.slab_dtype),
                 epoch=msg.epoch)
+            self._pub_frames = {self.slab_dtype: frame}
             if self._hold:
                 self._held_frame = frame
                 self._pub_cond.notify_all()
@@ -984,6 +1072,23 @@ class SocketTransport:
             self._pub_frame = frame
             self._pub_cond.notify_all()
         self._notify_all_conns()
+
+    def _pub_frame_for(self, dtype_name: str) -> Optional[bytes]:
+        """The current publication, encoded for one connection's
+        negotiated dtype.  Frames are cached per (publication, dtype):
+        the common case — every connection speaks the run's dtype — is
+        a dict hit on the frame publish_params already built, and a
+        mixed fleet pays one re-encode per foreign dtype per version,
+        not per connection.  Returns None while hold_params() is
+        withholding the broadcast (the fleet-ready barrier)."""
+        with self._pub_cond:
+            if self._pub_frame is None:
+                return None
+            frame = self._pub_frames.get(dtype_name)
+            if frame is None and self._pub_msg is not None:
+                frame = _params_frame(self._pub_msg, dtype_name)
+                self._pub_frames[dtype_name] = frame
+            return frame
 
     def _notify_all_conns(self) -> None:
         with self._conns_cond:
@@ -1042,11 +1147,13 @@ class SocketTransport:
     # ------------------------------------------------------- lifecycle
     def connect(self, worker_id: int, generation: int = 0,
                 send_capacity: int = 2) -> "SocketWorkerClient":
-        """A worker-side endpoint in this process (thread workers)."""
+        """A worker-side endpoint in this process (thread workers) —
+        speaking the run's slab dtype."""
         return SocketWorkerClient(self.address, worker_id,
                                   generation=generation,
                                   family=self.family,
-                                  send_capacity=send_capacity)
+                                  send_capacity=send_capacity,
+                                  slab_dtype=self.slab_dtype)
 
     def wait_for_workers(self, n: int,
                          timeout: Optional[float] = None) -> bool:
@@ -1184,9 +1291,14 @@ class SocketWorkerClient:
                  generation: int = 0, family: str = "unix",
                  send_capacity: int = 2, connect_timeout: float = 10.0,
                  heartbeat_timeout_s: float = 0.0,
-                 sock: Optional[socket.socket] = None):
+                 sock: Optional[socket.socket] = None,
+                 slab_dtype: str = "f32"):
+        if slab_dtype not in _DT_CODES:
+            raise ValueError(f"slab_dtype must be one of "
+                             f"{sorted(_DT_CODES)}, got {slab_dtype!r}")
         self.worker_id = worker_id
         self.generation = generation
+        self.slab_dtype = slab_dtype
         self.reject_reason: Optional[str] = None
         self.stall_reason: Optional[str] = None
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
@@ -1214,7 +1326,8 @@ class SocketWorkerClient:
         self._wlock = threading.Lock()      # whole frames only: the
         #                                     sender thread and PONG
         #                                     replies share one socket
-        self.sock.sendall(_hello_frame(worker_id, generation))
+        self.sock.sendall(_hello_frame(worker_id, generation,
+                                       slab_dtype))
         self._reader = threading.Thread(
             target=self._read_loop, name=f"client-reader-{worker_id}",
             daemon=True)
@@ -1252,11 +1365,12 @@ class SocketWorkerClient:
                         except OSError:
                             break
                 elif ftype == _F_PARAMS and n >= _PARAMS.size \
-                        and (n - _PARAMS.size) % _SLAB_DTYPE.itemsize \
-                        == 0:
+                        and (n - _PARAMS.size) \
+                        % _SLAB_ITEMSIZE[self.slab_dtype] == 0:
                     version, epoch = _PARAMS.unpack(
                         payload[:_PARAMS.size])
-                    slab = _slab_from_payload(payload, _PARAMS.size)
+                    slab = _slab_from_payload(payload, _PARAMS.size,
+                                              self.slab_dtype)
                     with self._cond:
                         self._cell = ParamsMsg(version, slab,
                                                epoch=epoch)
@@ -1282,7 +1396,8 @@ class SocketWorkerClient:
                 continue
             try:
                 with self._wlock:
-                    self.sock.sendall(_grad_frame(msg))
+                    self.sock.sendall(_grad_frame(msg,
+                                                  self.slab_dtype))
             except OSError:
                 # the frame was accepted but never shipped: do NOT
                 # task_done() it — flush() must not claim it landed
@@ -1455,7 +1570,8 @@ def _proc_worker_main(cfg: ProcWorkerConfig) -> None:
             batch=cfg.batch, seed=cfg.seed)
         client = SocketWorkerClient(cfg.address, cfg.worker_id,
                                     generation=cfg.generation,
-                                    family=cfg.family)
+                                    family=cfg.family,
+                                    slab_dtype=spec.slab_dtype)
     except Exception:
         import traceback
         traceback.print_exc()
@@ -1495,8 +1611,9 @@ class ProcTransport(SocketTransport):
     runtime is undefined behaviour."""
 
     def __init__(self, grad_capacity: int = 0, *, family: str = "unix",
-                 host: str = "127.0.0.1"):
-        super().__init__(grad_capacity, family=family, host=host)
+                 host: str = "127.0.0.1", slab_dtype: str = "f32"):
+        super().__init__(grad_capacity, family=family, host=host,
+                         slab_dtype=slab_dtype)
         import multiprocessing
         self._ctx = multiprocessing.get_context("spawn")
         self._procs: Dict[int, Any] = {}            # live, by worker id

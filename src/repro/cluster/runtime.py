@@ -123,11 +123,13 @@ class ClusterRuntime:
                  max_workers: Optional[int] = None,
                  join_secret: Optional[str] = None,
                  lease_grace_s: float = 2.0,
+                 slab_dtype: str = "f32",
                  proc_ready_timeout_s: float = 180.0,
                  verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
                  resume_from: Optional[str] = None,
-                 trace: Optional[str] = None):
+                 trace: Optional[str] = None,
+                 prom_port: Optional[int] = None):
         assert mode in ("sync", "async", "hybrid")
         if transport_kind not in TRANSPORTS:
             raise ValueError(f"transport_kind must be one of {TRANSPORTS},"
@@ -219,12 +221,20 @@ class ClusterRuntime:
         # --out, and must not perturb spec round-trips over the wire
         self.trace_path = trace
         self.obs = Telemetry(trace=bool(trace))
+        # --prom-port: a Prometheus /metrics endpoint over the live
+        # stats payload — an invocation artifact like trace/ckpt_dir,
+        # never a spec field (started in _run, closed with the run)
+        self.prom_port = prom_port
+        self.prom_server = None
 
         # the slab wire format: workers fetch a params *slab*, decode,
         # differentiate, and re-encode the gradient — all in one jitted
         # executable, so each gradient ships as a single contiguous
-        # (P,) array and is flattened exactly once, on the worker
-        self.codec = slab_codec(init_params)
+        # (P,) array and is flattened exactly once, on the worker.
+        # slab_dtype declares the staging/wire precision (f32 | bf16);
+        # the server's master params and flush reduction stay f32
+        self.slab_dtype = str(slab_dtype)
+        self.codec = slab_codec(init_params, self.slab_dtype)
         grad_fn = jax.grad(loss_fn)
 
         def _grad_slab(p_slab, x, y):
@@ -246,9 +256,11 @@ class ClusterRuntime:
         if transport is not None:
             self.transport = transport
         elif transport_kind == "socket":
-            self.transport = SocketTransport(cap, family="tcp")
+            self.transport = SocketTransport(cap, family="tcp",
+                                             slab_dtype=self.slab_dtype)
         elif transport_kind == "proc":
-            self.transport = ProcTransport(cap, family="unix")
+            self.transport = ProcTransport(cap, family="unix",
+                                           slab_dtype=self.slab_dtype)
         elif transport_kind == "host":
             from repro.cluster.hostlink import (HostTransport,
                                                 parse_hostport)
@@ -261,7 +273,8 @@ class ClusterRuntime:
                 heartbeat_s=heartbeat_s, serve_every=serve_every,
                 max_workers=self.max_workers,
                 join_secret=join_secret,
-                lease_grace_s=lease_grace_s)
+                lease_grace_s=lease_grace_s,
+                slab_dtype=self.slab_dtype)
         else:
             self.transport = InProcTransport(grad_capacity=cap)
         # hand the socket hubs the live bus (wire byte counters,
@@ -588,6 +601,8 @@ class ClusterRuntime:
         try:
             return self._run()
         finally:
+            if self.prom_server is not None:
+                self.prom_server.close()
             if self._own_transport:
                 self.transport.close()
 
@@ -624,12 +639,28 @@ class ClusterRuntime:
             schedule=self.schedule, flush_mode=self.flush_mode,
             staleness_decay=self.staleness_decay,
             max_gradients=self.max_gradients,
-            start_version=start_version, obs=self.obs)
+            start_version=start_version,
+            slab_dtype=self.slab_dtype, obs=self.obs)
         if hasattr(self.transport, "stats_provider"):
             # the STATS push plane (`repro top`): now that the server
             # exists, the hub can answer stats subscribers with live
             # ledger + staleness numbers
             self.transport.stats_provider = self._stats_payload
+        if self.prom_port is not None:
+            # Prometheus scrape surface over the same payload (plus the
+            # raw telemetry counters, e.g. repro_wire_tx_bytes_total);
+            # started only once the server exists so every scrape sees
+            # a coherent ledger
+            from repro.obs.prom import PromServer
+            self.prom_server = PromServer(
+                lambda: (self._stats_payload(), self.obs.counters()),
+                self.prom_port)
+            self._log_event("prom_listening",
+                            port=int(self.prom_server.port))
+            if self.verbose:
+                print(f"[cluster] prometheus metrics at "
+                      f"{self.prom_server.url}", file=sys.stderr,
+                      flush=True)
 
         snaps: List = []
         threads: List[threading.Thread] = []

@@ -59,6 +59,7 @@ class ParameterServer:
                  start_version: int = 0,
                  use_pallas: Optional[bool] = None,
                  interpret: bool = False,
+                 slab_dtype: str = "f32",
                  obs=None):
         assert mode in ("sync", "async", "hybrid")
         assert flush_mode in ("sum", "mean")
@@ -87,7 +88,11 @@ class ParameterServer:
         else:
             k_max = max(1, num_workers,
                         schedule.num_workers if schedule else 0)
-        self.codec = slab_codec(params)
+        # slab_dtype is the declared aggregation/wire dtype: staging
+        # rows, the published slab, and every frame on the transport
+        # carry it, while the master params slab and the flush
+        # reduction stay f32 (see repro.core.slab)
+        self.codec = slab_codec(params, slab_dtype)
         self.agg = SlabAggregator(self.codec, params, k_max,
                                   use_pallas=use_pallas,
                                   interpret=interpret)

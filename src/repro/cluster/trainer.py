@@ -47,7 +47,8 @@ class ClusterTrainer:
     def __init__(self, ckpt_dir: Optional[str] = None,
                  resume_from: Optional[str] = None, verbose: bool = False,
                  trace: Optional[str] = None,
-                 join_secret: Optional[str] = None):
+                 join_secret: Optional[str] = None,
+                 prom_port: Optional[int] = None):
         self.ckpt_dir = ckpt_dir
         self.resume_from = resume_from
         self.verbose = verbose
@@ -61,6 +62,9 @@ class ClusterTrainer:
         # travels over the wire to proc/host workers and must describe
         # the experiment, not one invocation's local output files
         self.trace = trace
+        # --prom-port: same reasoning — a scrape endpoint is bound on
+        # this machine for this invocation, not part of the experiment
+        self.prom_port = prom_port
         self.last_params = None
 
     def build_runtime(self, spec: "ExperimentSpec") -> ClusterRuntime:
@@ -109,6 +113,7 @@ class ClusterTrainer:
             listen=spec.listen,
             heartbeat_s=spec.heartbeat_s, serve_every=spec.serve_every,
             max_workers=spec.max_workers, join_secret=self.join_secret,
+            slab_dtype=spec.slab_dtype,
             # proc children connect as fast as JAX compiles (180s
             # default is plenty); host workers are started by a human
             # in another terminal, possibly on other machines — give
@@ -117,7 +122,8 @@ class ClusterTrainer:
             proc_ready_timeout_s=600.0 if spec.transport == "host"
             else 180.0,
             ckpt_dir=ckpt_dir, resume_from=self.resume_from,
-            verbose=self.verbose, trace=self.trace)
+            verbose=self.verbose, trace=self.trace,
+            prom_port=self.prom_port)
         if ckpt_dir is not None and self.ckpt_dir is None:
             runtime.events.append({"t": 0.0,
                                    "event": "ckpt_dir_provisioned",

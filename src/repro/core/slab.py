@@ -1,20 +1,37 @@
 """Flat gradient/parameter slabs — the wire and aggregation format.
 
-A *slab* is one contiguous ``(P_pad,)`` float32 array holding every leaf
-of a pytree: leaves in ``jax.tree`` flatten order, raveled C-order,
+A *slab* is one contiguous ``(P_pad,)`` array holding every leaf of a
+pytree: leaves in ``jax.tree`` flatten order, raveled C-order,
 concatenated, and zero-padded so ``P_pad`` is a multiple of the Pallas
 flush tile (:data:`repro.kernels.hybrid_aggregate.TILE_P`).  Workers
 flatten a gradient **once** and ship the slab; the server stages
 incoming slabs into a preallocated ``(K_max, P_pad)`` buffer and applies
 every flush through **one** jitted, donated executable, regardless of
 how many gradients K the flush aggregates.  The same layout is what a
-multi-process transport would put on the wire (one buffer, no per-leaf
+multi-process transport puts on the wire (one buffer, no per-leaf
 framing).
+
+The codec is dtype-aware: it keeps a **per-leaf dtype map** (decode
+restores every leaf's original dtype exactly) and carries a declared
+**aggregation dtype** — ``slab_dtype`` ``"f32"`` (the default, and the
+historical format: byte-identical slabs to the pre-mixed-precision
+codec) or ``"bf16"`` (half the bytes on the wire and in staging rows).
+Whatever the slab dtype, the aggregator's *master* params slab stays
+float32 and the flush reduction runs in float32 — bf16 trades wire and
+staging bandwidth, never accumulator precision.
 
 Layout::
 
     offset 0         sizes[0]        sizes[0]+sizes[1]   ...        P  P_pad
     |  leaf 0 (ravel) | leaf 1 (ravel) |  ...  | leaf L-1 | 0-padding |
+
+Multi-million-parameter slabs can additionally be **sharded along P**
+into tile-aligned chunks (:class:`SlabAggregator` ``shards=``): each
+chunk gets its own staging buffer and donated flush executable (one per
+distinct chunk shape), placed round-robin across local devices, so a
+big model's staging traffic spreads across the host topology instead of
+funneling through one buffer.  ``shards=1`` (the default for small
+slabs) is the historical single-buffer path, bit for bit.
 
 Donation rules (enforced by :class:`SlabAggregator`, relied on by the
 cluster server):
@@ -49,31 +66,61 @@ import numpy as np
 
 from repro.kernels.hybrid_aggregate import TILE_P, flush_pallas
 
+# declared aggregation dtypes: spec/CLI name -> jnp dtype.  "f32" is the
+# historical pinned format (byte-identical slabs to the pre-dtype-aware
+# codec); "bf16" halves wire + staging bytes at documented precision cost
+SLAB_DTYPES: Dict[str, Any] = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def resolve_slab_dtype(name: str):
+    """``"f32"``/``"bf16"`` (or any alias numpy/jnp resolves to the same
+    dtype) -> the jnp slab dtype."""
+    if name in SLAB_DTYPES:
+        return SLAB_DTYPES[name]
+    dt = jnp.dtype(name)
+    for jdt in SLAB_DTYPES.values():
+        if dt == jnp.dtype(jdt):
+            return jdt
+    raise ValueError(f"slab_dtype must be one of "
+                     f"{sorted(SLAB_DTYPES)}, got {name!r}")
+
 
 class SlabCodec:
-    """Cached pytree ⇄ slab codec for one (treedef, shapes, dtypes).
+    """Cached pytree ⇄ slab codec for one (treedef, shapes, dtypes,
+    slab_dtype).
 
-    ``encode``/``decode`` are jitted; both return fresh buffers (decode
-    never returns views into the slab, so decoded trees survive the
-    slab's donation into a later flush).
+    The codec carries the **per-leaf dtype map**: ``encode`` casts each
+    leaf to the declared aggregation dtype (``slab_dtype``), ``decode``
+    restores every leaf's original dtype exactly — a bf16 leaf comes
+    back bf16 even off a float32 slab and vice versa.  ``encode``/
+    ``decode`` are jitted; both return fresh buffers (decode never
+    returns views into the slab, so decoded trees survive the slab's
+    donation into a later flush).
     """
 
     def __init__(self, treedef, shapes: Tuple[Tuple[int, ...], ...],
-                 dtypes: Tuple[Any, ...]):
-        for dt in dtypes:
+                 dtypes: Tuple[Any, ...], slab_dtype: str = "f32",
+                 paths: Optional[Tuple[str, ...]] = None):
+        if paths is None:
+            paths = tuple(f"leaf[{i}]" for i in range(len(shapes)))
+        for path, dt in zip(paths, dtypes):
             if not jnp.issubdtype(dt, jnp.floating):
                 raise TypeError(
                     f"slab codec requires floating leaves, got {dt} "
-                    "(the slab is a float32 array; integer leaves would "
-                    "round-trip lossily)")
+                    f"at {path} (the slab is a floating array; integer "
+                    "leaves would round-trip lossily)")
             if jnp.dtype(dt).itemsize > 4:
                 raise TypeError(
                     f"slab codec requires leaves <= 32-bit, got {dt} "
-                    "(the slab is a float32 array; wider floats would "
-                    "be silently quantized on the round trip)")
+                    f"at {path} (wider floats would be silently "
+                    "quantized on the round trip)")
         self.treedef = treedef
         self.shapes = shapes
         self.dtypes = dtypes
+        self.paths = paths
+        self.slab_dtype = jnp.dtype(resolve_slab_dtype(slab_dtype))
+        self.slab_dtype_name = "f32" \
+            if self.slab_dtype == jnp.dtype(jnp.float32) else "bf16"
         self.sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
         self.offsets = tuple(int(o) for o in
                              np.cumsum((0,) + self.sizes)[:-1])
@@ -82,13 +129,25 @@ class SlabCodec:
         self.padded_size = -(-self.size // TILE_P) * TILE_P
         self._encode = jax.jit(self._encode_impl)
         self._decode = jax.jit(self._decode_impl)
+        # the aggregator's master accumulator form: always float32,
+        # whatever the wire/staging dtype.  For f32 codecs this IS the
+        # encode executable (shared jit cache — zero extra compiles on
+        # the historical path)
+        if self.slab_dtype == jnp.dtype(jnp.float32):
+            self._encode_master = self._encode
+        else:
+            self._encode_master = jax.jit(
+                lambda tree: self._encode_as(tree, jnp.float32))
 
     # ------------------------------------------------------------ codec
-    def _encode_impl(self, tree):
+    def _encode_as(self, tree, dtype):
         leaves = jax.tree_util.tree_leaves(tree)
         flat = jnp.concatenate(
-            [jnp.ravel(x).astype(jnp.float32) for x in leaves])
+            [jnp.ravel(x).astype(dtype) for x in leaves])
         return jnp.pad(flat, (0, self.padded_size - self.size))
+
+    def _encode_impl(self, tree):
+        return self._encode_as(tree, self.slab_dtype)
 
     def _decode_impl(self, slab):
         leaves = [
@@ -98,11 +157,18 @@ class SlabCodec:
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
     def encode(self, tree) -> jax.Array:
-        """tree -> (P_pad,) f32 slab (fresh buffer)."""
+        """tree -> (P_pad,) slab in the aggregation dtype (fresh
+        buffer)."""
         return self._encode(tree)
 
+    def encode_master(self, tree) -> jax.Array:
+        """tree -> (P_pad,) **float32** slab — the aggregator's master
+        params form, precision-independent of ``slab_dtype``."""
+        return self._encode_master(tree)
+
     def decode(self, slab) -> Any:
-        """(P_pad,) slab -> tree with the template's shapes/dtypes."""
+        """(P_pad,) slab (any slab dtype) -> tree with the template's
+        shapes and original per-leaf dtypes."""
         return self._decode(slab)
 
     def decode_host(self, slab) -> Any:
@@ -112,30 +178,63 @@ class SlabCodec:
 
     def __repr__(self):
         return (f"SlabCodec(leaves={len(self.sizes)}, P={self.size}, "
-                f"padded={self.padded_size})")
+                f"padded={self.padded_size}, "
+                f"dtype={self.slab_dtype_name})")
 
 
 _CODEC_CACHE: Dict[Tuple, SlabCodec] = {}
 
 
-def slab_codec(tree) -> SlabCodec:
+def slab_codec(tree, slab_dtype: str = "f32") -> SlabCodec:
     """The cached codec for ``tree``'s structure (treedef + leaf shapes
-    + dtypes).  Two pytrees with identical structure share one codec —
-    and therefore its compiled encode/decode executables."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    + dtypes) at the given aggregation dtype.  Two pytrees with
+    identical structure share one codec — and therefore its compiled
+    encode/decode executables."""
+    flat_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [x for _, x in flat_paths]
+    paths = tuple(jax.tree_util.keystr(p) or f"leaf[{i}]"
+                  for i, (p, _) in enumerate(flat_paths))
     shapes = tuple(tuple(np.shape(x)) for x in leaves)
     dtypes = tuple(jnp.dtype(getattr(x, "dtype", None)
                              or jnp.result_type(x)) for x in leaves)
-    key = (treedef, shapes, dtypes)
+    sdt = jnp.dtype(resolve_slab_dtype(slab_dtype))
+    key = (treedef, shapes, dtypes, sdt)
     codec = _CODEC_CACHE.get(key)
     if codec is None:
-        codec = _CODEC_CACHE[key] = SlabCodec(treedef, shapes, dtypes)
+        codec = _CODEC_CACHE[key] = SlabCodec(treedef, shapes, dtypes,
+                                              slab_dtype=str(sdt),
+                                              paths=paths)
     return codec
+
+
+_SHARD_AUTO_MIN = 1 << 22     # elements: auto-shard only for multi-
+#                               million-parameter slabs (below this the
+#                               chunking overhead buys nothing)
+
+
+def _auto_shards(padded_size: int) -> int:
+    """Default shard count: 1 (the historical single-buffer path)
+    unless the slab is multi-million-parameter AND the host has several
+    local devices to spread the chunks across."""
+    ndev = jax.local_device_count()
+    if ndev <= 1 or padded_size < _SHARD_AUTO_MIN:
+        return 1
+    return min(ndev, padded_size // TILE_P)
+
+
+def shard_chunks(padded_size: int, shards: int) -> Tuple[int, ...]:
+    """Split ``padded_size`` (a TILE_P multiple) into ``shards``
+    tile-aligned chunk lengths (descending by at most one tile)."""
+    tiles = padded_size // TILE_P
+    shards = max(1, min(int(shards), tiles))
+    base, extra = divmod(tiles, shards)
+    return tuple((base + (1 if i < extra else 0)) * TILE_P
+                 for i in range(shards))
 
 
 class SlabAggregator:
     """Params slab + ``(K_max, P_pad)`` staging buffer + the **one**
-    donated fused flush executable.
+    donated fused flush executable (per staging chunk shape).
 
     The flush computes, for the first ``k`` staged rows ``g_i`` with
     weights ``w_i`` (zero-padded to ``K_max``)::
@@ -150,11 +249,26 @@ class SlabAggregator:
     unused rows.  The jit cache is per-aggregator, so
     ``flush_cache_size()`` is an exact probe that no per-K
     recompilation crept back in.
+
+    **Mixed precision**: staging rows and the published slab are in the
+    codec's ``slab_dtype``; the master params slab is always float32 and
+    the reduction runs in float32 (bf16 rows are upcast inside the
+    executable).  With the default f32 codec every cast is a trace-time
+    no-op and the path is bit-for-bit the historical one.
+
+    **Sharding**: ``shards > 1`` splits staging (and the master slab)
+    along P into tile-aligned chunks placed round-robin across local
+    devices — multi-million-parameter slabs stage across the host
+    topology instead of one buffer.  Chunking never changes the math:
+    the masked fold is elementwise along P, so the sharded flush is
+    bitwise identical to the unsharded one.  ``shards=None`` picks
+    automatically (1 unless the slab is huge and devices are plural).
     """
 
     def __init__(self, codec: SlabCodec, params, k_max: int, *,
                  use_pallas: Optional[bool] = None,
-                 interpret: bool = False):
+                 interpret: bool = False,
+                 shards: Optional[int] = None):
         assert k_max >= 1, k_max
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
@@ -162,28 +276,50 @@ class SlabAggregator:
         self.k_max = int(k_max)
         self.use_pallas = use_pallas
         self.interpret = interpret
-        # private, donated state: in-place updated, never escapes
-        self._slab = codec.encode(params)
-        self._staging = jnp.zeros((self.k_max, codec.padded_size),
-                                  jnp.float32)
-        # published params slab: always a fresh executable output
-        self._pub = codec.encode(params)
+        if shards is None:
+            shards = _auto_shards(codec.padded_size)
+        self.chunk_sizes = shard_chunks(codec.padded_size, shards)
+        self.shards = len(self.chunk_sizes)
+        self.chunk_offsets = tuple(int(o) for o in
+                                   np.cumsum((0,) + self.chunk_sizes)[:-1])
+        self._devices = jax.local_devices()
         self._stage = jax.jit(self._stage_impl, donate_argnums=(0,))
         self._flush = jax.jit(self._flush_impl, donate_argnums=(0,))
-        self._zero_row = jnp.zeros((codec.padded_size,), jnp.float32)
+        if self.shards == 1:
+            # historical single-buffer path, bit for bit
+            self._slab = codec.encode_master(params)
+            self._staging = jnp.zeros((self.k_max, codec.padded_size),
+                                      codec.slab_dtype)
+        else:
+            self._slab = self._shard(codec.encode_master(params))
+            self._staging = [
+                jax.device_put(jnp.zeros((self.k_max, n),
+                                         codec.slab_dtype), d)
+                for n, d in zip(self.chunk_sizes, self._chunk_devices())]
+        # published params slab: always a fresh executable output
+        self._pub = codec.encode(params)
+        self._zero_row = jnp.zeros((codec.padded_size,), codec.slab_dtype)
 
     # ------------------------------------------------------ executables
     @staticmethod
     def _stage_impl(staging, row, slot):
-        # donated: an in-place row write, not a buffer copy
+        # donated: an in-place row write, not a buffer copy.  The cast
+        # is a trace-time no-op when the row already arrives in the
+        # staging dtype (the native-wire case)
+        if row.dtype != staging.dtype:
+            row = row.astype(staging.dtype)
         return jax.lax.dynamic_update_slice(staging, row[None], (slot, 0))
 
     def _flush_impl(self, pslab, staging, weights, scale):
         # both branches reduce via zero-weight masking — rows past the
         # live count hold weight 0 and contribute exactly +0.0 — which
-        # is what lets ONE executable serve every buffer size k
+        # is what lets ONE executable serve every buffer size k.  The
+        # reduction always runs in float32 (bf16 staging rows are
+        # upcast here; for f32 rows the cast disappears at trace time)
+        rows = staging if staging.dtype == jnp.float32 \
+            else staging.astype(jnp.float32)
         if self.use_pallas:
-            agg = flush_pallas(staging, weights, interpret=self.interpret)
+            agg = flush_pallas(rows, weights, interpret=self.interpret)
         else:
             # jnp fallback: a statically unrolled masked fold in staging
             # order — structurally identical to the legacy per-leaf fold
@@ -191,21 +327,50 @@ class SlabAggregator:
             # round mean bitwise-equal to the pre-slab server.  (A
             # fori_loop over only the k live rows compiles to different
             # FMA contraction and drifts by 1 ulp.)
-            agg = weights[0] * staging[0]
+            agg = weights[0] * rows[0]
             for i in range(1, self.k_max):
-                agg = agg + weights[i] * staging[i]
+                agg = agg + weights[i] * rows[i]
         new = pslab - scale * (agg / jnp.sum(weights))
-        # `new + 0.0` is the published copy: a second output buffer that
+        # the second output is the published copy: a fresh buffer that
         # does NOT alias the donated input (tests/test_slab.py guards
-        # this against XLA deciding to alias the two outputs)
-        return new, new + 0.0
+        # this against XLA deciding to alias the two outputs).  In bf16
+        # mode the publish IS the narrowing cast; the f32 master stays
+        # exact
+        if self.codec.slab_dtype == jnp.dtype(jnp.float32):
+            return new, new + 0.0
+        return new, new.astype(self.codec.slab_dtype)
+
+    # ----------------------------------------------------------- chunks
+    def _chunk_devices(self):
+        return tuple(self._devices[i % len(self._devices)]
+                     for i in range(self.shards))
+
+    def _shard(self, slab) -> List[jax.Array]:
+        """Split a full slab into device-placed chunks."""
+        return [jax.device_put(slab[off:off + n], d)
+                for off, n, d in zip(self.chunk_offsets, self.chunk_sizes,
+                                     self._chunk_devices())]
+
+    def _assemble(self, chunks) -> jax.Array:
+        """Concatenate published chunks back into one wire-able slab."""
+        return jnp.concatenate(
+            [jax.device_put(c, self._devices[0]) for c in chunks])
 
     # ------------------------------------------------------------- API
     def stage(self, slab: jax.Array, slot: int) -> None:
         """Write one gradient slab into staging row ``slot`` (in place)."""
         assert 0 <= slot < self.k_max, (slot, self.k_max)
-        self._staging = self._stage(self._staging, slab,
-                                    jnp.asarray(slot, jnp.int32))
+        slot_i = jnp.asarray(slot, jnp.int32)
+        if self.shards == 1:
+            self._staging = self._stage(self._staging, slab, slot_i)
+            return
+        slab = jnp.asarray(slab)
+        for i, (off, n) in enumerate(zip(self.chunk_offsets,
+                                         self.chunk_sizes)):
+            chunk = jax.device_put(slab[off:off + n],
+                                   self._staging[i].devices().pop())
+            self._staging[i] = self._stage(self._staging[i], chunk,
+                                           slot_i)
 
     def flush_apply(self, weights: np.ndarray, scale: float) -> jax.Array:
         """Aggregate the first ``len(weights)`` staged rows and apply the
@@ -214,9 +379,18 @@ class SlabAggregator:
         assert 1 <= k <= self.k_max, (k, self.k_max)
         wfull = np.zeros((self.k_max,), np.float32)
         wfull[:k] = np.asarray(weights, np.float32)
-        self._slab, self._pub = self._flush(
-            self._slab, self._staging, jnp.asarray(wfull),
-            jnp.asarray(scale, jnp.float32))
+        w = jnp.asarray(wfull)
+        s = jnp.asarray(scale, jnp.float32)
+        if self.shards == 1:
+            self._slab, self._pub = self._flush(self._slab,
+                                                self._staging, w, s)
+            return self._pub
+        pubs = []
+        for i in range(self.shards):
+            self._slab[i], pub = self._flush(self._slab[i],
+                                             self._staging[i], w, s)
+            pubs.append(pub)
+        self._pub = self._assemble(pubs)
         return self._pub
 
     @property
@@ -234,7 +408,8 @@ class SlabAggregator:
 
     def reset_params(self, params) -> None:
         """Replace the live params (checkpoint restore)."""
-        self._slab = self.codec.encode(params)
+        master = self.codec.encode_master(params)
+        self._slab = master if self.shards == 1 else self._shard(master)
         self._pub = self.codec.encode(params)
 
     def wipe_staging(self) -> None:
@@ -243,13 +418,17 @@ class SlabAggregator:
         neutralizes any finite leftover, but a non-finite row (a
         diverged gradient the restore is recovering from) would poison
         later flushes — ``0 · inf = nan``."""
-        self._staging = jnp.zeros_like(self._staging)
+        if self.shards == 1:
+            self._staging = jnp.zeros_like(self._staging)
+        else:
+            self._staging = [jnp.zeros_like(c) for c in self._staging]
 
     def warmup(self) -> None:
         """Compile the stage + flush executables before the clock starts
-        (one compile each, for any fleet size — vs the pre-slab server's
-        one compile per K in 1..num_workers).  The warmup flush uses
-        scale=0 over a zero row, so the params are bitwise unchanged."""
+        (one compile each per chunk shape, for any fleet size — vs the
+        pre-slab server's one compile per K in 1..num_workers).  The
+        warmup flush uses scale=0 over a zero row, so the params are
+        bitwise unchanged."""
         self.stage(self._zero_row, 0)
         self.flush_apply(np.ones((1,), np.float32), 0.0)
 
@@ -267,15 +446,27 @@ class SlabAggregator:
         k_max = int(k_max)
         if k_max <= self.k_max:
             return
-        old = self._staging
         self.k_max = k_max
-        self._staging = jnp.zeros((k_max, self.codec.padded_size),
-                                  jnp.float32).at[:old.shape[0]].set(old)
+        if self.shards == 1:
+            old = self._staging
+            self._staging = jnp.zeros(
+                (k_max, self.codec.padded_size),
+                self.codec.slab_dtype).at[:old.shape[0]].set(old)
+        else:
+            self._staging = [
+                jax.device_put(
+                    jnp.zeros((k_max, old.shape[1]),
+                              self.codec.slab_dtype
+                              ).at[:old.shape[0]].set(old),
+                    old.devices().pop())
+                for old in self._staging]
 
     def flush_cache_size(self) -> int:
         """Number of compiled flush executables (the probe asserted to
-        be exactly 1 in tests, regardless of fleet size / K — growth via
-        :meth:`grow` adds one entry per resize)."""
+        be exactly 1 in tests for the unsharded default, regardless of
+        fleet size / K — growth via :meth:`grow` adds one entry per
+        resize, and sharded staging holds one entry per distinct chunk
+        shape)."""
         return int(self._flush._cache_size())
 
 

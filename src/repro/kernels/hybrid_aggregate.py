@@ -52,6 +52,22 @@ def flush_pallas(grads: jax.Array, weights: jax.Array, *,
     )(w2, grads)
 
 
+def flush_pallas_sharded(grad_chunks, weights: jax.Array, *,
+                         tile_p: int = TILE_P,
+                         interpret: bool = False):
+    """Sharded flush entry point: ``grad_chunks`` is a sequence of
+    ``(K, P_i)`` staging chunks (each ``P_i % tile_p == 0`` — the
+    tile-aligned P-split of one ``(K, P)`` slab, see
+    :func:`repro.core.slab.shard_chunks`).  Each chunk is reduced by its
+    own :func:`flush_pallas` call, so under ``jax.jit`` a fleet of
+    equal-shaped chunks shares **one** compiled executable per distinct
+    chunk shape — the single-donated-executable property, per chunk.
+    The reduction is elementwise along P, so the concatenated result is
+    bitwise identical to an unsharded flush of the whole slab."""
+    return [flush_pallas(g, weights, tile_p=tile_p, interpret=interpret)
+            for g in grad_chunks]
+
+
 def _flush_momentum_kernel(w_ref, beta_ref, g_ref, m_ref, o_ref, new_m_ref):
     """Fused flush + momentum: m' = β·m + Σ w·g ; out = m'."""
     g = g_ref[...].astype(jnp.float32)

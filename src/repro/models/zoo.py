@@ -1,0 +1,153 @@
+"""The model zoo on the cluster path: ``zoo:<kind>`` sim workloads.
+
+The registry tiers (:mod:`repro.configs.registry`) describe *published*
+model configurations — 350M to 110B — that the SPMD/dryrun planes
+lower and analyze but that no CI box can train.  The zoo puts scaled
+instances of those same families onto the cluster backend: real
+forward/backward through the shared decoder stack
+(:mod:`repro.models.model`), the slab aggregation path, the socket /
+proc / host wire — so ``ExperimentSpec(arch="zoo:xlstm",
+backend="cluster", transport="proc")`` just works, serving plane
+included (the serve client rebuilds the same workload from the wire
+spec via :class:`repro.serve.workload.ProbeAdapter`).
+
+Two members:
+
+* ``zoo:xlstm`` — the registry's ``xlstm-350m`` tier (mLSTM/sLSTM
+  blocks, arXiv:2405.04517).
+* ``zoo:transformer`` — the registry's dense ATTN+MLP family
+  (``h2o-danube-1.8b``) re-tiered to the same 350M class, so both zoo
+  members scale down from the same starting point.
+
+``spec.zoo_scale`` is a width multiplier applied to the tier:
+``d_model``, ``d_ff`` and depth scale linearly, the vocabulary
+quadratically (embedding tables otherwise dominate the slab), and every
+dimension is rounded to hardware-friendly multiples.  ``zoo_scale=1.0``
+reproduces the published tier's shape; the default 0.25 yields a
+multi-million-parameter model that trains end-to-end on a CPU cluster
+in seconds.  Zoo configs train in float32 with tied embeddings and no
+remat — the cluster plane's reproducibility contract (bitwise f32
+slabs) extends to the zoo unchanged.
+
+The training task is the serving demo's synthetic next-symbol
+succession (``label = (token + 1) mod V``): learnable by the
+embedding/head alone, so the loss drops within a handful of applied
+gradients and smoke runs can assert on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+from repro.models.config import ModelConfig
+
+ZOO_SEQ = 32
+
+
+def _transformer_350m() -> ModelConfig:
+    """The registry's dense ATTN+MLP family at the xlstm-350m class."""
+    from repro.configs.registry import get_config
+    base = get_config("h2o-danube-1.8b")
+    return dataclasses.replace(
+        base, name="transformer-350m", d_model=1024, num_heads=16,
+        num_kv_heads=8, head_dim=64, d_ff=2816, num_groups=24,
+        sliding_window=None, vocab_size=50304,
+        source="repro.models.zoo")
+
+
+def _xlstm_350m() -> ModelConfig:
+    from repro.configs.registry import get_config
+    return get_config("xlstm-350m")
+
+
+ZOO_TIERS: Dict[str, Callable[[], ModelConfig]] = {
+    "xlstm": _xlstm_350m,
+    "transformer": _transformer_350m,
+}
+
+
+def _mult(x: float, m: int, lo: int) -> int:
+    """Round ``x`` to a positive multiple of ``m``, at least ``lo``."""
+    return max(lo, m * max(1, round(x / m)))
+
+
+def _scaled_kv_heads(num_heads: int, base: ModelConfig) -> int:
+    """Largest divisor of ``num_heads`` preserving (roughly) the
+    tier's GQA ratio — head grouping must stay exact."""
+    if base.num_kv_heads <= 0:
+        return 0
+    want = max(1, round(num_heads * base.num_kv_heads
+                        / max(1, base.num_heads)))
+    return max(d for d in range(1, num_heads + 1)
+               if num_heads % d == 0 and d <= want)
+
+
+def zoo_config(kind: str, scale: float = 0.25) -> ModelConfig:
+    """Scaled-tier config for zoo member ``kind`` at width multiplier
+    ``scale`` (1.0 = the published tier's shape)."""
+    tier = ZOO_TIERS.get(kind)
+    if tier is None:
+        known = ", ".join(f"zoo:{k}" for k in sorted(ZOO_TIERS))
+        raise ValueError(f"unknown zoo member {kind!r} "
+                         f"(known: {known})")
+    base = tier()
+    s = float(scale)
+    d_model = _mult(base.d_model * s, 64, 64)
+    num_heads = max(1, min(base.num_heads, d_model // 64))
+    return dataclasses.replace(
+        base,
+        name=f"zoo-{kind}-x{s:g}",
+        d_model=d_model,
+        vocab_size=_mult(base.vocab_size * s * s, 64, 256),
+        num_groups=max(1, round(base.num_groups * s)),
+        num_heads=num_heads,
+        num_kv_heads=_scaled_kv_heads(num_heads, base),
+        head_dim=d_model // num_heads,
+        d_ff=_mult(base.d_ff * s, 64, 64) if base.d_ff else 0,
+        # training knobs, not family shape: f32 params ride the slab
+        # plane's bitwise contract, tied embeddings halve the dominant
+        # table, remat is pointless at these sizes
+        tie_embeddings=True, dtype="float32", param_dtype="float32",
+        remat="none", source="repro.models.zoo")
+
+
+def num_params(params) -> int:
+    import jax
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def _data(seed: int, n: int, seq: int, vocab: int):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, vocab, (n, seq)).astype(np.int32)
+    y = ((x + 1) % vocab).astype(np.int32)
+    n_test = max(1, n // 8)
+    return (x[n_test:], y[n_test:], x[:n_test], y[:n_test])
+
+
+def zoo_workload(spec):
+    """``SIM_WORKLOADS`` builder for ``spec.arch == "zoo:<kind>"``:
+    the shared registry contract — ``(loss_fn, init_params, (x_tr,
+    y_tr, x_te, y_te), accuracy_fn)`` with ``loss_fn(p, x, y)``
+    scalar."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import model as M
+
+    kind = spec.arch.split(":", 1)[1]
+    cfg = zoo_config(kind, getattr(spec, "zoo_scale", 0.25))
+    n = 256 if spec.smoke else 2_048
+    x_tr, y_tr, x_te, y_te = _data(spec.seed, n, ZOO_SEQ,
+                                   cfg.vocab_size)
+    params = M.init_params(jax.random.PRNGKey(spec.seed), cfg)
+
+    def loss(p, x, y):
+        return M.loss_fn(p, {"tokens": x, "labels": y}, cfg)[0]
+
+    def _acc(p, x, y):
+        logits, _ = M.forward(p, {"tokens": x}, cfg)
+        preds = jnp.argmax(logits, axis=-1)
+        return jnp.mean((preds == y).astype(jnp.float32))
+
+    return loss, params, (x_tr, y_tr, x_te, y_te), jax.jit(_acc)

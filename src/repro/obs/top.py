@@ -182,17 +182,38 @@ def _fmt_line(doc: Dict[str, Any], rate: Optional[float]) -> str:
 def top_main(address: str, *, count: Optional[int] = None,
              duration_s: Optional[float] = None,
              connect_timeout: float = 30.0,
+             prom_port: Optional[int] = None,
              out: Optional[TextIO] = None) -> int:
     """``python -m repro top`` body: stream the leader's telemetry
     pushes as one line each until EOF / ``count`` rows /
-    ``duration_s``.  Exit codes: 0 ok (including a leader that goes
-    away mid-watch), 4 rejected by the leader / unreachable."""
+    ``duration_s``.  With ``prom_port`` the newest push is also served
+    as a Prometheus ``/metrics`` endpoint (:mod:`repro.obs.prom`) —
+    the leader's telemetry re-exported by this read-only client, so a
+    scraper never touches the training wire.  Exit codes: 0 ok
+    (including a leader that goes away mid-watch), 4 rejected by the
+    leader / unreachable."""
     out = out if out is not None else sys.stdout
     try:
         client = StatsClient(address, connect_timeout=connect_timeout)
     except WireProtocolError as e:
         print(f"top failed: {e}", file=sys.stderr, flush=True)
         return 4
+    prom = None
+    if prom_port is not None:
+        from repro.obs.prom import PromServer
+        latest: Dict[str, Any] = {}
+        orig_wait = client.wait_stats
+
+        def _wait(timeout=None):
+            doc = orig_wait(timeout)
+            if doc is not None:
+                latest["doc"] = doc
+            return doc
+
+        client.wait_stats = _wait       # type: ignore[method-assign]
+        prom = PromServer(lambda: (latest.get("doc"), None), prom_port)
+        print(f"[top] prometheus metrics at {prom.url}", file=out,
+              flush=True)
     try:
         print(f"[top] stats client {client.stats_id} connected to "
               f"{address} (push every "
@@ -248,4 +269,6 @@ def top_main(address: str, *, count: Optional[int] = None,
                   file=out, flush=True)
         return 0
     finally:
+        if prom is not None:
+            prom.close()
         client.close()

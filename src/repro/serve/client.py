@@ -29,7 +29,7 @@ from typing import Any, Dict, List, Optional
 
 from repro.cluster.mptransport import (_CTRL, _F_PARAMS, _F_PING,
                                        _F_REJECT, _HDR, _MAX_FRAME,
-                                       _PARAMS, _SLAB_DTYPE,
+                                       _PARAMS, _SLAB_ITEMSIZE,
                                        _pong_frame, _recv_exact,
                                        _slab_from_payload)
 from repro.cluster.transport import ParamsMsg
@@ -56,6 +56,10 @@ class ServeClient:
                                     connect_timeout=connect_timeout)
         self.welcome: Dict[str, Any] = cfg
         self.serve_id = int(cfg.get("serve_id", -1))
+        # the run's slab dtype rides the WELCOME spec: the leader
+        # pushes the params broadcast to serve subscribers in it
+        self.slab_dtype = str((cfg.get("spec") or {})
+                              .get("slab_dtype") or "f32")
         hb = float(cfg.get("heartbeat_s") or 0.0)
         if heartbeat_timeout_s is None:
             heartbeat_timeout_s = max(10.0, 5.0 * hb) if hb > 0 else 0.0
@@ -103,11 +107,12 @@ class ServeClient:
                         except OSError:
                             break
                 elif ftype == _F_PARAMS and n >= _PARAMS.size \
-                        and (n - _PARAMS.size) % _SLAB_DTYPE.itemsize \
-                        == 0:
+                        and (n - _PARAMS.size) \
+                        % _SLAB_ITEMSIZE[self.slab_dtype] == 0:
                     version, epoch = _PARAMS.unpack(
                         payload[:_PARAMS.size])
-                    slab = _slab_from_payload(payload, _PARAMS.size)
+                    slab = _slab_from_payload(payload, _PARAMS.size,
+                                              self.slab_dtype)
                     with self._cond:
                         self._cell = ParamsMsg(version, slab,
                                                epoch=epoch)

@@ -94,7 +94,8 @@ class LMAdapter:
 
         self.cfg = lm_tiny_config()
         template = M.init_params(jax.random.PRNGKey(spec.seed), self.cfg)
-        self.codec = slab_codec(template)
+        self.codec = slab_codec(template,
+                                getattr(spec, "slab_dtype", "f32"))
         rng = np.random.default_rng(spec.seed)
         self.prompts = rng.integers(
             0, self.cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
@@ -129,7 +130,8 @@ class ProbeAdapter:
 
         loss, template, data, _ = SIM_WORKLOADS[spec.arch](spec)
         x_te, y_te = data[2], data[3]
-        self.codec = slab_codec(template)
+        self.codec = slab_codec(template,
+                                getattr(spec, "slab_dtype", "f32"))
         self._probe = (x_te[:batch], y_te[:batch])
         self._loss = jax.jit(loss)
 

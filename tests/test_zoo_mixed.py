@@ -1,0 +1,355 @@
+"""Mixed-precision slabs + model-zoo cluster workloads.
+
+Four layers, matching the refactor they gate:
+
+  * **dtype-aware codec** — property tests over mixed f32/bf16/f16
+    pytrees (decode restores the original per-leaf dtypes; an f32
+    round trip is bitwise for any <=32-bit floating input), the f32
+    codec staying byte-identical to the historical default, and the
+    rejection errors still naming the offending leaf path;
+  * **P-sharded staging** — the sharded aggregator's flush is bitwise
+    identical to the unsharded one (chunking changes the layout, never
+    the arithmetic);
+  * **wire negotiation** — HELLO sizes (bare v1 frame for f32 peers,
+    one trailing dtype byte otherwise), bf16 slab payloads at half the
+    f32 byte count round-tripping bitwise, unknown dtype codes
+    rejected with a readable reason, and a real socket run where bf16
+    negotiation halves the telemetry wire counters per gradient;
+  * **zoo workloads** — registry-built configs scale to tile-aligned
+    widths, and a >=1M-parameter ``zoo:transformer`` trains end to end
+    on ``backend=cluster`` over the proc AND host transports with the
+    conservation ledger exact, sync f32 runs bitwise-reproducible, and
+    bf16 cutting per-gradient wire bytes ~2x.
+"""
+import socket
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExperimentSpec, run
+from repro.cluster import mptransport as mpt
+from repro.cluster.hostlink import spawn_join_process
+from repro.cluster.mptransport import SocketTransport
+from repro.cluster.trainer import ClusterTrainer
+from repro.core.slab import (SlabAggregator, resolve_slab_dtype,
+                             shard_chunks, slab_codec)
+from repro.kernels.hybrid_aggregate import TILE_P
+from repro.models.zoo import ZOO_TIERS, num_params, zoo_config
+
+CHILD_PLATFORM = None if jax.default_backend() == "cpu" else "cpu"
+
+
+def _poll(predicate, timeout_s: float = 5.0, what: str = "condition"):
+    deadline = time.monotonic() + timeout_s
+    while not predicate():
+        assert time.monotonic() < deadline, f"timed out waiting: {what}"
+        time.sleep(0.02)
+
+
+def _check_conservation(res):
+    a = res.extra["accounting"]
+    assert a["computed"] == (a["applied"] + a["dropped"] + a["buffered"]
+                             + a["pending_round"] + a["in_flight"]), a
+    assert res.num_gradients == a["applied"]
+    return a
+
+
+# ------------------------------------------------- dtype-aware codec
+
+_FLOATS = [jnp.float32, jnp.bfloat16, jnp.float16]
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_leaves=st.integers(1, 4),
+       slab_bf16=st.booleans())
+def test_codec_mixed_dtype_round_trip_property(seed, n_leaves,
+                                               slab_bf16):
+    """Property: for any mixed f32/bf16/f16 tree, decode restores the
+    original per-leaf dtypes and shapes; with an f32 slab the round
+    trip is bitwise (every <=32-bit float widens losslessly), and
+    leaves already in the slab dtype are bitwise under either slab."""
+    key = jax.random.PRNGKey(seed)
+    tree = {}
+    for i in range(n_leaves):
+        key, k = jax.random.split(key)
+        dt = _FLOATS[(seed + i) % len(_FLOATS)]
+        tree[f"leaf{i}"] = jax.random.normal(
+            k, (3 + i, 5)).astype(dt)
+    name = "bf16" if slab_bf16 else "f32"
+    codec = slab_codec(tree, name)
+    slab = codec.encode(tree)
+    assert slab.dtype == resolve_slab_dtype(name)
+    assert slab.shape == (codec.padded_size,)
+    back = codec.decode(slab)
+    for leaf_name, want in tree.items():
+        got = back[leaf_name]
+        assert got.dtype == want.dtype and got.shape == want.shape
+        exact = (name == "f32") or want.dtype == jnp.bfloat16
+        if exact:
+            np.testing.assert_array_equal(
+                np.asarray(got, np.float32), np.asarray(want, np.float32))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=1e-2, atol=1e-2)
+
+
+def test_f32_codec_is_the_historical_default_byte_for_byte():
+    """`slab_codec(tree, "f32")` IS `slab_codec(tree)` — same cached
+    object, same compiled executables — and its slab bytes are the
+    historical layout exactly."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (33, 17)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (17,))}
+    default = slab_codec(tree)
+    explicit = slab_codec(tree, "f32")
+    assert default is explicit
+    slab = np.asarray(default.encode(tree))
+    flat = np.concatenate([np.asarray(v).ravel()
+                           for v in jax.tree_util.tree_leaves(tree)])
+    want = np.pad(flat, (0, default.padded_size - default.size))
+    assert slab.tobytes() == want.astype("<f4").tobytes()
+
+
+def test_codec_errors_name_the_offending_path():
+    with pytest.raises(TypeError, match=r"ids"):
+        slab_codec({"layer0": {"ids": jnp.zeros((3,), jnp.int32),
+                               "w": jnp.zeros((3,))}})
+    # >32-bit floats are rejected too (they would quantize silently);
+    # a raw numpy leaf keeps float64 without enabling jax x64
+    with pytest.raises(TypeError, match=r"32-bit.*at \['wd'\]"):
+        slab_codec({"wd": np.zeros((3,), np.float64)})
+
+
+def test_bf16_slab_halves_bytes_and_master_stays_f32():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(2), (64, 64))}
+    f32 = slab_codec(tree, "f32")
+    bf16 = slab_codec(tree, "bf16")
+    assert f32 is not bf16
+    assert bf16.encode(tree).dtype == jnp.bfloat16
+    assert (np.asarray(bf16.encode(tree)).nbytes * 2
+            == np.asarray(f32.encode(tree)).nbytes)
+    # the aggregator's master form never narrows
+    assert bf16.encode_master(tree).dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(bf16.encode_master(tree)),
+                                  np.asarray(f32.encode(tree)))
+
+
+# ------------------------------------------------- P-sharded staging
+
+def test_shard_chunks_tile_aligned_and_exhaustive():
+    padded = 7 * TILE_P
+    for shards in (1, 2, 3, 7, 11):
+        chunks = shard_chunks(padded, shards)
+        assert sum(chunks) == padded
+        assert all(c % TILE_P == 0 for c in chunks)
+        assert len(chunks) == min(shards, 7)
+
+
+@pytest.mark.parametrize("dtype_name", ["f32", "bf16"])
+def test_sharded_flush_bitwise_equals_unsharded(dtype_name):
+    """Chunking the (K, P) staging along P must not change a single
+    bit of the flushed params: the reduction is elementwise over P, so
+    the per-element fold order is identical in every chunk."""
+    shapes = {"w1": (64, 300), "b1": (300,), "w2": (300, 64)}
+    ks = jax.random.split(jax.random.PRNGKey(7), len(shapes) * 4)
+    params = {n: jax.random.normal(k, s)
+              for k, (n, s) in zip(ks, sorted(shapes.items()))}
+    grads = [{n: 0.01 * jax.random.normal(ks[3 + i * 3 + j], s)
+              for j, (n, s) in enumerate(sorted(shapes.items()))}
+             for i in range(3)]
+    codec = slab_codec(params, dtype_name)
+    weights = np.asarray([1.0, 0.7, 0.4], np.float32)
+    outs = {}
+    for shards in (1, 2):
+        agg = SlabAggregator(codec, params, k_max=3, shards=shards)
+        assert agg.shards == shards
+        for slot, g in enumerate(grads):
+            agg.stage(codec.encode(g), slot)
+        agg.flush_apply(weights, 0.1)
+        outs[shards] = np.asarray(agg.params_slab)
+    assert outs[1].tobytes() == outs[2].tobytes()
+
+
+# ------------------------------------------------- wire negotiation
+
+def test_hello_frame_sizes_pin_v1_for_f32():
+    """An f32 peer's HELLO is the pinned v1 frame bit-for-bit; only a
+    non-f32 peer appends the single dtype byte."""
+    f32 = mpt._hello_frame(3, 1)
+    assert f32 == mpt._hello_frame(3, 1, "f32")
+    assert len(f32) == mpt._HDR.size + mpt._HELLO.size
+    bf16 = mpt._hello_frame(3, 1, "bf16")
+    assert len(bf16) == mpt._HDR.size + mpt._HELLO_DT.size
+    assert bf16[-1] == mpt._DT_BF16
+    # the common prefix (magic, proto, id, generation) is unchanged
+    assert bf16[mpt._HDR.size:mpt._HDR.size + mpt._HELLO.size] \
+        == f32[mpt._HDR.size:]
+
+
+def test_bf16_slab_payload_half_bytes_round_trips_bitwise():
+    rng = np.random.default_rng(0)
+    slab = jnp.asarray(rng.standard_normal(4096),
+                       jnp.float32).astype(jnp.bfloat16)
+    payload = mpt._slab_to_bytes(slab, "bf16")
+    assert len(payload) == 2 * slab.size
+    assert len(mpt._slab_to_bytes(slab.astype(jnp.float32), "f32")) \
+        == 4 * slab.size
+    back = mpt._slab_from_payload(payload, 0, "bf16")
+    assert back.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                  np.asarray(slab, np.float32))
+
+
+def test_unknown_hello_dtype_code_rejected():
+    """A HELLO' carrying a dtype code this build does not know is
+    rejected whole — never admitted as a garbled f32 worker."""
+    hub = SocketTransport(4, family="tcp")
+    try:
+        peer = socket.create_connection(tuple(hub.address), timeout=5.0)
+        peer.sendall(
+            mpt._HDR.pack(mpt._F_HELLO, mpt._HELLO_DT.size)
+            + mpt._HELLO_DT.pack(mpt._MAGIC, mpt._PROTO_VERSION,
+                                 0, 0, 7))
+        _poll(lambda: hub.rejected_peers == 1,
+              what="unknown dtype code rejected")
+        assert hub.live_workers() == set()
+        peer.close()
+    finally:
+        hub.close()
+
+
+def test_socket_bf16_negotiation_halves_wire_bytes_per_gradient():
+    """The same budgeted run over the socket transport, once at f32
+    and once at bf16: the telemetry wire counters per computed
+    gradient must come out ~2x smaller at bf16 — the negotiated slab
+    payload dominates the frame."""
+    per_grad = {}
+    for name in ("f32", "bf16"):
+        spec = ExperimentSpec(
+            arch="mlp", backend="cluster", mode="async", smoke=True,
+            transport="socket", cluster_workers=2, wall_budget_s=20.0,
+            wall_sample_every_s=5.0, batch=16, max_gradients=16,
+            slab_dtype=name)
+        res = run(spec)
+        a = _check_conservation(res)
+        counters = res.extra["telemetry"]["counters"]
+        assert counters["wire.tx_bytes"] > 0
+        per_grad[name] = counters["wire.rx_bytes"] / a["computed"]
+    ratio = per_grad["f32"] / per_grad["bf16"]
+    assert 1.8 < ratio < 2.2, per_grad
+
+
+# --------------------------------------------------- zoo workloads
+
+def test_zoo_config_scaling_is_tile_friendly():
+    for kind in ZOO_TIERS:
+        for scale in (0.125, 0.25, 0.5):
+            cfg = zoo_config(kind, scale)
+            assert cfg.d_model % 64 == 0
+            assert cfg.vocab_size % 64 == 0
+            assert cfg.num_groups >= 1
+            if cfg.num_heads:
+                assert cfg.head_dim * cfg.num_heads == cfg.d_model
+                if cfg.num_kv_heads:
+                    assert cfg.num_heads % cfg.num_kv_heads == 0
+    # scale 1.0 reproduces the published tier widths
+    full = zoo_config("xlstm", 1.0)
+    base = ZOO_TIERS["xlstm"]()
+    assert (full.d_model, full.num_groups) == (base.d_model,
+                                               base.num_groups)
+    with pytest.raises(ValueError, match="zoo:"):
+        zoo_config("cobol-net", 0.25)
+
+
+def test_zoo_transformer_meets_the_million_parameter_floor():
+    from repro.models import model as M
+    cfg = zoo_config("transformer", 0.25)
+    p = num_params(M.init_params(jax.random.PRNGKey(0), cfg))
+    assert p >= 1_000_000, p
+
+
+def test_zoo_transformer_proc_e2e_exact_ledger():
+    """A >=1M-parameter registry transformer trains end to end over
+    the proc transport — every worker its own OS process rebuilding
+    the zoo workload from spec JSON — with the ledger exact and real
+    wire traffic in the telemetry."""
+    spec = ExperimentSpec(
+        arch="zoo:transformer", backend="cluster", mode="async",
+        smoke=True, zoo_scale=0.25, transport="proc",
+        cluster_workers=2, wall_budget_s=90.0,
+        wall_sample_every_s=30.0, batch=4, max_gradients=6)
+    res = run(spec)
+    a = _check_conservation(res)
+    assert a["applied"] > 0
+    counters = res.extra["telemetry"]["counters"]
+    assert counters["wire.tx_bytes"] > 0
+    assert counters["wire.rx_bytes"] > 0
+    losses = res.metrics["train_loss"]
+    assert losses and all(np.isfinite(x) for x in losses)
+
+
+def test_zoo_transformer_host_e2e_bf16_halves_wire():
+    """The same >=1M-parameter transformer over the host transport —
+    a leader plus two separately launched `repro join` process groups
+    — negotiated down to bf16: ledger exact, and the uplink bytes per
+    computed gradient sit at the 2-byte/element slab, not the 4-byte
+    f32 one."""
+    from repro.models import model as M
+    spec = ExperimentSpec(
+        arch="zoo:transformer", backend="cluster", mode="async",
+        smoke=True, zoo_scale=0.25, slab_dtype="bf16",
+        transport="host", listen="127.0.0.1:0", cluster_workers=2,
+        wall_budget_s=120.0, wall_sample_every_s=30.0, batch=4,
+        max_gradients=6)
+    trainer = ClusterTrainer()
+    runtime = trainer.build_runtime(spec)
+    procs = [spawn_join_process(runtime.listen_address, workers=1,
+                                platform=CHILD_PLATFORM)
+             for _ in range(2)]
+    try:
+        res = trainer.finish(runtime, spec)
+    finally:
+        codes = []
+        for p in procs:
+            try:
+                codes.append(p.wait(timeout=90))
+            except Exception:
+                p.kill()
+                codes.append("killed")
+    assert codes == [0, 0], codes
+    a = _check_conservation(res)
+    assert a["applied"] > 0
+    counters = res.extra["telemetry"]["counters"]
+    cfg = zoo_config("transformer", 0.25)
+    p_count = num_params(M.init_params(jax.random.PRNGKey(0), cfg))
+    f32_slab_bytes = 4 * p_count
+    rx_per_grad = counters["wire.rx_bytes"] / a["computed"]
+    assert rx_per_grad < 0.75 * f32_slab_bytes, \
+        (rx_per_grad, f32_slab_bytes)
+
+
+def test_zoo_sync_f32_bitwise_reproducible():
+    """Two identical sync f32 zoo runs produce bit-identical final
+    parameters — the mixed-precision refactor leaves the historical
+    f32 path untouched down to the last bit."""
+    finals = []
+    for _ in range(2):
+        trainer = ClusterTrainer()
+        res = trainer.run(ExperimentSpec(
+            arch="zoo:transformer", backend="cluster", mode="sync",
+            smoke=True, zoo_scale=0.125, transport="inproc",
+            cluster_workers=2, wall_budget_s=60.0,
+            wall_sample_every_s=20.0, batch=4, max_gradients=8))
+        a = _check_conservation(res)
+        assert a["applied"] == 8
+        finals.append(trainer.last_params)
+    flat0 = jax.tree_util.tree_leaves(finals[0])
+    flat1 = jax.tree_util.tree_leaves(finals[1])
+    assert len(flat0) == len(flat1)
+    for x, y in zip(flat0, flat1):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
