@@ -45,10 +45,14 @@ import sys
 
 
 def _flush_cells(report):
+    """(fleet, K, optimizer) -> slab grads/sec.  Pre-optimizer-column
+    reports default the third key to "sgd", so an old baseline keeps
+    gating the cells it actually measured."""
     cells = {}
     for c in report.get("grid", []):
-        cells[(int(c["fleet"]), int(c["K"]))] = \
-            float(c["slab"]["grads_per_s"])
+        key = (int(c["fleet"]), int(c["K"]),
+               str(c.get("optimizer", "sgd")))
+        cells[key] = float(c["slab"]["grads_per_s"])
     return cells
 
 
@@ -169,20 +173,22 @@ def main(argv=None):
 
     failures = []
     for key in sorted(base_cells):
-        fleet, k = key
+        fleet, k, opt = key
         base = base_cells[key]
         got = fresh_cells.get(key)
         floor = args.tolerance * base
         if got is None:
-            failures.append(f"fleet={fleet} K={k}: cell missing from "
-                            f"fresh report (baseline {base:.1f} g/s)")
+            failures.append(f"fleet={fleet} K={k} opt={opt}: cell "
+                            f"missing from fresh report (baseline "
+                            f"{base:.1f} g/s)")
             continue
         status = "ok" if got >= floor else "REGRESSED"
-        print(f"fleet={fleet:3d} K={k:3d}: slab {got:9.1f} g/s vs "
-              f"baseline {base:9.1f} (floor {floor:9.1f}) {status}")
+        print(f"fleet={fleet:3d} K={k:3d} {opt:5s}: slab {got:9.1f} "
+              f"g/s vs baseline {base:9.1f} (floor {floor:9.1f}) "
+              f"{status}")
         if got < floor:
             failures.append(
-                f"fleet={fleet} K={k}: {got:.1f} g/s < "
+                f"fleet={fleet} K={k} opt={opt}: {got:.1f} g/s < "
                 f"{args.tolerance} x baseline {base:.1f}")
 
     # zoo grid (schema v3): gated only when the baseline carries one,

@@ -16,7 +16,14 @@ train):
     into a preallocated (K_max, P) buffer, ONE donated flush executable
     for every K via zero-weight masking.
 
-Reported per (fleet, K) cell:
+The grid carries an **optimizer column** ({sgd, adamw} x every
+(fleet, K) cell): sgd cells diff the slab path against the frozen
+pytree baseline (speedup + acceptance); adamw cells record the fused
+flush+optimizer executable — aggregation, moment updates, bias
+correction and the parameter step in ONE donated launch — which has no
+pre-slab counterpart to diff against.
+
+Reported per (fleet, K, optimizer) cell:
 
   * ``grads_per_s`` — gradients applied per second over the **full
     server lifecycle**: construction + executable compilation + serving
@@ -139,14 +146,17 @@ class PytreePath:
 
 
 class SlabPath:
-    """The live slab path: stage K rows, one donated flush."""
+    """The live slab path: stage K rows, one donated flush — with the
+    optimizer (sgd | momentum | adamw) fused into the same executable
+    when one is named."""
 
     name = "slab"
 
-    def __init__(self, params, fleet: int, lr: float):
+    def __init__(self, params, fleet: int, lr: float, optimizer=None):
         self.lr = lr
         self.codec = slab_codec(params)
-        self.agg = SlabAggregator(self.codec, params, max(1, fleet))
+        self.agg = SlabAggregator(self.codec, params, max(1, fleet),
+                                  optimizer=optimizer)
         self.agg.warmup()
 
     def serve_flush(self, grad_slabs: List, weights: np.ndarray,
@@ -341,22 +351,33 @@ def run_transport_grid(fleets, ks, transports, max_gradients: int,
 # ----------------------------------------------------------- measuring
 
 def bench_cell(params, fleet: int, K: int, n_flushes: int,
-               lr: float = 0.05) -> Dict:
-    """One (fleet, K) cell: both paths, same gradients, same flush
-    sequence."""
+               lr: float = 0.05, optimizer: str = "sgd") -> Dict:
+    """One (fleet, K, optimizer) cell, same gradients and flush
+    sequence for every path.  ``optimizer="sgd"`` runs both the frozen
+    pytree baseline and the slab path (the historical comparison, with
+    the speedup acceptance); momentum/adamw cells run the slab path
+    alone — they measure the *fused flush+update* executable, which has
+    no pre-slab counterpart to diff against."""
+    from repro.optim import SlabOptimizer
+
     bank = gradient_bank(params, max(K, 4))
     codec = slab_codec(params)
     bank_slabs = [codec.encode(g) for g in bank]
     jax.block_until_ready(bank_slabs)
     weights = np.ones((K,), np.float32)
     n_gradients = n_flushes * K
-    cell: Dict = {"fleet": fleet, "K": K, "n_flushes": n_flushes,
-                  "n_gradients": n_gradients}
+    cell: Dict = {"fleet": fleet, "K": K, "optimizer": optimizer,
+                  "n_flushes": n_flushes, "n_gradients": n_gradients}
+    opt = SlabOptimizer(optimizer)
 
-    for cls, grads in ((PytreePath, bank), (SlabPath, bank_slabs)):
+    paths = [(SlabPath, bank_slabs)]
+    if optimizer == "sgd":
+        paths.insert(0, (PytreePath, bank))
+    for cls, grads in paths:
         rows = [grads[i % len(grads)] for i in range(K)]
         t0 = time.perf_counter()
-        path = cls(params, fleet, lr)
+        path = cls(params, fleet, lr, optimizer=opt) \
+            if cls is SlabPath else cls(params, fleet, lr)
         startup_s = time.perf_counter() - t0
         lat = np.empty(n_flushes)
         t1 = time.perf_counter()
@@ -372,12 +393,15 @@ def bench_cell(params, fleet: int, K: int, n_flushes: int,
             "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
         }
-    cell["speedup_grads_per_s"] = round(
-        cell["slab"]["grads_per_s"] / cell["pytree"]["grads_per_s"], 2)
+    if optimizer == "sgd":
+        cell["speedup_grads_per_s"] = round(
+            cell["slab"]["grads_per_s"] / cell["pytree"]["grads_per_s"],
+            2)
     return cell
 
 
-def run_grid(fleets, ks, n_flushes: int) -> Dict:
+def run_grid(fleets, ks, n_flushes: int,
+             optimizers=("sgd", "adamw")) -> Dict:
     params = ci_workload()
     codec = slab_codec(params)
     grid = []
@@ -385,18 +409,29 @@ def run_grid(fleets, ks, n_flushes: int) -> Dict:
         for K in ks:
             if K > fleet:
                 continue
-            cell = bench_cell(params, fleet, K, n_flushes)
-            grid.append(cell)
-            print(f"fleet={fleet:3d} K={K:3d}: "
-                  f"pytree {cell['pytree']['grads_per_s']:9.1f} g/s "
-                  f"(p50 {cell['pytree']['p50_ms']:.2f}ms) | "
-                  f"slab {cell['slab']['grads_per_s']:9.1f} g/s "
-                  f"(p50 {cell['slab']['p50_ms']:.2f}ms) | "
-                  f"speedup {cell['speedup_grads_per_s']:.2f}x",
-                  flush=True)
-    # the acceptance cell: K >= 4 cells must show >= 2x; record the
+            for optimizer in optimizers:
+                cell = bench_cell(params, fleet, K, n_flushes,
+                                  optimizer=optimizer)
+                grid.append(cell)
+                if optimizer == "sgd":
+                    print(f"fleet={fleet:3d} K={K:3d} {optimizer:5s}: "
+                          f"pytree {cell['pytree']['grads_per_s']:9.1f}"
+                          f" g/s "
+                          f"(p50 {cell['pytree']['p50_ms']:.2f}ms) | "
+                          f"slab {cell['slab']['grads_per_s']:9.1f} g/s"
+                          f" (p50 {cell['slab']['p50_ms']:.2f}ms) | "
+                          f"speedup {cell['speedup_grads_per_s']:.2f}x",
+                          flush=True)
+                else:
+                    print(f"fleet={fleet:3d} K={K:3d} {optimizer:5s}: "
+                          f"slab {cell['slab']['grads_per_s']:9.1f} g/s"
+                          f" (p50 {cell['slab']['p50_ms']:.2f}ms) "
+                          f"[fused flush+update]", flush=True)
+    # the acceptance cell: K >= 4 sgd cells must show >= 2x; record the
     # worst of them so the pass/fail is the conservative reading
-    acc_cells = [c for c in grid if c["K"] >= 4]
+    # (momentum/adamw cells carry no pytree baseline to diff against)
+    acc_cells = [c for c in grid
+                 if c["K"] >= 4 and c["optimizer"] == "sgd"]
     worst = min(acc_cells, key=lambda c: c["speedup_grads_per_s"]) \
         if acc_cells else None
     report = {

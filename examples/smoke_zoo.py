@@ -4,7 +4,8 @@ The CI gate behind ``make smoke-zoo``: a ``zoo:transformer`` workload
 (registry-built config, real forward/backward through the model stack)
 trains end-to-end on the cluster backend over the ``proc`` transport —
 every worker its own OS process — with the slab wire negotiated down to
-bf16.  The run is gated on:
+bf16 and the slab-resident AdamW optimizer (f32 moment slabs riding a
+bf16 params slab).  The run is gated on:
 
   1. the run result itself (non-zero applied gradients, finite loss);
   2. the exact conservation ledger: computed == applied + dropped +
@@ -14,7 +15,9 @@ bf16.  The run is gated on:
      cross-check;
   4. the negotiated dtype actually halving the per-gradient frame:
      tx_bytes per computed gradient must be well under the f32 slab
-     size.
+     size;
+  5. the fused flush+AdamW path actually running (``optimizer_steps``
+     counter > 0).
 
   PYTHONPATH=src python examples/smoke_zoo.py
 
@@ -30,8 +33,9 @@ def main():
     spec = ExperimentSpec(
         arch="zoo:transformer", backend="cluster", mode="async",
         smoke=True, zoo_scale=0.125, slab_dtype="bf16",
-        transport="proc", cluster_workers=2, wall_budget_s=60.0,
-        wall_sample_every_s=15.0, batch=8, max_gradients=24)
+        optimizer="adamw", transport="proc", cluster_workers=2,
+        wall_budget_s=60.0, wall_sample_every_s=15.0, batch=8,
+        max_gradients=24)
     res = run(spec)
 
     ok = True
@@ -61,6 +65,11 @@ def main():
     check = tel.get("ledger_check", {})
     if not check.get("consistent", False):
         print(f"[zoo] FAIL: telemetry ledger cross-check: {check}")
+        ok = False
+    steps = counters.get("optimizer_steps", 0)
+    if steps <= 0:
+        print(f"[zoo] FAIL: no fused optimizer steps recorded "
+              f"(optimizer_steps={steps}) for an adamw run")
         ok = False
 
     # the bf16 negotiation gate: each uplinked gradient frame carries a

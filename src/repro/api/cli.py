@@ -92,6 +92,16 @@ _SPEC_FLAGS = [
     ("--seed", "seed", int, "RNG seed"),
     ("--lr", "lr", float, "learning rate"),
     ("--batch", "batch", int, "per-gradient batch size"),
+    ("--optimizer", "optimizer", str,
+     "server-side slab optimizer: sgd (historical flush, bit for bit, "
+     "default) | momentum | adamw — moments live as f32 slab buffers "
+     "inside the fused flush executable"),
+    ("--beta1", "beta1", float,
+     "momentum decay / AdamW b1 (default 0.9)"),
+    ("--beta2", "beta2", float,
+     "AdamW second-moment decay b2 (default 0.95)"),
+    ("--weight-decay", "weight_decay", float,
+     "AdamW decoupled weight decay (default 0)"),
     ("--horizon", "horizon", float, "sim: virtual seconds"),
     ("--sample-every", "sample_every", float, "sim: metric grid spacing"),
     ("--flush-mode", "flush_mode", str, f"sim: one of {FLUSH_MODES}"),

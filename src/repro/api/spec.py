@@ -50,6 +50,14 @@ class ExperimentSpec:
     # optimization
     lr: float = 0.01
     batch: int = 32
+    optimizer: str = "sgd"         # server-side slab optimizer:
+    #                                "sgd" (historical flush, bit for
+    #                                bit) | "momentum" | "adamw" —
+    #                                moments live as f32 slab buffers
+    #                                inside the fused flush executable
+    beta1: float = 0.9             # momentum decay / AdamW b1
+    beta2: float = 0.95            # AdamW b2 (second-moment decay)
+    weight_decay: float = 0.0      # AdamW decoupled weight decay
     # simulator backend (virtual time)
     horizon: float = 20.0          # virtual seconds
     sample_every: float = 0.5      # metric-grid spacing (virtual seconds)
@@ -144,6 +152,16 @@ class ExperimentSpec:
         if self.slab_dtype not in ("f32", "bf16"):
             raise ValueError('slab_dtype must be "f32" or "bf16", '
                              f"got {self.slab_dtype!r}")
+        from repro.optim.slab_form import OPTIMIZER_NAMES
+        if self.optimizer not in OPTIMIZER_NAMES:
+            raise ValueError(f"optimizer must be one of "
+                             f"{OPTIMIZER_NAMES}, got {self.optimizer!r}")
+        if not (0.0 <= self.beta1 < 1.0 and 0.0 <= self.beta2 < 1.0):
+            raise ValueError(f"beta1/beta2 must be in [0, 1), got "
+                             f"{self.beta1!r}/{self.beta2!r}")
+        if self.weight_decay < 0:
+            raise ValueError(f"weight_decay must be >= 0, "
+                             f"got {self.weight_decay!r}")
         if self.zoo_scale <= 0:
             raise ValueError(f"zoo_scale must be > 0, "
                              f"got {self.zoo_scale!r}")
@@ -163,6 +181,14 @@ class ExperimentSpec:
     def with_(self, **changes) -> "ExperimentSpec":
         """Functional update (``dataclasses.replace`` with validation)."""
         return dataclasses.replace(self, **changes)
+
+    def slab_optimizer(self):
+        """The server-side optimizer config
+        (:class:`repro.optim.SlabOptimizer`) this spec names."""
+        from repro.optim.slab_form import SlabOptimizer
+        return SlabOptimizer(self.optimizer, beta1=self.beta1,
+                             beta2=self.beta2,
+                             weight_decay=self.weight_decay)
 
     # ------------------------------------------------------ serialization
     def to_dict(self) -> Dict[str, Any]:

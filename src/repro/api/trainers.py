@@ -160,7 +160,8 @@ class SimulatorTrainer:
 
         workload = self._build(spec)
         key = (id(workload), spec.lr, spec.batch, spec.pool, spec.seed,
-               spec.staleness_decay, spec.flush_mode)
+               spec.staleness_decay, spec.flush_mode, spec.optimizer,
+               spec.beta1, spec.beta2, spec.weight_decay)
         cached_key, cached = self._engine_cache
         if cached_key == key:
             return cached
@@ -169,7 +170,8 @@ class SimulatorTrainer:
             loss_fn, init_params, data, lr=spec.lr, batch_size=spec.batch,
             pool=spec.pool, seed=spec.seed,
             staleness_decay=spec.staleness_decay,
-            flush_mode=spec.flush_mode, accuracy_fn=accuracy_fn)
+            flush_mode=spec.flush_mode, accuracy_fn=accuracy_fn,
+            optimizer=spec.slab_optimizer())
         self._engine_cache = (key, trainer)
         return trainer
 

@@ -1,2 +1,2 @@
-from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,  # noqa: F401
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import (latest_step, load_opt_state,  # noqa: F401
+                                   restore_checkpoint, save_checkpoint)

@@ -4,6 +4,12 @@ Leaves are gathered to host, flattened with '/'-joined key paths, and
 stored in a single .npz plus a metadata sidecar.  Restore rebuilds the
 exact pytree (dtypes included) and re-places leaves against target
 shardings when a mesh is provided.
+
+Optimizer slab state (the server-side moments + update count of
+:mod:`repro.core.slab`) rides in the same .npz under a reserved
+``__opt__/`` prefix, with the moment names + count recorded in the
+sidecar.  Old checkpoints simply lack the block — :func:`load_opt_state`
+returns ``None`` and a restore starts the moments from zero.
 """
 from __future__ import annotations
 
@@ -37,18 +43,35 @@ def _path_str(p) -> str:
     return str(p)
 
 
+_OPT_PREFIX = "__opt__/"    # reserved npz namespace for optimizer slabs
+
+
 def save_checkpoint(path: str, params, step: int,
-                    extra: Optional[Dict[str, Any]] = None) -> None:
+                    extra: Optional[Dict[str, Any]] = None,
+                    opt_state: Optional[Dict[str, Any]] = None) -> None:
+    """``opt_state`` is the :meth:`repro.core.slab.SlabAggregator.
+    opt_state_host` form — f32 ``(P_pad,)`` moment slabs keyed by name
+    plus an int ``"count"`` — or ``None`` (plain SGD / no optimizer
+    state to carry)."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(params)
+    assert not any(k.startswith(_OPT_PREFIX) for k in flat), \
+        f"params pytree collides with the reserved {_OPT_PREFIX!r} keys"
+    meta = {"step": int(step), "extra": extra or {},
+            "keys": sorted(flat.keys())}
+    if opt_state is not None:
+        names = sorted(k for k in opt_state if k != "count")
+        for name in names:
+            flat[_OPT_PREFIX + name] = np.asarray(opt_state[name],
+                                                  np.float32)
+        meta["opt"] = {"names": names,
+                       "count": int(opt_state["count"])}
     # write-then-rename so a concurrent reader (e.g. the cluster
     # runtime's mid-run restore) never sees a partial file; the .json
     # sidecar is the commit marker (latest_step keys off it), so it
     # lands last.  savez appends ".npz" when missing, hence ".tmp.npz".
     np.savez(path + ".tmp.npz", **flat)
     os.replace(path + ".tmp.npz", path + ".npz")
-    meta = {"step": int(step), "extra": extra or {},
-            "keys": sorted(flat.keys())}
     with open(path + ".json.tmp", "w") as f:
         json.dump(meta, f)
     os.replace(path + ".json.tmp", path + ".json")
@@ -74,6 +97,23 @@ def restore_checkpoint(path: str, like, shardings=None):
             val = jax.device_put(val, sh)
         leaves.append(val)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]
+
+
+def load_opt_state(path: str) -> Optional[Dict[str, Any]]:
+    """The optimizer slab state saved alongside a checkpoint (moment
+    slabs + update count), or ``None`` when the checkpoint predates
+    slab-resident optimizers or was written by a plain-SGD run — the
+    caller then restores with zeroed moments."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    opt = meta.get("opt")
+    if not opt:
+        return None
+    data = np.load(path + ".npz")
+    state: Dict[str, Any] = {name: data[_OPT_PREFIX + name]
+                             for name in opt["names"]}
+    state["count"] = int(opt["count"])
+    return state
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

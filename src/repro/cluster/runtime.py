@@ -61,8 +61,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.checkpoint import (latest_step, restore_checkpoint,
-                              save_checkpoint)
+from repro.checkpoint import (latest_step, load_opt_state,
+                              restore_checkpoint, save_checkpoint)
 from repro.cluster.faults import FaultPlan
 from repro.cluster.mptransport import (ProcTransport, ProcWorkerConfig,
                                        SocketTransport)
@@ -73,6 +73,7 @@ from repro.core.schedule import ThresholdSchedule, constant_schedule
 from repro.core.slab import slab_codec
 from repro.data.pipeline import shard_iterator
 from repro.obs.telemetry import Telemetry
+from repro.optim.slab_form import SlabOptimizer
 
 _log = logging.getLogger("repro.cluster.runtime")
 
@@ -124,6 +125,7 @@ class ClusterRuntime:
                  join_secret: Optional[str] = None,
                  lease_grace_s: float = 2.0,
                  slab_dtype: str = "f32",
+                 optimizer: Optional[SlabOptimizer] = None,
                  proc_ready_timeout_s: float = 180.0,
                  verbose: bool = False,
                  ckpt_dir: Optional[str] = None,
@@ -234,6 +236,10 @@ class ClusterRuntime:
         # slab_dtype declares the staging/wire precision (f32 | bf16);
         # the server's master params and flush reduction stay f32
         self.slab_dtype = str(slab_dtype)
+        # the server-side optimizer: moments live as f32 slab buffers
+        # inside the aggregator's fused flush executable (see
+        # repro.core.slab); "sgd" is the historical flush, bit for bit
+        self.optimizer = optimizer or SlabOptimizer("sgd")
         self.codec = slab_codec(init_params, self.slab_dtype)
         grad_fn = jax.grad(loss_fn)
 
@@ -470,11 +476,17 @@ class ClusterRuntime:
 
     def _checkpointer(self) -> None:
         while not self._stop.wait(self.faults.checkpoint_every_s):
-            version, params, applied = self.server.snapshot()
+            # params + optimizer moments captured atomically (one lock
+            # acquisition): a checkpoint whose moments ran one flush
+            # ahead of its params would resume subtly wrong
+            version, params, applied, opt_state = \
+                self.server.snapshot_for_checkpoint()
             path = os.path.join(self.ckpt_dir, f"step_{version}")
             save_checkpoint(path, params, version,
                             extra={"mode": self.mode, "applied": applied,
-                                   "backend": "cluster"})
+                                   "backend": "cluster",
+                                   "optimizer": self.optimizer.name},
+                            opt_state=opt_state)
             self._log_event("checkpoint", step=version)
 
     def _restorer(self) -> None:
@@ -486,7 +498,11 @@ class ClusterRuntime:
             return
         path = os.path.join(self.ckpt_dir, f"step_{step}")
         params, step = restore_checkpoint(path, like=self.init_params)
-        self.server.restore(params, step)
+        # moment slabs + update count ride the same checkpoint; an old
+        # (or sgd-written) checkpoint has none and the moments restart
+        # from zero with the same epoch bump
+        self.server.restore(params, step,
+                            opt_state=load_opt_state(path))
         self._log_event("restore", step=step)
 
     def _stats_payload(self) -> Dict[str, Any]:
@@ -498,10 +514,13 @@ class ClusterRuntime:
         serve_clients = 0
         if hasattr(self.transport, "serve_stats"):
             serve_clients = self.transport.serve_stats()["clients"]
+        counters = self.obs.counters()
         return {
             "t": round(self._elapsed(), 3),
             "version": self.server.version,
             "mode": self.mode,
+            "optimizer": self.optimizer.name,
+            "optimizer_steps": counters.get("optimizer_steps", 0),
             "applied": a["applied"],
             "dropped": a["dropped"],
             "buffered": a["buffered"],
@@ -612,9 +631,13 @@ class ClusterRuntime:
         #                                 reset when the clock starts
         start_version = 0
         start_params = self.init_params
+        resume_opt_state = None
         if self.resume_from:
             start_params, start_version = restore_checkpoint(
                 self.resume_from, like=self.init_params)
+            # optimizer moments + update count resume with the params;
+            # None (old / sgd-written checkpoint) keeps them at zero
+            resume_opt_state = load_opt_state(self.resume_from)
 
         if self.transport_kind not in ("proc", "host"):
             # compile the worker gradient before the clock starts, so
@@ -640,7 +663,14 @@ class ClusterRuntime:
             staleness_decay=self.staleness_decay,
             max_gradients=self.max_gradients,
             start_version=start_version,
-            slab_dtype=self.slab_dtype, obs=self.obs)
+            slab_dtype=self.slab_dtype, optimizer=self.optimizer,
+            obs=self.obs)
+        if resume_opt_state is not None:
+            # after construction (warmup rewound the count to 0) and
+            # before any worker can flush: load the checkpointed
+            # moments so the resumed run continues bias correction
+            # from the saved step, not from step 0
+            self.server.agg.reset_opt_state(resume_opt_state)
         if hasattr(self.transport, "stats_provider"):
             # the STATS push plane (`repro top`): now that the server
             # exists, the hub can answer stats subscribers with live

@@ -48,6 +48,7 @@ from repro.core.slab import SlabAggregator, SlabBuffer, slab_codec
 from repro.core.schedule import ThresholdSchedule
 from repro.cluster.transport import GradientMsg, ParamsMsg, Transport
 from repro.obs.telemetry import NULL
+from repro.optim.slab_form import SlabOptimizer
 
 
 class ParameterServer:
@@ -60,6 +61,7 @@ class ParameterServer:
                  use_pallas: Optional[bool] = None,
                  interpret: bool = False,
                  slab_dtype: str = "f32",
+                 optimizer: Optional[SlabOptimizer] = None,
                  obs=None):
         assert mode in ("sync", "async", "hybrid")
         assert flush_mode in ("sum", "mean")
@@ -93,9 +95,14 @@ class ParameterServer:
         # carry it, while the master params slab and the flush
         # reduction stay f32 (see repro.core.slab)
         self.codec = slab_codec(params, slab_dtype)
+        # the optimizer lives on the slab: moments (if any) are f32
+        # slab-shaped buffers inside the aggregator, applied by the same
+        # fused executable as the aggregation itself
+        self.optimizer = optimizer or SlabOptimizer("sgd")
         self.agg = SlabAggregator(self.codec, params, k_max,
                                   use_pallas=use_pallas,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  optimizer=self.optimizer)
         # compile the stage + flush executables before the clock starts
         # (compiling mid-run would stall the whole fleet under the
         # server lock) — one compile each, for any fleet size
@@ -232,6 +239,11 @@ class ParameterServer:
         self.updates_applied += 1
         self.applied += len(weights)
         self.obs.observe("flush_s", dt)
+        # the optimizer step IS the fused flush — one histogram + one
+        # counter at the seam, whatever the optimizer (sgd included),
+        # so `repro top`/Prometheus can watch update latency per choice
+        self.obs.observe("opt_update_s", dt)
+        self.obs.count("optimizer_steps")
         self.obs.span_at("server", "flush", t0, dt, k=len(weights),
                          version=self.version)
         self.obs.count("grads_applied", len(weights))
@@ -269,7 +281,29 @@ class ParameterServer:
         with self.lock:
             return self.version, self.agg.params_slab, self.applied
 
-    def restore(self, params, step: int) -> None:
+    def snapshot_for_checkpoint(self):
+        """(version, params, applied, opt_state) with params and the
+        optimizer moments captured under **one** lock acquisition — a
+        flush landing between two separate snapshots would persist
+        moments one step ahead of the params they belong to.  The
+        moment copy runs under the lock (donation rule); the params
+        decode + host copy happens outside it, like :meth:`snapshot`."""
+        with self.lock:
+            version, pub, applied = (self.version, self.agg.params_slab,
+                                     self.applied)
+            opt_state = self.agg.opt_state_host()
+        return version, self.codec.decode_host(pub), applied, opt_state
+
+    def snapshot_opt_state(self):
+        """Host copies of the optimizer's moment slabs + update count
+        (``None`` for sgd).  The whole copy runs **under the lock**, per
+        the donation rule: the moments are donated buffers, and a
+        concurrent flush would invalidate them mid-copy — unlike the
+        published params slab, there is no fresh-output shortcut."""
+        with self.lock:
+            return self.agg.opt_state_host()
+
+    def restore(self, params, step: int, opt_state=None) -> None:
         """Restore-into-running-server: replace the live params and
         version (so K(t) continues from ``step``), discarding any
         in-buffer or mid-round gradients (they were computed against a
@@ -286,6 +320,10 @@ class ParameterServer:
             self.buffer.discard()
             self._round = {}
             self.agg.reset_params(params)
+            # moments resync with the same epoch bump: either the
+            # checkpointed slabs + count, or zeros — stale moments
+            # against restored params would re-apply abandoned history
+            self.agg.reset_opt_state(opt_state)
             self.version = int(step)
             # the epoch bump is what tells a sync worker "this is a
             # restore, recontribute" — the version alone can look like

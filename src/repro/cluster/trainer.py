@@ -114,6 +114,7 @@ class ClusterTrainer:
             heartbeat_s=spec.heartbeat_s, serve_every=spec.serve_every,
             max_workers=spec.max_workers, join_secret=self.join_secret,
             slab_dtype=spec.slab_dtype,
+            optimizer=spec.slab_optimizer(),
             # proc children connect as fast as JAX compiles (180s
             # default is plenty); host workers are started by a human
             # in another terminal, possibly on other machines — give

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.schedule import ThresholdSchedule, constant_schedule
 from repro.core.slab import SlabAggregator, SlabBuffer, slab_codec
+from repro.optim.slab_form import SlabOptimizer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,7 +95,8 @@ class PSTrainer:
                  lr: float = 0.01, batch_size: int = 32,
                  pool: WorkerPool = WorkerPool(), seed: int = 0,
                  staleness_decay: float = 1.0, flush_mode: str = "sum",
-                 accuracy_fn: Optional[Callable] = None):
+                 accuracy_fn: Optional[Callable] = None,
+                 optimizer: Optional[SlabOptimizer] = None):
         """data = (x_train, y_train, x_test, y_test); loss_fn(params, x, y)
         -> scalar nll.
 
@@ -127,6 +129,10 @@ class PSTrainer:
             lambda p, x, y: self._codec.encode(grad_fn(p, x, y)))
         self._loss = jax.jit(loss_fn)
         self.accuracy_fn = accuracy_fn
+        # the server-side optimizer: same slab-resident moments + fused
+        # flush+update executable as the cluster server, so the two
+        # backends stay bitwise-comparable per optimizer choice
+        self.optimizer = optimizer or SlabOptimizer("sgd")
         # aggregators (and their compiled stage/flush executables) are
         # reused across simulate() calls — one compile per staging
         # width, however many runs a comparison sweep makes
@@ -187,12 +193,14 @@ class PSTrainer:
         agg = self._agg_cache.get(k_max)
         if agg is None:
             agg = self._agg_cache[k_max] = SlabAggregator(
-                self._codec, params, k_max)
+                self._codec, params, k_max, optimizer=self.optimizer)
         else:
-            # reused executables, fresh state: re-seed the params and
-            # wipe rows a previous run may have left staged
+            # reused executables, fresh state: re-seed the params, wipe
+            # rows a previous run may have left staged, and zero the
+            # optimizer moments + count back to step 0
             agg.reset_params(params)
             agg.wipe_staging()
+            agg.reset_opt_state()
         buffer = SlabBuffer(agg, self.staleness_decay)
         version = 0            # number of parameter updates applied
         n_grads = 0

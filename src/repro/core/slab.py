@@ -64,7 +64,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.hybrid_aggregate import TILE_P, flush_pallas
+from repro.kernels.hybrid_aggregate import (TILE_P, flush_adamw_pallas,
+                                            flush_momentum_pallas,
+                                            flush_pallas)
+from repro.optim.optimizers import bias_correction
+from repro.optim.slab_form import SlabOptimizer
 
 # declared aggregation dtypes: spec/CLI name -> jnp dtype.  "f32" is the
 # historical pinned format (byte-identical slabs to the pre-dtype-aware
@@ -263,12 +267,23 @@ class SlabAggregator:
     the masked fold is elementwise along P, so the sharded flush is
     bitwise identical to the unsharded one.  ``shards=None`` picks
     automatically (1 unless the slab is huge and devices are plural).
+
+    **Slab-resident optimizer**: with ``optimizer=``
+    :class:`repro.optim.SlabOptimizer` the update step lives here too —
+    momentum's ``mu`` / AdamW's ``mu``/``nu`` moments are **f32** slabs
+    shaped and sharded exactly like the master params (f32 even under a
+    bf16 codec), donated into ONE fused flush+optimizer executable per
+    buffer shape, with AdamW's bias correction driven by the int32
+    update count carried in state (the convention shared with the
+    pytree-form optimizers).  ``optimizer="sgd"`` (the default) keeps
+    the historical executable untouched, bit for bit.
     """
 
     def __init__(self, codec: SlabCodec, params, k_max: int, *,
                  use_pallas: Optional[bool] = None,
                  interpret: bool = False,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None,
+                 optimizer: Optional[SlabOptimizer] = None):
         assert k_max >= 1, k_max
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
@@ -276,6 +291,7 @@ class SlabAggregator:
         self.k_max = int(k_max)
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.opt = optimizer or SlabOptimizer("sgd")
         if shards is None:
             shards = _auto_shards(codec.padded_size)
         self.chunk_sizes = shard_chunks(codec.padded_size, shards)
@@ -285,6 +301,19 @@ class SlabAggregator:
         self._devices = jax.local_devices()
         self._stage = jax.jit(self._stage_impl, donate_argnums=(0,))
         self._flush = jax.jit(self._flush_impl, donate_argnums=(0,))
+        # the fused flush+optimizer executables: the params slab AND the
+        # moment slabs are donated — updated in place, never escaping.
+        # The unit-lr pytree (init, update) pair supplies the jnp-path
+        # math, so slab-form and pytree-form share one convention
+        self._pair = self.opt.pair()
+        if self.opt.name == "momentum":
+            self._flush_opt = jax.jit(self._flush_momentum_impl,
+                                      donate_argnums=(0, 1))
+        elif self.opt.name == "adamw":
+            self._flush_opt = jax.jit(self._flush_adamw_impl,
+                                      donate_argnums=(0, 1, 2))
+        else:
+            self._flush_opt = None
         if self.shards == 1:
             # historical single-buffer path, bit for bit
             self._slab = codec.encode_master(params)
@@ -299,6 +328,24 @@ class SlabAggregator:
         # published params slab: always a fresh executable output
         self._pub = codec.encode(params)
         self._zero_row = jnp.zeros((codec.padded_size,), codec.slab_dtype)
+        self._init_opt_state()
+
+    def _init_opt_state(self) -> None:
+        """Zero the optimizer state: **f32** moment slabs shaped (and
+        sharded) exactly like the master params slab — f32 even under a
+        bf16 codec, per the moments-never-narrow rule — plus the int32
+        update count."""
+        self._count = jnp.zeros((), jnp.int32)
+        self._moments: Dict[str, Any] = {}
+        for name in self.opt.moment_names:
+            if self.shards == 1:
+                self._moments[name] = jnp.zeros(
+                    (self.codec.padded_size,), jnp.float32)
+            else:
+                self._moments[name] = [
+                    jax.device_put(jnp.zeros((n,), jnp.float32), d)
+                    for n, d in zip(self.chunk_sizes,
+                                    self._chunk_devices())]
 
     # ------------------------------------------------------ executables
     @staticmethod
@@ -339,6 +386,71 @@ class SlabAggregator:
         if self.codec.slab_dtype == jnp.dtype(jnp.float32):
             return new, new + 0.0
         return new, new.astype(self.codec.slab_dtype)
+
+    def _published(self, new):
+        """The publish copy of a freshly updated master slab: a fresh
+        buffer that never aliases the donated master (in bf16 mode the
+        publish IS the narrowing cast)."""
+        if self.codec.slab_dtype == jnp.dtype(jnp.float32):
+            return new + 0.0
+        return new.astype(self.codec.slab_dtype)
+
+    def _mean_grad(self, staging, weights):
+        """The flush's weighted-mean gradient on the jnp path: the same
+        statically unrolled masked f32 fold as the SGD flush (same muls,
+        adds, order — deterministic), normalized by the weight sum."""
+        rows = staging if staging.dtype == jnp.float32 \
+            else staging.astype(jnp.float32)
+        agg = weights[0] * rows[0]
+        for i in range(1, self.k_max):
+            agg = agg + weights[i] * rows[i]
+        return agg / jnp.sum(weights)
+
+    def _flush_momentum_impl(self, pslab, mu, count, staging, weights,
+                             scale):
+        # fused aggregate + heavy-ball momentum:  mu' = β·mu + ĝ ;
+        # params' = params - scale·mu'.  ``pslab`` and ``mu`` are
+        # donated; the moments stay f32 whatever the staging dtype
+        if self.use_pallas:
+            rows = staging if staging.dtype == jnp.float32 \
+                else staging.astype(jnp.float32)
+            upd, mu_new = flush_momentum_pallas(
+                rows, weights / jnp.sum(weights), mu, self.opt.beta1,
+                interpret=self.interpret)
+            new = pslab - scale * upd
+            count_new = count + 1
+        else:
+            g = self._mean_grad(staging, weights)
+            upd, st = self._pair.update(
+                g, {"count": count, "mu": mu}, pslab)
+            new = pslab + scale * upd
+            mu_new, count_new = st["mu"], st["count"]
+        return new, mu_new, count_new, self._published(new)
+
+    def _flush_adamw_impl(self, pslab, mu, nu, count, staging, weights,
+                          scale):
+        # fused aggregate + AdamW with bias correction off the int32
+        # count carried in state (the shared step-count convention of
+        # repro.optim).  ``pslab``/``mu``/``nu`` are donated
+        if self.use_pallas:
+            rows = staging if staging.dtype == jnp.float32 \
+                else staging.astype(jnp.float32)
+            c = count + 1
+            bc1, bc2 = bias_correction(c, self.opt.beta1, self.opt.beta2)
+            new, mu_new, nu_new = flush_adamw_pallas(
+                rows, weights / jnp.sum(weights), pslab, mu, nu,
+                bc1, bc2, scale, b1=self.opt.beta1, b2=self.opt.beta2,
+                eps=self.opt.eps, weight_decay=self.opt.weight_decay,
+                interpret=self.interpret)
+            count_new = c
+        else:
+            g = self._mean_grad(staging, weights)
+            upd, st = self._pair.update(
+                g, {"count": count, "mu": mu, "nu": nu}, pslab)
+            new = pslab + scale * upd
+            mu_new, nu_new = st["mu"], st["nu"]
+            count_new = st["count"]
+        return new, mu_new, nu_new, count_new, self._published(new)
 
     # ----------------------------------------------------------- chunks
     def _chunk_devices(self):
@@ -381,15 +493,52 @@ class SlabAggregator:
         wfull[:k] = np.asarray(weights, np.float32)
         w = jnp.asarray(wfull)
         s = jnp.asarray(scale, jnp.float32)
+        if self.opt.name == "sgd":
+            # the historical path, bit for bit: same executable, same
+            # arguments, no optimizer-state plumbing in the trace
+            if self.shards == 1:
+                self._slab, self._pub = self._flush(self._slab,
+                                                    self._staging, w, s)
+                return self._pub
+            pubs = []
+            for i in range(self.shards):
+                self._slab[i], pub = self._flush(self._slab[i],
+                                                 self._staging[i], w, s)
+                pubs.append(pub)
+            self._pub = self._assemble(pubs)
+            return self._pub
+        if self.opt.name == "momentum":
+            mu = self._moments["mu"]
+            if self.shards == 1:
+                self._slab, self._moments["mu"], self._count, self._pub \
+                    = self._flush_opt(self._slab, mu, self._count,
+                                      self._staging, w, s)
+                return self._pub
+            pubs = []
+            cnt = self._count
+            for i in range(self.shards):
+                self._slab[i], mu[i], cnt, pub = self._flush_opt(
+                    self._slab[i], mu[i], self._count,
+                    self._staging[i], w, s)
+                pubs.append(pub)
+            self._count = cnt
+            self._pub = self._assemble(pubs)
+            return self._pub
+        # adamw
+        mu, nu = self._moments["mu"], self._moments["nu"]
         if self.shards == 1:
-            self._slab, self._pub = self._flush(self._slab,
-                                                self._staging, w, s)
+            (self._slab, self._moments["mu"], self._moments["nu"],
+             self._count, self._pub) = self._flush_opt(
+                self._slab, mu, nu, self._count, self._staging, w, s)
             return self._pub
         pubs = []
+        cnt = self._count
         for i in range(self.shards):
-            self._slab[i], pub = self._flush(self._slab[i],
-                                             self._staging[i], w, s)
+            self._slab[i], mu[i], nu[i], cnt, pub = self._flush_opt(
+                self._slab[i], mu[i], nu[i], self._count,
+                self._staging[i], w, s)
             pubs.append(pub)
+        self._count = cnt
         self._pub = self._assemble(pubs)
         return self._pub
 
@@ -412,6 +561,47 @@ class SlabAggregator:
         self._slab = master if self.shards == 1 else self._shard(master)
         self._pub = self.codec.encode(params)
 
+    def reset_opt_state(self, state: Optional[Dict[str, Any]] = None
+                        ) -> None:
+        """Resync the optimizer state (checkpoint restore): ``None``
+        zeros the moments and the update count; a dict (the
+        :meth:`opt_state_host` form — f32 ``(P_pad,)`` arrays per moment
+        name plus an int ``count``) reloads them, re-sharding along P
+        exactly like the master slab."""
+        if state is None:
+            self._init_opt_state()
+            return
+        missing = [n for n in self.opt.moment_names if n not in state]
+        if missing:
+            raise ValueError(
+                f"optimizer state is missing moment slab(s) {missing} "
+                f"for {self.opt.name!r} — the checkpoint was written by "
+                "a run with a different optimizer")
+        self._count = jnp.asarray(int(state["count"]), jnp.int32)
+        self._moments = {}
+        for name in self.opt.moment_names:
+            full = jnp.asarray(np.asarray(state[name], np.float32))
+            assert full.shape == (self.codec.padded_size,), \
+                (name, full.shape, self.codec.padded_size)
+            self._moments[name] = full if self.shards == 1 \
+                else self._shard(full)
+
+    def opt_state_host(self) -> Optional[Dict[str, Any]]:
+        """Host copies of the moment slabs + the int update count (the
+        checkpoint form), or ``None`` for plain SGD.  Per the donation
+        rules this must run under the owner's lock: the moments are
+        donated buffers, and a concurrent flush would invalidate them
+        mid-copy."""
+        if self.opt.name == "sgd":
+            return None
+        out: Dict[str, Any] = {}
+        for name in self.opt.moment_names:
+            m = self._moments[name]
+            slab = m if self.shards == 1 else self._assemble(m)
+            out[name] = np.asarray(jax.device_get(slab), np.float32)
+        out["count"] = int(jax.device_get(self._count))
+        return out
+
     def wipe_staging(self) -> None:
         """Zero every staging row.  Needed when staged gradients are
         *discarded* rather than consumed by a flush: zero-weight masking
@@ -431,6 +621,11 @@ class SlabAggregator:
         bitwise unchanged."""
         self.stage(self._zero_row, 0)
         self.flush_apply(np.ones((1,), np.float32), 0.0)
+        # a zero-gradient scale-0 flush leaves params AND moments
+        # bitwise unchanged, but it does tick the update count — rewind
+        # it so training starts at step 0 with warm executables
+        if self.opt.name != "sgd":
+            self._count = jnp.zeros((), jnp.int32)
 
     def grow(self, k_max: int) -> None:
         """Resize the staging buffer to ``k_max`` rows (elastic fleet
@@ -466,8 +661,11 @@ class SlabAggregator:
         be exactly 1 in tests for the unsharded default, regardless of
         fleet size / K — growth via :meth:`grow` adds one entry per
         resize, and sharded staging holds one entry per distinct chunk
-        shape)."""
-        return int(self._flush._cache_size())
+        shape).  With a moment-carrying optimizer the probe covers the
+        fused flush+optimizer executable instead — still exactly one
+        per buffer shape."""
+        fn = self._flush if self.opt.name == "sgd" else self._flush_opt
+        return int(fn._cache_size())
 
 
 class SlabBuffer:

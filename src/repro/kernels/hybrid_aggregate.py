@@ -107,3 +107,67 @@ def flush_momentum_pallas(grads: jax.Array, weights: jax.Array,
         ],
         interpret=interpret,
     )(w2, beta_arr, grads, momentum)
+
+
+def _flush_adamw_kernel(w_ref, h_ref, g_ref, p_ref, m_ref, v_ref,
+                        new_p_ref, new_m_ref, new_v_ref, *,
+                        b1, b2, eps, weight_decay):
+    """Fused flush + AdamW step, one HBM pass per tile.
+
+    ``w`` is pre-normalized (the reduction yields the *mean* gradient);
+    ``h = (bc1, bc2, scale)`` carries the traced scalars — the bias
+    corrections ``1 - b^count`` (count-dependent, so they can't be
+    baked static) and the learning-rate scale."""
+    g = g_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    bc1, bc2, scale = h_ref[0], h_ref[1], h_ref[2]
+    mean_g = jnp.sum(g * w, axis=0)
+    m_new = b1 * m_ref[...].astype(jnp.float32) + (1 - b1) * mean_g
+    v_new = b2 * v_ref[...].astype(jnp.float32) \
+        + (1 - b2) * mean_g * mean_g
+    p = p_ref[...].astype(jnp.float32)
+    upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) \
+        + weight_decay * p
+    new_p_ref[...] = (p - scale * upd).astype(new_p_ref.dtype)
+    new_m_ref[...] = m_new.astype(new_m_ref.dtype)
+    new_v_ref[...] = v_new.astype(new_v_ref.dtype)
+
+
+def flush_adamw_pallas(grads: jax.Array, weights: jax.Array,
+                       params: jax.Array, mu: jax.Array, nu: jax.Array,
+                       bc1, bc2, scale, *, b1: float, b2: float,
+                       eps: float, weight_decay: float,
+                       tile_p: int = TILE_P, interpret: bool = False):
+    """Fused flush+AdamW.  Returns (new_params, new_mu, new_nu) — the
+    moments stay in ``mu``/``nu``'s dtype (f32 on the slab path)."""
+    K, P = grads.shape
+    assert P % tile_p == 0
+    w2 = weights.reshape(K, 1).astype(jnp.float32)
+    h = jnp.stack([jnp.asarray(bc1, jnp.float32),
+                   jnp.asarray(bc2, jnp.float32),
+                   jnp.asarray(scale, jnp.float32)])
+    kern = functools.partial(_flush_adamw_kernel, b1=b1, b2=b2, eps=eps,
+                             weight_decay=weight_decay)
+    return pl.pallas_call(
+        kern,
+        grid=(P // tile_p,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((K, tile_p), lambda i: (0, i)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P,), params.dtype),
+            jax.ShapeDtypeStruct((P,), mu.dtype),
+            jax.ShapeDtypeStruct((P,), nu.dtype),
+        ],
+        interpret=interpret,
+    )(w2, h, grads, params, mu, nu)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.hybrid_aggregate import (flush_momentum_pallas,
+from repro.kernels.hybrid_aggregate import (flush_adamw_pallas,
+                                            flush_momentum_pallas,
                                             flush_pallas,
                                             flush_pallas_sharded, TILE_P)
 from repro.kernels.rmsnorm import rmsnorm_pallas
@@ -86,6 +87,26 @@ def hybrid_flush_momentum(grads, weights, momentum, beta: float, *,
         return ref.flush_momentum_ref(grads, weights, momentum, beta)
     return flush_momentum_pallas(grads, weights, momentum, beta,
                                  interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b1", "b2", "eps", "weight_decay",
+                                    "use_pallas", "interpret"))
+def hybrid_flush_adamw(grads, weights, params, mu, nu, bc1, bc2, scale,
+                       *, b1: float, b2: float, eps: float,
+                       weight_decay: float, use_pallas: bool = True,
+                       interpret: Optional[bool] = None):
+    """Fused aggregate + AdamW step: (K,P) staging rows + pre-normalized
+    weights + f32 param/moment slabs -> (new_params, new_mu, new_nu).
+    ``bc1``/``bc2`` are traced bias corrections (``1 - b^count``)."""
+    if not use_pallas:
+        return ref.flush_adamw_ref(grads, weights, params, mu, nu,
+                                   bc1, bc2, scale, b1=b1, b2=b2,
+                                   eps=eps, weight_decay=weight_decay)
+    return flush_adamw_pallas(grads, weights, params, mu, nu, bc1, bc2,
+                              scale, b1=b1, b2=b2, eps=eps,
+                              weight_decay=weight_decay,
+                              interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit,

@@ -21,6 +21,21 @@ def flush_momentum_ref(grads, weights, momentum, beta: float):
     return m_new.astype(grads.dtype), m_new.astype(momentum.dtype)
 
 
+def flush_adamw_ref(grads, weights, params, mu, nu, bc1, bc2, scale, *,
+                    b1: float, b2: float, eps: float, weight_decay: float):
+    """Fused flush + AdamW oracle.  ``weights`` are pre-normalized (the
+    weighted sum IS the mean gradient); ``bc1``/``bc2`` are the bias
+    corrections ``1 - b^count`` computed by the caller from the int32
+    update count.  Returns ``(new_params, new_mu, new_nu)`` — all f32."""
+    g = jnp.einsum("kp,k->p", grads.astype(jnp.float32),
+                   weights.astype(jnp.float32))
+    m_new = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+    v_new = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+    p = params.astype(jnp.float32)
+    upd = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps) + weight_decay * p
+    return p - scale * upd, m_new, v_new
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-5):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)

@@ -46,7 +46,7 @@ from repro.core.spmd_hybrid import (build_phases, make_replica_step,
 from repro.data.synthetic import token_stream
 from repro.launch.steps import make_train_step
 from repro.models import model as M
-from repro.optim import adamw
+from repro.optim import adamw, momentum, sgd
 from repro.parallel.partition import param_shardings
 from repro.parallel.sharding import axis_rules
 
@@ -92,7 +92,18 @@ def run_training(spec, ckpt_dir: Optional[str] = None,
         raise ValueError(f"mesh_model={spec.mesh_model} must divide the "
                          f"device count ({n_dev})")
     data_axis = n_dev // spec.mesh_model
-    opt = adamw(spec.lr)
+    # the per-replica optimizer comes from the spec — the same
+    # optimizer/beta1/beta2/weight_decay fields the server-side slab
+    # optimizer reads, so one spec names the update rule on every
+    # backend.  (Historically this driver hard-coded AdamW; pass
+    # optimizer="adamw" for that behavior.)
+    if spec.optimizer == "adamw":
+        opt = adamw(spec.lr, b1=spec.beta1, b2=spec.beta2,
+                    weight_decay=spec.weight_decay)
+    elif spec.optimizer == "momentum":
+        opt = momentum(spec.lr, beta=spec.beta1)
+    else:
+        opt = sgd(spec.lr)
     stream = token_stream(spec.seed, cfg.vocab_size, spec.batch, spec.seq)
 
     # --- schedule -> group-size phases

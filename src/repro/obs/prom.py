@@ -50,6 +50,8 @@ _PAYLOAD_METRICS = [
      "Gradients of the current unfinished sync round"),
     ("updates", "repro_updates_total",
      "counter", "Optimizer updates (flushes) performed"),
+    ("optimizer_steps", "repro_optimizer_steps_total", "counter",
+     "Fused flush+optimizer steps applied on the params slab"),
     ("queue_depth", "repro_queue_depth", "gauge",
      "Gradients waiting in the transport channel"),
     ("live_workers", "repro_live_workers", "gauge",
@@ -77,10 +79,12 @@ def render_prometheus(doc: Optional[Dict[str, Any]],
     Prometheus text exposition format."""
     lines = []
     doc = doc or {}
+    emitted = set()
     for key, metric, mtype, hlp in _PAYLOAD_METRICS:
         v = doc.get(key)
         if not isinstance(v, (int, float)) or isinstance(v, bool):
             continue
+        emitted.add(metric)
         lines.append(f"# HELP {metric} {hlp}")
         lines.append(f"# TYPE {metric} {mtype}")
         lines.append(f"{metric} {v}")
@@ -97,14 +101,22 @@ def render_prometheus(doc: Optional[Dict[str, Any]],
                 lines.append('repro_staleness_versions{quantile="'
                              f'{q}"}} {v}')
     if isinstance(doc.get("mode"), str):
-        lines.append("# HELP repro_run_info Run mode as a label")
+        labels = [f'mode="{doc["mode"]}"']
+        if isinstance(doc.get("optimizer"), str):
+            labels.append(f'optimizer="{doc["optimizer"]}"')
+        lines.append("# HELP repro_run_info Run mode/optimizer as labels")
         lines.append("# TYPE repro_run_info gauge")
-        lines.append(f'repro_run_info{{mode="{doc["mode"]}"}} 1')
+        lines.append(f'repro_run_info{{{",".join(labels)}}} 1')
     for name in sorted(counters or {}):
         v = counters[name]
         if not isinstance(v, (int, float)) or isinstance(v, bool):
             continue
         metric = f"repro_{_sanitize(name)}_total"
+        if metric in emitted:
+            # already rendered from the STATS payload (e.g.
+            # optimizer_steps): a second series with the same name
+            # would be an invalid exposition
+            continue
         lines.append(f"# HELP {metric} Telemetry counter {name}")
         lines.append(f"# TYPE {metric} counter")
         lines.append(f"{metric} {v}")

@@ -176,6 +176,8 @@ def _fmt_line(doc: Dict[str, Any], rate: Optional[float]) -> str:
             f"workers {doc.get('live_workers', 0)}/"
             f"{doc.get('fleet_size', doc.get('num_workers', 0))} "
             f"serve {doc.get('serve_clients', 0)} "
+            f"opt {doc.get('optimizer', 'sgd')}:"
+            f"{doc.get('optimizer_steps', 0)} "
             f"[{doc.get('mode', '?')}]")
 
 

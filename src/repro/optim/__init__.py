@@ -1,2 +1,4 @@
-from repro.optim.optimizers import (adamw, momentum, sgd,  # noqa: F401
-                                    Optimizer)
+from repro.optim.optimizers import (adamw, bias_correction,  # noqa: F401
+                                    momentum, sgd, Optimizer)
+from repro.optim.slab_form import (OPTIMIZER_NAMES,  # noqa: F401
+                                   SlabOptimizer)

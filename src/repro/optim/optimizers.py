@@ -22,6 +22,19 @@ def _cast_like(src, ref):
     return jax.tree.map(lambda s, r: s.astype(r.dtype), src, ref)
 
 
+def bias_correction(count, b1: float, b2: float):
+    """Adam bias corrections ``(1 - b1^count, 1 - b2^count)`` from the
+    **int32 update count carried in optimizer state** — the one
+    step-count convention shared by the pytree-form :func:`adamw` and
+    the slab-form server optimizer
+    (:class:`repro.core.slab.SlabAggregator`), so a checkpointed count
+    round-trips between the two without re-deriving the step from any
+    other clock.  ``count`` is the count *after* this step's increment
+    (first step -> 1)."""
+    cf = jnp.asarray(count, jnp.int32).astype(jnp.float32)
+    return 1 - b1 ** cf, 1 - b2 ** cf
+
+
 def sgd(lr: float) -> Optimizer:
     def init(params):
         return {"count": jnp.zeros((), jnp.int32)}
@@ -72,9 +85,7 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
                           * jnp.square(g.astype(jnp.float32)),
                           state["nu"], grads)
-        cf = c.astype(jnp.float32)
-        bc1 = 1 - b1 ** cf
-        bc2 = 1 - b2 ** cf
+        bc1, bc2 = bias_correction(c, b1, b2)
 
         def u(m, v, p):
             upd = -step_lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)

@@ -1,0 +1,75 @@
+"""Slab-form optimizer definitions — the server-side optimizer config.
+
+The cluster server, the simulator's ``PSTrainer``, and the SPMD driver
+all apply gradient flushes through ``repro.core.slab.SlabAggregator``;
+with a :class:`SlabOptimizer` attached, the aggregator owns the
+optimizer state as additional **f32 slab-shaped buffers** (sharded along
+P exactly like staging, donated into the fused flush+update executable).
+
+The math is not re-derived here: :meth:`SlabOptimizer.pair` returns the
+existing pytree-form ``(init, update)`` pair from
+:mod:`repro.optim.optimizers` bound at **unit learning rate** — a slab
+is a valid single-leaf pytree, so the fused executable's jnp path calls
+the exact same ``update`` on the f32 slabs and applies
+``params + scale * updates`` (``scale`` carries the learning rate, the
+way the historical SGD flush already threads it).  The int32 step count
+lives in the same state dict, per the shared convention of
+:func:`repro.optim.optimizers.bias_correction`.
+
+Moment-buffer names follow the pytree state keys: momentum carries
+``mu``; AdamW carries ``mu``/``nu`` (its first/second moments m and v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.optim.optimizers import adamw, momentum, sgd, Optimizer
+
+# spec/CLI names of the server-side (slab-resident) optimizers
+OPTIMIZER_NAMES: Tuple[str, ...] = ("sgd", "momentum", "adamw")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabOptimizer:
+    """Server-side optimizer choice + hyperparameters.
+
+    ``beta1`` doubles as momentum's decay and AdamW's b1; ``beta2``,
+    ``eps`` and ``weight_decay`` are AdamW-only.  ``sgd`` carries no
+    moment buffers and is the bit-for-bit historical flush.
+    """
+
+    name: str = "sgd"
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def __post_init__(self):
+        if self.name not in OPTIMIZER_NAMES:
+            raise ValueError(f"optimizer must be one of "
+                             f"{OPTIMIZER_NAMES}, got {self.name!r}")
+        if not (0.0 <= self.beta1 < 1.0 and 0.0 <= self.beta2 < 1.0):
+            raise ValueError(f"betas must be in [0, 1): "
+                             f"beta1={self.beta1}, beta2={self.beta2}")
+
+    @property
+    def moment_names(self) -> Tuple[str, ...]:
+        """Names of the f32 slab-shaped moment buffers this optimizer
+        carries (matching the pytree state dict keys)."""
+        if self.name == "momentum":
+            return ("mu",)
+        if self.name == "adamw":
+            return ("mu", "nu")
+        return ()
+
+    def pair(self) -> Optimizer:
+        """The pytree-form ``(init, update)`` pair at unit learning
+        rate — the slab executable applies ``params + scale * updates``
+        with ``scale`` carrying the lr."""
+        if self.name == "momentum":
+            return momentum(1.0, beta=self.beta1)
+        if self.name == "adamw":
+            return adamw(1.0, b1=self.beta1, b2=self.beta2, eps=self.eps,
+                         weight_decay=self.weight_decay)
+        return sgd(1.0)

@@ -47,6 +47,31 @@ def test_flush_momentum(beta):
                                atol=1e-5)
 
 
+@pytest.mark.parametrize("wd", [0.0, 0.01])
+@pytest.mark.parametrize("count", [1, 10])
+def test_flush_adamw(wd, count):
+    """Fused aggregate+AdamW kernel vs the pure-jnp oracle: params and
+    both moment slabs, including bias correction and decoupled weight
+    decay."""
+    from repro.optim import bias_correction
+    K, P = 4, TILE_P
+    b1, b2, eps, scale = 0.9, 0.95, 1e-8, 0.01
+    g = jax.random.normal(jax.random.PRNGKey(0), (K, P))
+    w = jnp.full((K,), 1.0 / K)
+    p = jax.random.normal(jax.random.PRNGKey(1), (P,))
+    m = 0.1 * jax.random.normal(jax.random.PRNGKey(2), (P,))
+    v = 0.01 * jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (P,)))
+    bc1, bc2 = bias_correction(count, b1, b2)
+    got = ops.hybrid_flush_adamw(g, w, p, m, v, bc1, bc2, scale,
+                                 b1=b1, b2=b2, eps=eps, weight_decay=wd,
+                                 **I)
+    want = ref.flush_adamw_ref(g, w, p, m, v, bc1, bc2, scale,
+                               b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    for got_a, want_a, name in zip(got, want, ("params", "mu", "nu")):
+        np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
 @settings(max_examples=20, deadline=None)
 @given(K=st.integers(1, 8), seed=st.integers(0, 2 ** 16),
        uniform=st.booleans())

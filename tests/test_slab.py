@@ -426,3 +426,193 @@ def test_exactly_one_flush_executable_any_fleet(num_workers):
     assert seen_k == set(range(1, num_workers + 1))  # every K exercised
     assert server.agg.flush_cache_size() == 1
     assert server.applied == 4 * num_workers
+
+
+# ------------------------------------------- slab-resident optimizers
+
+from repro.core.slab import slab_codec as _slab_codec  # noqa: E402
+from repro.optim import SlabOptimizer  # noqa: E402
+
+OPTS = [SlabOptimizer("sgd"),
+        SlabOptimizer("momentum", beta1=0.9),
+        SlabOptimizer("adamw", beta1=0.9, beta2=0.95, weight_decay=0.01)]
+
+
+def test_sgd_optimizer_flush_bitwise_identical_to_legacy():
+    """The hard invariant: optimizer="sgd" IS the historical flush, bit
+    for bit — an explicitly-passed sgd SlabOptimizer changes nothing
+    against the pre-refactor fused aggregate+apply."""
+    num_workers = 3
+    params, server = _server(mode="sync", num_workers=num_workers,
+                             optimizer=SlabOptimizer("sgd"))
+    for w in range(num_workers):
+        server.register(w)
+    codec = server.codec
+    p = params
+    for r in range(4):
+        grads = [_tree(10 * r + w, 0.01) for w in range(num_workers)]
+        for w in range(num_workers):
+            server.ingest(GradientMsg(w, codec.encode(grads[w]),
+                                      server.version, r))
+        p = legacy_agg_apply(p, tuple(grads), np.ones(num_workers),
+                             server.lr)
+    _, got, _ = server.snapshot()
+    for name in params:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(p[name]), err_msg=name)
+    assert server.agg.opt_state_host() is None     # sgd carries no state
+
+
+@pytest.mark.parametrize("opt", OPTS, ids=lambda o: o.name)
+def test_sim_and_cluster_sync_flush_bitwise_identical(opt):
+    """The simulator and the cluster server run the SAME fused
+    flush+optimizer executable: staging the same sync rounds through a
+    simulator-style aggregator (PSTrainer's construction, no server
+    warmup) and through a live ParameterServer yields bitwise-identical
+    params AND moments, per optimizer."""
+    num_workers = 3
+    params, server = _server(mode="sync", num_workers=num_workers,
+                             optimizer=opt)
+    for w in range(num_workers):
+        server.register(w)
+    # the simulator path: PSTrainer builds its aggregator exactly so
+    # (and never warmups — the server's warmup must be a bitwise no-op)
+    sim_agg = SlabAggregator(_slab_codec(params), params, num_workers,
+                             optimizer=opt)
+    for r in range(5):
+        grads = [_tree(10 * r + w, 0.01) for w in range(num_workers)]
+        for w in range(num_workers):
+            server.ingest(GradientMsg(w, server.codec.encode(grads[w]),
+                                      server.version, r))
+            sim_agg.stage(sim_agg.codec.encode(grads[w]), w)
+        sim_agg.flush_apply(np.ones(num_workers), server.lr)
+    _, got, _ = server.snapshot()
+    want = sim_agg.params_tree()
+    for name in params:
+        np.testing.assert_array_equal(np.asarray(got[name]),
+                                      np.asarray(want[name]),
+                                      err_msg=f"{opt.name}:{name}")
+    st_server = server.agg.opt_state_host()
+    st_sim = sim_agg.opt_state_host()
+    if opt.name == "sgd":
+        assert st_server is None and st_sim is None
+    else:
+        assert st_server["count"] == st_sim["count"] == 5
+        for mname in opt.moment_names:
+            np.testing.assert_array_equal(st_server[mname],
+                                          st_sim[mname],
+                                          err_msg=f"{opt.name}:{mname}")
+
+
+@pytest.mark.parametrize("opt", OPTS[1:], ids=lambda o: o.name)
+def test_momentum_adamw_exactly_one_fused_executable(opt):
+    """The one-executable contract extends to the optimizer flushes:
+    after serving every buffer size K in 1..fleet, momentum/adamw hold
+    exactly ONE compiled fused flush+update executable."""
+    num_workers = 4
+    schedule = step_schedule(num_workers, 1)       # K grows every update
+    params, server = _server(mode="hybrid", num_workers=num_workers,
+                             schedule=schedule, optimizer=opt)
+    codec = server.codec
+    seen_k = set()
+    for i in range(4 * num_workers):
+        seen_k.add(schedule(server.version))
+        server.ingest(GradientMsg(i % num_workers,
+                                  codec.encode(_tree(i, 0.01)),
+                                  server.version, i))
+    assert seen_k == set(range(1, num_workers + 1))
+    assert server.agg.flush_cache_size() == 1
+    # conservation: every ingested gradient is applied or still staged
+    assert server.applied + len(server.buffer) == 4 * num_workers
+
+
+def test_moments_stay_f32_under_bf16_slab():
+    """The mixed-precision rule: slab_dtype="bf16" halves the staging/
+    wire bytes, but the optimizer moments (like the master params) stay
+    f32 — second moments in bf16 would collapse small squared
+    gradients to zero."""
+    opt = SlabOptimizer("adamw", beta1=0.9, beta2=0.95)
+    params, server = _server(mode="async", num_workers=2,
+                             slab_dtype="bf16", optimizer=opt)
+    codec = server.codec
+    assert jnp.asarray(server.agg.params_slab).dtype == jnp.bfloat16
+    for i in range(4):
+        server.ingest(GradientMsg(i % 2, codec.encode(_tree(i, 0.01)),
+                                  server.version, i))
+    moments = server.agg._moments
+    chunks = []
+    for name in opt.moment_names:
+        m = moments[name]
+        chunks += list(m) if isinstance(m, list) else [m]
+    assert chunks and all(c.dtype == jnp.float32 for c in chunks)
+    st = server.agg.opt_state_host()
+    for name in opt.moment_names:
+        assert st[name].dtype == np.float32
+        assert np.isfinite(st[name]).all()
+    assert st["count"] == 4
+
+
+def test_opt_state_checkpoint_round_trip_resumes_bitwise(tmp_path):
+    """Checkpoint mid-run with adamw, restore into a fresh server, and
+    continue: the resumed trajectory is bitwise identical to the
+    uninterrupted one — moments AND the bias-correction count travel
+    with the params."""
+    from repro.checkpoint import (load_opt_state, restore_checkpoint,
+                                  save_checkpoint)
+    opt = SlabOptimizer("adamw", beta1=0.9, beta2=0.95,
+                        weight_decay=0.01)
+    params, server_a = _server(mode="async", num_workers=2,
+                               optimizer=opt)
+    codec = server_a.codec
+    grads = [codec.encode(_tree(50 + i, 0.01)) for i in range(6)]
+    for i in range(3):
+        server_a.ingest(GradientMsg(i % 2, grads[i],
+                                    server_a.version, i))
+    version, snap, _, opt_state = server_a.snapshot_for_checkpoint()
+    assert opt_state["count"] == 3
+    path = str(tmp_path / f"step_{version}")
+    save_checkpoint(path, snap, version, opt_state=opt_state)
+
+    # a fresh server restores params + moments + count from disk
+    _, server_b = _server(mode="async", num_workers=2, optimizer=opt)
+    r_params, r_step = restore_checkpoint(path, like=params)
+    r_opt = load_opt_state(path)
+    assert r_opt is not None and r_opt["count"] == 3
+    server_b.restore(r_params, r_step, opt_state=r_opt)
+
+    for i in range(3, 6):
+        for s in (server_a, server_b):
+            s.ingest(GradientMsg(i % 2, grads[i], s.version, i))
+    _, got_a, _ = server_a.snapshot()
+    _, got_b, _ = server_b.snapshot()
+    for name in params:
+        np.testing.assert_array_equal(np.asarray(got_a[name]),
+                                      np.asarray(got_b[name]),
+                                      err_msg=name)
+    st_a = server_a.agg.opt_state_host()
+    st_b = server_b.agg.opt_state_host()
+    assert st_a["count"] == st_b["count"] == 6
+    for mname in opt.moment_names:
+        np.testing.assert_array_equal(st_a[mname], st_b[mname],
+                                      err_msg=mname)
+
+
+def test_old_checkpoint_without_opt_state_restores_zero_moments(
+        tmp_path):
+    """Back-compat: a checkpoint written without optimizer state (the
+    pre-refactor format, or an sgd run) restores cleanly — moments
+    restart from zero, count from 0."""
+    from repro.checkpoint import load_opt_state, save_checkpoint
+    opt = SlabOptimizer("momentum", beta1=0.9)
+    params, server = _server(mode="async", num_workers=2, optimizer=opt)
+    codec = server.codec
+    for i in range(3):
+        server.ingest(GradientMsg(i % 2, codec.encode(_tree(i, 0.01)),
+                                  server.version, i))
+    path = str(tmp_path / "step_0")
+    save_checkpoint(path, params, 0)           # no opt_state (old form)
+    assert load_opt_state(path) is None
+    server.restore(params, 0, opt_state=load_opt_state(path))
+    st = server.agg.opt_state_host()
+    assert st["count"] == 0
+    assert not np.any(st["mu"])                # zeroed, not stale
